@@ -1,0 +1,50 @@
+"""Kernel-level benchmarks: correctness deltas vs oracles + the reuse-factor
+VMEM/latency Pareto (the paper's resource/latency tradeoff on TPU terms).
+
+No wall-clock kernel numbers: this container executes Pallas in interpret
+mode (Python), so timing is structural — VMEM bytes and sequential grid
+length are the roofline-relevant quantities."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import FixedPointConfig
+from repro.kernels import ops, ref
+from repro.kernels.reuse_matmul import vmem_bytes
+
+
+def run(full: bool = False):
+    rng = np.random.RandomState(0)
+
+    # correctness deltas (paper benchmark shapes)
+    for name, B, T, F, H in (("top", 8, 20, 6, 20),
+                             ("flavor", 8, 15, 6, 120),
+                             ("quickdraw", 4, 100, 3, 128)):
+        xs = jnp.asarray(rng.randn(B, T, F).astype(np.float32))
+        W = jnp.asarray(rng.randn(F, 4 * H).astype(np.float32) * .3)
+        U = jnp.asarray(rng.randn(H, 4 * H).astype(np.float32) * .3)
+        b = jnp.asarray(rng.randn(4 * H).astype(np.float32) * .1)
+        err = float(jnp.abs(ops.lstm_scan(xs, W, U, b)
+                            - ref.lstm_scan_ref(xs, W, U, b)).max())
+        emit(f"kernels/lstm_scan/{name}", 0.0, f"max_err={err:.2e}")
+
+    # reuse-factor Pareto: VMEM working set vs sequential passes
+    M, K, N = 128, 512, 256
+    for R in (1, 2, 4, 8, 16):
+        vb = vmem_bytes(M, K, N, R)
+        emit(f"kernels/reuse_matmul/R{R}", float(R),
+             f"vmem_bytes={vb}|grid_len={R}"
+             f"|analogy=DSPs~1/R, latency~R (paper Tables 2-4)")
+
+    fp = FixedPointConfig(16, 6)
+    x = jnp.asarray(rng.randn(64, 128).astype(np.float32) * 4)
+    err = float(jnp.abs(ops.fixed_point(x, fp)
+                        - ref.fixed_point_ref(x, fp)).max())
+    emit("kernels/fixed_point", 0.0, f"max_err={err:.2e}")
+
+
+if __name__ == "__main__":
+    run()

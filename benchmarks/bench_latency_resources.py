@@ -1,0 +1,69 @@
+"""Paper Tables 2-4 (latency vs reuse) + Figs 3-5 (DSP/FF/LUT vs width):
+the analytical HLS model vs every number printed in the paper."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.config import FixedPointConfig
+from repro.core.hls import RNNDesignPoint, estimate_design
+from repro.registry import get_config
+
+PAPER = {
+    "top-tagging": {
+        "fp": (16, 6), "part": "xcku115",
+        "gru": {(6, 5): (2.4, 6.5), (12, 10): (3.2, 7.3),
+                (30, 20): (5.0, 9.1), (60, 60): (8.0, 12.1)},
+        "lstm": {(6, 5): (2.7, 6.8), (12, 10): (3.5, 7.6),
+                 (30, 20): (5.3, 9.4), (60, 40): (8.3, 12.4)},
+    },
+    "flavor-tagging": {
+        "fp": (16, 6), "part": "xcku115",
+        "gru": {(48, 40): (6.7, 24.8), (90, 60): (9.8, 27.9),
+                (120, 120): (11.5, 29.6), (240, 240): (20.5, 38.6)},
+        "lstm": {(48, 40): (6.9, 25.0), (90, 60): (10.1, 28.2),
+                 (120, 120): (11.7, 29.8), (240, 240): (20.7, 38.8)},
+    },
+    "quickdraw": {
+        "fp": (26, 10), "part": "u250",
+        "gru": {(48, 32): (35.4, 164.0), (96, 64): (59.4, 188.0),
+                (192, 128): (107.0, 235.0), (384, 384): (203.0, 331.0)},
+        "lstm": {(48, 32): (35.9, 164.0), (96, 64): (59.9, 188.0),
+                 (192, 128): (107.0, 236.0), (384, 384): (203.0, 332.0)},
+    },
+}
+
+
+def run(full: bool = False):
+    max_err = 0.0
+    for bench, spec in PAPER.items():
+        W, I = spec["fp"]
+        for cell in ("gru", "lstm"):
+            cfg = get_config(f"{bench}-{cell}")
+            for (rk, rr), (lo, hi) in spec[cell].items():
+                d = estimate_design(RNNDesignPoint(
+                    cfg, FixedPointConfig(W, I), rk, rr, part=spec["part"]))
+                e_lo = abs(d.latency_min_us - lo) / lo
+                e_hi = abs(d.latency_max_us - hi) / hi
+                max_err = max(max_err, e_lo, e_hi)
+                emit(f"table_latency/{bench}-{cell}/R{rk}_{rr}",
+                     d.latency_min_us,
+                     f"model={d.latency_min_us:.1f}-{d.latency_max_us:.1f}us"
+                     f"|paper={lo}-{hi}us|err={100*max(e_lo,e_hi):.1f}%")
+    emit("table_latency/max_relative_error", 0.0, f"{100*max_err:.1f}%")
+
+    # Figs 3-5: resource curves vs total width (model values; paper figures
+    # are plots — we assert the scaling behaviours, tested in test_hls_model)
+    for bench, spec in PAPER.items():
+        cfg = get_config(f"{bench}-gru")
+        r = sorted(spec["gru"])[0]
+        for W in (8, 12, 16, 20, 24):
+            d = estimate_design(RNNDesignPoint(
+                cfg, FixedPointConfig(W, spec["fp"][1]), r[0], r[1],
+                part=spec["part"]))
+            emit(f"fig3-5/{bench}/W{W}", 0.0,
+                 f"dsp={d.dsp}|ff={d.ff}|lut={d.lut}|bram={d.bram_18k}"
+                 f"|fits={d.fits}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Paper Fig. 2: AUC(quantized)/AUC(float) vs fractional bits at fixed
+integer bits {6, 8, 10, 12}, post-training quantization."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import dataset_for, emit, time_fn, train_tagger
+from repro.core.quant.ptq import auc_scan
+from repro.models import rnn_tagger
+
+
+def run(full: bool = False):
+    archs = ["top-tagging-gru", "top-tagging-lstm", "flavor-tagging-gru"]
+    if full:
+        archs += ["flavor-tagging-lstm", "quickdraw-gru", "quickdraw-lstm"]
+    frac_bits = tuple(range(0, 15, 2)) if full else (0, 2, 4, 6, 8, 10, 14)
+    int_bits = (6, 8, 10, 12)
+
+    for arch in archs:
+        cfg, m, params = train_tagger(
+            arch, steps=120 if "quickdraw" in arch else 150,
+            n=1200 if "quickdraw" in arch else 1500)
+        x, y = dataset_for(arch)(1000, seed=99)
+        scan = auc_scan(cfg, rnn_tagger.forward, params, x, y,
+                        integer_bits=int_bits, fractional_bits=frac_bits)
+        for ib, curve in scan.items():
+            ratios = {fb: r for fb, r in curve}
+            # paper claim: >=10 fractional bits recovers ~float AUC
+            hi = ratios.get(10, ratios[max(ratios)])
+            hi = max(ratios[fb] for fb in ratios if fb >= 10) \
+                if any(fb >= 10 for fb in ratios) else hi
+            derived = ";".join(f"f{fb}:{r:.4f}" for fb, r in curve)
+            emit(f"fig2/{arch}/int{ib}", 0.0,
+                 f"auc_ratio_at_hi_frac={hi:.4f}|{derived}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Roofline report from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+One row per (arch x shape) cell on the single-pod production mesh."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+from repro.launch.roofline import analyze_record
+
+CANDIDATES = ("results/dryrun_v3.json", "results/dryrun_v2.json",
+              "results/dryrun_baseline.json")
+
+
+def run(full: bool = False):
+    path = next((p for p in CANDIDATES if os.path.exists(p)), None)
+    if path is None:
+        emit("roofline/missing", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun --all "
+             "--mesh single_pod --out results/dryrun_v2.json")
+        return
+    recs = json.load(open(path))
+    for rec in recs:
+        name = f"roofline/{rec.get('arch')}/{rec.get('shape')}"
+        if "skipped" in rec:
+            emit(name, 0.0, f"skipped({rec['skipped'][:50]})")
+            continue
+        if "error" in rec:
+            emit(name, 0.0, f"ERROR({rec['error'][:60]})")
+            continue
+        r = analyze_record(rec)
+        step_us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        emit(name, step_us,
+             f"dominant={r['dominant']}|compute={r['compute_s']:.3g}s"
+             f"|memory={r['memory_s']:.3g}s"
+             f"|collective={r['collective_s']:.3g}s"
+             f"|model_hlo_ratio={r['useful_ratio']:.2f}"
+             f"|roofline_frac={r['roofline_fraction']:.3f}"
+             f"|peak={r['peak_gib']:.1f}GiB|fits={r['fits_hbm']}")
+
+
+if __name__ == "__main__":
+    run()

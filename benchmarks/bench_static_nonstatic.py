@@ -1,0 +1,56 @@
+"""Paper Table 5 + Fig. 6: static vs non-static — II, latency, resources
+(analytical), plus measured XLA wall-clock for both execution modes."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.config import FixedPointConfig
+from repro.core.hls import RNNDesignPoint, estimate_design
+from repro.models import build_model
+from repro.registry import get_config
+from repro.serving import RNNServingEngine
+
+PAPER_T5 = {"static": {"ii": 315, "lat": (1.7, 1.7)},
+            "nonstatic": {"ii": 1, "lat": (1.6, 1.6)}}
+
+
+def run(full: bool = False):
+    cfg = get_config("top-tagging-gru")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+
+    for mode in ("static", "nonstatic"):
+        d = estimate_design(RNNDesignPoint(
+            cfg, FixedPointConfig(10, 6), strategy="latency", mode=mode))
+        p = PAPER_T5[mode]
+        emit(f"table5/{mode}", d.latency_min_us,
+             f"ii={d.ii_cycles}|paper_ii={p['ii']}"
+             f"|latency={d.latency_min_us:.2f}us|paper={p['lat'][0]}us"
+             f"|tput={d.throughput_eps:.0f}eps|dsp={d.dsp}|fits={d.fits}")
+
+        # measured wall clock (XLA CPU; structural comparison of modes)
+        eng = RNNServingEngine(cfg, params, mode=mode)
+        eng.warmup()
+        b = eng.benchmark(batch=1, iters=20)
+        emit(f"table5/{mode}/measured_batch1", b["latency_s"] * 1e6,
+             f"throughput={b['throughput_eps']:.0f}eps")
+
+    # Fig 6: resource blowup of nonstatic vs static across widths
+    for W in (10, 14, 18):
+        ds = estimate_design(RNNDesignPoint(
+            cfg, FixedPointConfig(W, 6), strategy="latency", mode="static"))
+        dn = estimate_design(RNNDesignPoint(
+            cfg, FixedPointConfig(W, 6), strategy="latency",
+            mode="nonstatic"))
+        emit(f"fig6/W{W}", 0.0,
+             f"static_dsp={ds.dsp}|nonstatic_dsp={dn.dsp}"
+             f"|static_lut={ds.lut}|nonstatic_lut={dn.lut}"
+             f"|static_fits={ds.fits}|nonstatic_fits={dn.fits}"
+             f"|resource_ratio={dn.lut/max(ds.lut,1):.1f}x")
+
+
+if __name__ == "__main__":
+    run()

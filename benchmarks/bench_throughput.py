@@ -1,0 +1,42 @@
+"""Paper Sec. 5.2: QuickDraw throughput — FPGA design points vs GPU batching.
+
+Reproduces the paper's comparison table: FPGA II-derived throughput
+(4300-9700 ev/s, batch-1) vs Nvidia V100 at batch {1, 10, 100}
+(660 / 7700 / 30000 ev/s), plus THIS machine's measured JAX throughput at
+the same batch sizes (CPU container — the batching trend is the point).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, train_tagger
+from repro.config import FixedPointConfig
+from repro.core.hls import RNNDesignPoint, estimate_design
+from repro.core.hls.design import V100_THROUGHPUT_EPS
+from repro.serving import RNNServingEngine
+
+
+def run(full: bool = False):
+    cfg, m, params = train_tagger("quickdraw-lstm", steps=60, n=600)
+    eng = RNNServingEngine(cfg, params)
+    eng.warmup()
+
+    # FPGA model: the paper's R sweep -> II -> events/s
+    for rk, rr in ((48, 32), (96, 64), (192, 128), (384, 384)):
+        d = estimate_design(RNNDesignPoint(
+            cfg, FixedPointConfig(26, 10), rk, rr, part="u250"))
+        emit(f"throughput/fpga_R{rk}_{rr}", d.latency_min_us,
+             f"fpga_eps={d.throughput_eps:.0f}|paper_range=4300-9700")
+
+    # paper's GPU reference + our measured batching curve
+    for batch in (1, 10, 100):
+        b = eng.benchmark(batch=batch, iters=5)
+        emit(f"throughput/jax_batch{batch}", b["latency_s"] * 1e6,
+             f"measured_eps={b['throughput_eps']:.0f}"
+             f"|paper_v100_eps={V100_THROUGHPUT_EPS[batch]:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""Shared benchmark utilities: tagger training + timing + CSV emission."""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.config import OptimizerConfig  # noqa: E402
+from repro.data import (flavor_tagging_dataset, quickdraw_dataset,  # noqa: E402
+                        top_tagging_dataset)
+from repro.models import build_model  # noqa: E402
+from repro.registry import get_config  # noqa: E402
+from repro.training import adamw_init, adamw_update  # noqa: E402
+
+DATASETS = {
+    "top-tagging": top_tagging_dataset,
+    "flavor-tagging": flavor_tagging_dataset,
+    "quickdraw": quickdraw_dataset,
+}
+
+_CACHE: Dict[str, Tuple] = {}
+
+
+def dataset_for(arch: str):
+    for key, fn in DATASETS.items():
+        if key in arch:
+            return fn
+    raise KeyError(arch)
+
+
+def train_tagger(arch: str, steps: int = 150, n: int = 1500,
+                 lr: float = 5e-3, batch: int = 128):
+    """Train (cached per-process) and return (cfg, model, params)."""
+    if arch in _CACHE:
+        return _CACHE[arch]
+    cfg = get_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    data_fn = dataset_for(arch)
+    x, y = data_fn(n, seed=0)
+    opt = OptimizerConfig(lr=lr, warmup_steps=10, total_steps=steps,
+                          weight_decay=1e-4)
+    st = adamw_init(params, opt)
+
+    @jax.jit
+    def step(params, st, xb, yb):
+        (_, _), g = jax.value_and_grad(
+            lambda p: m.loss(p, {"x": xb, "y": yb}), has_aux=True)(params)
+        return adamw_update(params, g, st, opt)[:2]
+
+    for i in range(steps):
+        idx = np.random.RandomState(i).randint(0, n, batch)
+        params, st = step(params, st, jnp.asarray(x[idx]), jnp.asarray(y[idx]))
+    _CACHE[arch] = (cfg, m, params)
+    return _CACHE[arch]
+
+
+def time_fn(fn: Callable, iters: int = 10, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.2f},{derived}")

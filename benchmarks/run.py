@@ -1,0 +1,52 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure:
+
+  bench_latency_resources  Tables 2-4 + Figs 3-5 (HLS model vs paper numbers)
+  bench_static_nonstatic   Table 5 + Fig 6 (II 315 -> 1) + measured modes
+  bench_quantization       Fig 2 (PTQ AUC-ratio scans)
+  bench_throughput         Sec 5.2 (FPGA vs V100 vs measured JAX batching)
+  bench_kernels            Pallas kernel correctness + reuse Pareto
+  bench_roofline           §Roofline rows from the dry-run artifacts
+
+``--full`` widens sweeps (all 6 tagger models, finer quantization grid).
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (e.g. roofline,kernels)")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (bench_kernels, bench_latency_resources,
+                            bench_quantization, bench_roofline,
+                            bench_static_nonstatic, bench_throughput)
+    benches = {
+        "latency_resources": bench_latency_resources,
+        "static_nonstatic": bench_static_nonstatic,
+        "kernels": bench_kernels,
+        "roofline": bench_roofline,
+        "quantization": bench_quantization,
+        "throughput": bench_throughput,
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+    print("name,us_per_call,derived")
+    for name in selected:
+        t0 = time.time()
+        try:
+            benches[name].run(full=args.full)
+            print(f"bench/{name}/wall_s,{(time.time()-t0)*1e6:.0f},ok")
+        except Exception as e:  # keep the harness running
+            print(f"bench/{name}/ERROR,0,{type(e).__name__}: "
+                  f"{str(e)[:160]}")
+
+
+if __name__ == '__main__':
+    main()

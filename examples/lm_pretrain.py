@@ -1,0 +1,41 @@
+"""End-to-end TRAINING driver: pretrain a reduced stablelm-family LM on the
+synthetic token stream for a few hundred steps with checkpoint/restart —
+exercising the full substrate (data pipeline -> sharded train step ->
+optimizer -> checkpoint manager -> resume).
+
+Run:  PYTHONPATH=src python examples/lm_pretrain.py [--steps 200]
+The same driver scales to the production mesh via launch/train.py.
+"""
+
+import argparse
+import shutil
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="stablelm-3b")
+    args = ap.parse_args()
+
+    ckpt_dir = "/tmp/repro_lm_pretrain"
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    print(f"=== pretraining tiny {args.arch} for {args.steps} steps ===")
+    _, loss = train(args.arch, steps=args.steps, batch=16, lr=3e-3,
+                    seq_len=128, tiny=True, checkpoint_dir=ckpt_dir)
+    print(f"final loss: {loss:.4f}")
+
+    print("\n=== simulated preemption: resume from checkpoint ===")
+    _, loss2 = train(args.arch, steps=args.steps + 50, batch=16, lr=3e-3,
+                     seq_len=128, tiny=True, checkpoint_dir=ckpt_dir,
+                     resume=True)
+    print(f"post-resume loss: {loss2:.4f}")
+
+
+if __name__ == "__main__":
+    main()

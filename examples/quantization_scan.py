@@ -1,0 +1,33 @@
+"""Reproduce paper Fig. 2 for the top tagger: AUC ratio vs fractional bits
+at integer bits {6, 8, 10, 12}, printed as an ASCII table.
+
+Run:  PYTHONPATH=src python examples/quantization_scan.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import train_tagger
+from repro.core.quant.ptq import auc_scan
+from repro.data import top_tagging_dataset
+from repro.models import rnn_tagger
+
+
+def main():
+    cfg, model, params = train_tagger("top-tagging-gru", steps=150)
+    x, y = top_tagging_dataset(1000, seed=99)
+    frac_bits = (0, 2, 4, 6, 8, 10, 12, 14)
+    scan = auc_scan(cfg, rnn_tagger.forward, params, x, y,
+                    integer_bits=(6, 8, 10, 12), fractional_bits=frac_bits)
+
+    print("\nAUC(quantized)/AUC(float) — paper Fig. 2(a) protocol")
+    print("frac bits: " + "".join(f"{fb:>8d}" for fb in frac_bits))
+    for ib, curve in sorted(scan.items()):
+        print(f"  int {ib:2d}:  " + "".join(f"{r:8.4f}" for _, r in curve))
+    print("\npaper claim: >=10 fractional bits recovers ~float AUC; "
+          "6 integer bits suffice for the taggers.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, "src")
+import jax
+from repro.config import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.registry import get_config
+import repro.models.transformer as T
+
+orig_layer = T.dense_layer
+seen = []
+def spy(cfg_, x, p, pre, **kw):
+    if not seen:
+        wq = p[f"{pre}/attn/wq"]
+        seen.append(1)
+        print("x dtype:", x.dtype, " wq dtype:", wq.dtype, flush=True)
+    return orig_layer(cfg_, x, p, pre, **kw)
+T.dense_layer = spy
+
+orig_norm = T.norm
+nseen = []
+def spy_norm(cfg_, x, p, prefix):
+    out = orig_norm(cfg_, x, p, prefix)
+    if len(nseen) < 4:
+        nseen.append(1)
+        print(f"norm {prefix}: in {x.dtype} -> out {out.dtype}", flush=True)
+    return out
+T.norm = spy_norm
+
+from repro.launch.dryrun import lower_cell
+cfg = get_config("nemotron-4-340b")
+mesh = make_production_mesh()
+# trace only (lower, skip compile): patch compile away
+import repro.launch.dryrun as D
+lowered_holder = {}
+orig_jit = jax.jit
+lowered, compiled = None, None
+try:
+    l, c = lower_cell(cfg, SHAPES["train_4k"], mesh)
+except Exception as e:
+    print("ERR", e)

@@ -1,0 +1,21 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re
+sys.path.insert(0, "src")
+from repro.config import SHAPES
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.registry import get_config
+
+_, compiled = lower_cell(get_config(sys.argv[1]), SHAPES[sys.argv[2]], make_production_mesh())
+txt = compiled.as_text()
+seen = {}
+for line in txt.splitlines():
+    m = re.search(r"%(\S+) = (\S+) (all-reduce|all-gather)\(", line)
+    if m:
+        shape = m.group(2)
+        meta = re.search(r'op_name="([^"]{0,120})', line)
+        key = (m.group(3), shape, meta.group(1) if meta else "?")
+        seen[key] = seen.get(key, 0) + 1
+for (kind, shape, op), n in sorted(seen.items(), key=lambda kv: -kv[1])[:18]:
+    print(f"{kind:12s} {shape:34s} x{n:3d}  {op[:100]}")

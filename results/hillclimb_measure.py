@@ -1,0 +1,24 @@
+"""Measure one (arch, shape) cell: full compile -> memory + collectives (+ optional probes)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys, time
+sys.path.insert(0, "src")
+from repro.config import SHAPES
+from repro.launch.dryrun import cell_record
+from repro.launch.mesh import make_production_mesh
+from repro.registry import get_config
+
+arch, shape, tag = sys.argv[1], sys.argv[2], sys.argv[3]
+probes = len(sys.argv) > 4 and sys.argv[4] == "probes"
+mesh = make_production_mesh()
+t0 = time.time()
+rec = cell_record(get_config(arch), SHAPES[shape], mesh, "single_pod", probes=probes)
+rec["tag"] = tag
+out = "results/hillclimb.json"
+rows = json.load(open(out)) if os.path.exists(out) else []
+rows.append(rec)
+json.dump(rows, open(out, "w"), indent=1)
+c = rec["collectives"]
+print(f"[{tag}] {arch} {shape}: peak={rec['memory']['peak_bytes']/2**30:.2f}GiB "
+      f"wire={c['wire_bytes_per_device']/2**40:.3f}TiB "
+      f"by_kind={ {k: round(v/2**30,1) for k,v in c['by_kind'].items()} } ({time.time()-t0:.0f}s)")

@@ -1,0 +1,22 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys
+sys.path.insert(0, "src")
+from repro.config import SHAPES
+from repro.launch.dryrun import cell_record
+from repro.launch.mesh import make_production_mesh
+from repro.registry import get_config
+
+cells = [("stablelm-3b","decode_32k"), ("phi-3-vision-4.2b","decode_32k"),
+         ("qwen3-moe-30b-a3b","decode_32k"), ("deepseek-coder-33b","decode_32k"),
+         ("nemotron-4-340b","decode_32k")]
+path = "results/dryrun_v2.json"
+recs = json.load(open(path))
+for arch, shape in cells:
+    rec = cell_record(get_config(arch), SHAPES[shape], make_production_mesh(),
+                      "single_pod", probes=True)
+    for i, r in enumerate(recs):
+        if r.get("arch")==arch and r.get("shape")==shape:
+            recs[i] = rec
+    print(f"{arch}: peak={rec['memory']['peak_bytes']/2**30:.2f}GiB", flush=True)
+json.dump(recs, open(path, "w"), indent=1)

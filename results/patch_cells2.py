@@ -1,0 +1,20 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys
+sys.path.insert(0, "src")
+from repro.config import SHAPES
+from repro.launch.dryrun import cell_record
+from repro.launch.mesh import make_production_mesh
+from repro.registry import get_config
+
+for path, mesh_name, multi, probes in [("results/dryrun_v2.json","single_pod",False,True),
+                                       ("results/dryrun_multipod.json","multi_pod",True,False)]:
+    recs = json.load(open(path))
+    mesh = make_production_mesh(multi_pod=multi)
+    for arch in ("deepseek-coder-33b", "qwen3-moe-30b-a3b"):
+        rec = cell_record(get_config(arch), SHAPES["decode_32k"], mesh, mesh_name, probes=probes)
+        for i, r in enumerate(recs):
+            if r.get("arch")==arch and r.get("shape")=="decode_32k":
+                recs[i] = rec
+        print(f"{mesh_name} {arch}: peak={rec['memory']['peak_bytes']/2**30:.2f}GiB", flush=True)
+    json.dump(recs, open(path, "w"), indent=1)

@@ -1,0 +1,25 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys, time
+sys.path.insert(0, "src")
+from repro.config import SHAPES
+from repro.launch.dryrun import _extrapolate_cost
+from repro.launch.mesh import make_production_mesh
+from repro.registry import get_config
+
+path = "results/dryrun_v2.json"
+recs = json.load(open(path))
+mesh = make_production_mesh()
+for r in recs:
+    if "memory" not in r:
+        continue
+    cfg = get_config(r["arch"])
+    t0 = time.time()
+    try:
+        r["cost_extrapolated"] = _extrapolate_cost(cfg, SHAPES[r["shape"]], mesh)
+        print(f"{r['arch']} {r['shape']}: flops/dev={r['cost_extrapolated']['flops']:.3e} "
+              f"bytes/dev={r['cost_extrapolated']['bytes_accessed']:.3e} ({time.time()-t0:.0f}s)", flush=True)
+    except Exception as e:
+        print(f"{r['arch']} {r['shape']}: FAIL {type(e).__name__}: {str(e)[:150]}", flush=True)
+    json.dump(recs, open(path + ".tmp", "w"), indent=1)
+    os.replace(path + ".tmp", path)

@@ -1,0 +1,21 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys
+sys.path.insert(0, "src")
+from repro.config import SHAPES
+from repro.launch.dryrun import _extrapolate_cost
+from repro.launch.mesh import make_production_mesh
+from repro.registry import get_config
+
+path = "results/dryrun_v2.json"
+recs = json.load(open(path))
+mesh = make_production_mesh()
+for r in recs:
+    if r.get("kind") == "prefill" and "memory" in r:
+        cfg = get_config(r["arch"])
+        try:
+            r["cost_extrapolated"] = _extrapolate_cost(cfg, SHAPES[r["shape"]], mesh)
+            print(r["arch"], "prefill flops/dev:", f"{r['cost_extrapolated']['flops']:.3e}", flush=True)
+        except Exception as e:
+            print(r["arch"], "FAIL", e, flush=True)
+json.dump(recs, open(path, "w"), indent=1)

@@ -1,0 +1,18 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, json
+sys.path.insert(0, "src")
+from repro.config import SHAPES
+from repro.launch.dryrun import lower_cell
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.registry import get_config
+
+arch, shape = sys.argv[1], sys.argv[2]
+mesh = make_production_mesh()
+_, compiled = lower_cell(get_config(arch), SHAPES[shape], mesh)
+a = analyze_hlo(compiled.as_text())
+rows = sorted(a.collectives, key=lambda c: -c.wire_bytes * c.count)[:12]
+for c in rows:
+    print(f"{c.kind:18s} op_bytes={c.operand_bytes/2**20:9.1f}MiB gsize={c.group_size:3d} "
+          f"count={c.count:5d} total_wire={c.wire_bytes*c.count/2**30:9.1f}GiB comp={c.computation[:40]}")

@@ -1,0 +1,15 @@
+"""repro: hls4ml-RNN paper reproduction as a multi-pod JAX/TPU framework.
+
+Layers:
+  core/      — the paper's contribution (RNN cells, static/non-static modes,
+               fixed-point quantization, HLS design-space model)
+  models/    — model zoo covering the 10 assigned architectures
+  kernels/   — Pallas TPU kernels (validated in interpret mode on CPU)
+  sharding/  — logical-axis partitioning rules (FSDP x TP x EP x SP)
+  training/  — optimizers, grad accumulation, compression
+  serving/   — KV caches, flash-decode, batching engines
+  checkpoint — fault-tolerant save/restore with elastic resharding
+  launch/    — production mesh, dry-run, train/serve drivers
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,342 @@
+"""Configuration dataclasses for models, shapes, training, serving, quantization.
+
+Every assigned architecture is expressed as a ``ModelConfig``; every assigned
+input shape as a ``ShapeConfig``.  Configs are frozen (hashable) so they can be
+used as jit static arguments and dict keys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block configuration (GShard-style routed experts)."""
+
+    n_experts: int = 8
+    top_k: int = 2
+    n_shared_experts: int = 0          # always-on shared experts (DeepSeek/Qwen style)
+    d_ff_expert: int = 0               # per-expert hidden dim (0 -> use d_ff)
+    capacity_factor: float = 1.25      # train-time capacity (tokens dropped beyond)
+    eval_capacity_factor: float = 2.0
+    router_z_loss: float = 1e-3
+    aux_loss_weight: float = 1e-2
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) block configuration."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk_size: int = 256              # SSD chunk length
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma / Griffin RG-LRU configuration."""
+
+    lru_width: int = 0                 # 0 -> d_model
+    conv_width: int = 4
+    window: int = 2048                 # local-attention window in hybrid blocks
+    # repeating block pattern: 2 recurrent blocks then 1 local-attention block
+    pattern: Tuple[str, ...] = ("rglru", "rglru", "local_attn")
+
+
+@dataclass(frozen=True)
+class RNNConfig:
+    """Paper-core recurrent layer configuration (LSTM / GRU taggers)."""
+
+    cell: str = "lstm"                  # "lstm" | "gru"
+    hidden: int = 20
+    seq_len: int = 20
+    input_size: int = 6
+    dense_sizes: Tuple[int, ...] = (64,)
+    n_outputs: int = 1
+    output_activation: str = "sigmoid"  # "sigmoid" | "softmax"
+    mode: str = "static"                # "static" | "nonstatic"
+    # hls4ml-style knobs
+    reuse_kernel: int = 1
+    reuse_recurrent: int = 1
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A single architecture. Families: dense | moe | ssm | hybrid | audio | vlm | rnn."""
+
+    name: str = "unnamed"
+    family: str = "dense"
+
+    # transformer backbone
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0                  # 0 -> d_model // n_heads
+    d_ff: int = 512
+    vocab_size: int = 1000
+    mlp_type: str = "swiglu"           # swiglu | geglu | relu2 | gelu
+    norm_type: str = "rmsnorm"         # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    logits_softcap: float = 0.0        # gemma-style soft capping (0 = off)
+    attn_window: int = 0               # 0 = full attention; >0 = local window
+
+    # family extensions
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    rnn: Optional[RNNConfig] = None
+
+    # encoder-decoder (whisper)
+    enc_dec: bool = False
+    n_encoder_layers: int = 0
+    n_decoder_layers: int = 0
+    max_encoder_len: int = 1500
+
+    # modality frontend stub: none | audio | vision
+    frontend: str = "none"
+    n_frontend_tokens: int = 0         # vision: number of patch tokens prepended
+
+    # numerics / execution
+    param_dtype: str = "float32"       # dry-run big models use bfloat16
+    compute_dtype: str = "bfloat16"
+    scan_layers: bool = True           # lax.scan over stacked layer weights
+    remat: str = "full"                # full | dots | none
+    attn_chunk_q: int = 1024           # blockwise-attention query chunk
+    attn_chunk_kv: int = 2048          # blockwise-attention kv chunk
+    impl: str = "xla"                  # xla | pallas (kernel hot paths)
+
+    # distribution knobs (overridable per arch)
+    grad_accum: int = 1                # microbatch steps inside train_step
+    seq_shard_residual: bool = True    # Megatron-style sequence-parallel residual
+
+    # cost-probe instrumentation: python-unroll inner lax.scan loops
+    # (attention kv loop, SSD chunk loop, MoE chunk loop) so XLA's
+    # cost_analysis — which counts while bodies once — sees every FLOP.
+    probe_unroll: bool = False
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # -- helpers -----------------------------------------------------------
+    @property
+    def qkv_dims(self) -> Tuple[int, int]:
+        return self.n_heads * self.head_dim, self.n_kv_heads * self.head_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytical parameter count (used for roofline MODEL_FLOPS)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab_size
+        if self.family == "rnn":
+            assert self.rnn is not None
+            r = self.rnn
+            g = 4 if r.cell == "lstm" else 3
+            n = g * (r.input_size * r.hidden + r.hidden * r.hidden + r.hidden)
+            if r.cell == "gru":
+                n += 3 * r.hidden  # keras GRU reset_after: separate recurrent bias (2x 3h total)
+            prev = r.hidden
+            for h in r.dense_sizes:
+                n += prev * h + h
+                prev = h
+            n += prev * r.n_outputs + r.n_outputs
+            return n
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        q_dim, kv_dim = self.qkv_dims
+        attn = d * q_dim + 2 * d * kv_dim + q_dim * d
+        if self.mlp_type in ("swiglu", "geglu"):
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = 2 * d * self.d_ff
+        if self.family == "ssm":
+            assert self.ssm is not None
+            s = self.ssm
+            d_in = s.expand * d
+            n_heads = d_in // s.head_dim
+            per_layer = (
+                d * (2 * d_in + 2 * s.n_groups * s.d_state + n_heads)  # in_proj
+                + s.d_conv * (d_in + 2 * s.n_groups * s.d_state)       # conv
+                + n_heads * 2                                          # A_log, D
+                + d_in * d                                             # out_proj
+            )
+            return emb // 2 + L * per_layer + 2 * d  # tied embedding, final norm
+        if self.family == "moe":
+            assert self.moe is not None
+            m = self.moe
+            dff = m.d_ff_expert or self.d_ff
+            mlp = m.n_experts * 3 * d * dff + d * m.n_experts
+            mlp += m.n_shared_experts * 3 * d * dff
+        if self.family == "hybrid":
+            assert self.rglru is not None
+            rg = self.rglru
+            w = rg.lru_width or d
+            n_rec = sum(1 for p in self._pattern_for_layers() if p == "rglru")
+            n_att = L - n_rec
+            rec = 2 * d * w + rg.conv_width * w + 3 * w + w * d  # in/out proj + conv + gates
+            att = attn
+            return emb + n_rec * (rec + mlp + 2 * d) + n_att * (att + mlp + 2 * d) + d
+        per_layer += attn + mlp + 2 * d
+        if self.enc_dec:
+            # encoder + decoder stacks; decoder layers add cross-attention
+            L = self.n_encoder_layers + self.n_decoder_layers
+            n = emb + L * per_layer + self.n_decoder_layers * (attn + d) + d
+            return n
+        n = emb + L * per_layer + d
+        return n
+
+    def _pattern_for_layers(self):
+        assert self.rglru is not None
+        pat = self.rglru.pattern
+        return [pat[i % len(pat)] for i in range(self.n_layers)]
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: routed top-k + shared only)."""
+        if self.family != "moe":
+            return self.param_count()
+        assert self.moe is not None
+        m = self.moe
+        d, L = self.d_model, self.n_layers
+        dff = m.d_ff_expert or self.d_ff
+        q_dim, kv_dim = self.qkv_dims
+        attn = d * q_dim + 2 * d * kv_dim + q_dim * d
+        mlp_active = (m.top_k + m.n_shared_experts) * 3 * d * dff + d * m.n_experts
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return emb + L * (attn + mlp_active + 2 * d) + d
+
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned input-shape set)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# archs whose state is sub-quadratic in context (run long_500k)
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch, shape) dry-run cell runs, and why not if skipped."""
+    if shape.name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, "full-attention arch: 524k dense KV decode out of scope (DESIGN.md §4)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Training / serving / quantization configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    state_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    grad_accum: int = 1
+    loss_dtype: str = "float32"
+    z_loss: float = 1e-4
+    compress_grads: bool = False       # int8 error-feedback cross-pod compression
+    checkpoint_every: int = 100
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    log_every: int = 10
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_seq_len: int = 2048
+    prefill_chunk: int = 512
+    cache_dtype: str = "bfloat16"
+
+
+@dataclass(frozen=True)
+class FixedPointConfig:
+    """ap_fixed<total, integer> — paper's quantization scheme."""
+
+    total_bits: int = 16
+    integer_bits: int = 6
+    signed: bool = True
+    rounding: str = "rnd"              # rnd (round-half-even) | trn (truncate)
+    saturation: str = "sat"            # sat | wrap
+
+    @property
+    def fractional_bits(self) -> int:
+        return self.total_bits - self.integer_bits
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.fractional_bits)
+
+    @property
+    def max_value(self) -> float:
+        sign = 1 if self.signed else 0
+        return (2 ** (self.total_bits - sign) - 1) / self.scale
+
+    @property
+    def min_value(self) -> float:
+        return -(2 ** (self.total_bits - 1)) / self.scale if self.signed else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e target) — used by roofline analysis
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HardwareConfig:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12    # per chip
+    hbm_bw: float = 819e9              # bytes/s per chip
+    ici_link_bw: float = 50e9          # bytes/s per link (one direction)
+    ici_links: int = 4                 # 2D torus: 4 links/chip (single pod 16x16)
+    hbm_bytes: int = 16 * 2 ** 30      # 16 GiB
+    vmem_bytes: int = 128 * 2 ** 20    # ~128 MiB VMEM
+
+
+TPU_V5E = HardwareConfig()

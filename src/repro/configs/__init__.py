@@ -1,0 +1,7 @@
+"""Architecture configs: 10 assigned archs + the paper's 3 RNN benchmarks.
+
+Each module exposes ``CONFIG`` (a ModelConfig).  Use
+``repro.registry.get_config(name)`` or ``--arch <id>`` on the launchers.
+"""
+
+from repro.registry import ARCHS, get_config, list_archs  # noqa: F401

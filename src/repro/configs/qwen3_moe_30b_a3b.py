@@ -1,0 +1,29 @@
+"""qwen3-moe-30b-a3b [moe]: 48L d_model=2048 32H (GQA kv=4) d_ff=768/expert,
+vocab=151936, 128 routed experts top-8, no shared experts.
+[hf:Qwen/Qwen3-30B-A3B; hf]
+
+128 experts divide the 16-way model axis -> true expert parallelism
+(8 experts per device).
+"""
+
+from repro.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=768,
+    vocab_size=151936,
+    moe=MoEConfig(n_experts=128, top_k=8, n_shared_experts=0, d_ff_expert=768,
+                  capacity_factor=1.25),
+    mlp_type="swiglu",
+    norm_type="rmsnorm",
+    rope_theta=1000000.0,
+    tie_embeddings=False,
+    param_dtype="bfloat16",
+    grad_accum=4,   # §Perf MOE-2 refuted accum=2: wire unchanged, peak +11GB (EXPERIMENTS.md)
+)

@@ -1,0 +1,9 @@
+"""The paper's contribution: ultra-low-latency RNN inference machinery.
+
+  core.rnn    — LSTM/GRU cells, static (scan) and non-static (pipelined)
+                execution modes
+  core.quant  — ap_fixed<W,I> fixed-point emulation + post-training
+                quantization + AUC profiling (paper Fig. 2)
+  core.hls    — analytical HLS design-space model (DSP/FF/LUT/BRAM, latency,
+                initiation interval) calibrated to the paper's Tables 2-5
+"""

@@ -1,0 +1,6 @@
+from repro.core.hls.design import (  # noqa: F401
+    HLSDesign,
+    RNNDesignPoint,
+    estimate_design,
+)
+from repro.core.hls.resources import FPGA_PARTS  # noqa: F401

@@ -1,0 +1,38 @@
+"""FPGA part catalogue (paper Sec. 5) and DSP packing rules."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class FPGAPart:
+    name: str
+    dsp: int
+    ff: int
+    lut: int
+    bram_18k: int
+
+
+FPGA_PARTS = {
+    # Xilinx Kintex UltraScale (top/flavor tagging target)
+    "xcku115": FPGAPart("xcku115-flvb2104-2-i", dsp=5520, ff=1326720,
+                        lut=663360, bram_18k=4320),
+    # Xilinx Alveo U250 (QuickDraw target)
+    "u250": FPGAPart("xcu250-figd2104-2-e", dsp=12288, ff=3456000,
+                     lut=1728000, bram_18k=5376),
+    # Virtex UltraScale+ VU9P single SLR (CMS L1T phase-2 candidate)
+    "vu9p_slr": FPGAPart("xcvu9p (1 SLR)", dsp=2280, ff=788160,
+                         lut=394080, bram_18k=1440),
+}
+
+
+def mults_per_dsp(total_bits: int) -> float:
+    """DSP48E2 is a 27x18 multiplier: below 18 bits one mult per DSP; the
+    paper observes DSP usage flat until the precision exceeds the DSP input
+    width, then doubling (Fig. 3)."""
+    if total_bits <= 18:
+        return 1.0
+    if total_bits <= 27:
+        return 2.0
+    return 4.0

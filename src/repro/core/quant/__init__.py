@@ -1,0 +1,6 @@
+from repro.core.quant.fixed_point import (  # noqa: F401
+    quantize,
+    quantize_params,
+    fixed_point_error_bound,
+)
+from repro.core.quant.ptq import ptq_quantize_model, auc_scan  # noqa: F401

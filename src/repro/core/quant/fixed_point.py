@@ -1,0 +1,78 @@
+"""Bit-accurate ap_fixed<W,I> emulation (the paper's quantization scheme).
+
+hls4ml represents every weight, bias, activation and accumulator as a
+fixed-point number with W total bits, I integer bits (signed by default),
+round-to-nearest (RND) and saturation (SAT).  We emulate by scaling to the
+integer grid, rounding, saturating, and rescaling.
+
+Exactness: the integer grid is exact while |x|*2^F < 2^24 (f32 mantissa).
+The paper's scans reach W = 26 (I=10, F=16) where the final rescale can be
+off by <= 1 ulp of f32 — negligible against the quantization step itself
+(documented tolerance, tested in tests/test_quantization.py).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FixedPointConfig
+
+
+def quantize(x: jax.Array, fp: FixedPointConfig) -> jax.Array:
+    """Quantize to the ap_fixed grid (returns same dtype, values on grid)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    scale = fp.scale
+    y = xf * scale
+    if fp.rounding == "rnd":
+        y = jnp.round(y)                 # round-half-even (IEEE default)
+    else:  # trn: truncate toward -inf (hls4ml AP_TRN)
+        y = jnp.floor(y)
+    if fp.saturation == "sat":
+        lo = fp.min_value * scale
+        hi = fp.max_value * scale
+        y = jnp.clip(y, lo, hi)
+    else:  # wrap (AP_WRAP): modular arithmetic
+        span = 2.0 ** fp.total_bits
+        y = jnp.mod(y - fp.min_value * scale, span) + fp.min_value * scale
+    return (y / scale).astype(dt)
+
+
+def quantize_np(x: np.ndarray, fp: FixedPointConfig) -> np.ndarray:
+    """Exact host-side quantization in float64 (used for PTQ of weights)."""
+    scale = fp.scale
+    y = np.asarray(x, np.float64) * scale
+    if fp.rounding == "rnd":
+        y = np.round(y)
+    else:
+        y = np.floor(y)
+    if fp.saturation == "sat":
+        y = np.clip(y, fp.min_value * scale, fp.max_value * scale)
+    return (y / scale).astype(np.float32)
+
+
+def quantize_params(params: Dict[str, jax.Array], fp: FixedPointConfig,
+                    skip_substrings: tuple = ()) -> Dict[str, jax.Array]:
+    """Post-training quantization of a parameter dict (host-side, exact)."""
+    out = {}
+    for k, v in params.items():
+        if any(s in k for s in skip_substrings):
+            out[k] = v
+        else:
+            out[k] = jnp.asarray(quantize_np(np.asarray(v), fp))
+    return out
+
+
+def fixed_point_error_bound(fp: FixedPointConfig) -> float:
+    """Max rounding error of a single quantization (half a grid step)."""
+    return 0.5 / fp.scale
+
+
+def saturates(x: jax.Array, fp: FixedPointConfig) -> jax.Array:
+    """Fraction of entries that hit the saturation rails (diagnostic)."""
+    xf = x.astype(jnp.float32)
+    return jnp.mean(((xf > fp.max_value) | (xf < fp.min_value)).astype(jnp.float32))

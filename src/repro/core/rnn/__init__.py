@@ -1,0 +1,8 @@
+from repro.core.rnn.cells import (  # noqa: F401
+    lstm_cell,
+    gru_cell,
+    lstm_cell_quantized,
+    gru_cell_quantized,
+    rnn_param_specs,
+)
+from repro.core.rnn.layer import rnn_layer  # noqa: F401

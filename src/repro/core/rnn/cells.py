@@ -1,0 +1,137 @@
+"""LSTM / GRU cells — Keras-compatible math (paper Eq. 1).
+
+Weight layout follows Keras so trained Keras models translate one-to-one
+(the hls4ml design flow the paper builds on):
+
+  LSTM: kernel W [in, 4h] (gates i|f|c|o), recurrent U [h, 4h], bias [4h]
+  GRU (reset_after): kernel [in, 3h] (z|r|hh), recurrent [h, 3h],
+                     bias [2, 3h] (input bias ; recurrent bias)
+
+Each state update = kernel matvec + recurrent matvec + Hadamard products —
+the exact op decomposition the paper maps onto hls4ml dense calls plus their
+new HLS Hadamard primitive.  The quantized variants apply ap_fixed<W,I>
+emulation to every intermediate, mirroring hls4ml's fixed-point datapath.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FixedPointConfig, RNNConfig
+from repro.core.quant.fixed_point import quantize
+from repro.models.init import ParamSpec, ParamSpecs
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def rnn_param_specs(rnn: RNNConfig, prefix: str = "rnn") -> ParamSpecs:
+    h, fin = rnn.hidden, rnn.input_size
+    g = 4 if rnn.cell == "lstm" else 3
+    specs = {
+        f"{prefix}/kernel": ParamSpec((fin, g * h), ("rnn_in", "rnn_gates"), "lecun"),
+        f"{prefix}/recurrent": ParamSpec((h, g * h), ("rnn_hidden", "rnn_gates"),
+                                         "rnn_ortho"),
+    }
+    if rnn.cell == "lstm":
+        specs[f"{prefix}/bias"] = ParamSpec((g * h,), ("rnn_gates",), "zeros")
+    else:
+        specs[f"{prefix}/bias"] = ParamSpec((2, g * h), (None, "rnn_gates"), "zeros")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Float cells
+# ---------------------------------------------------------------------------
+
+
+def lstm_cell(x_t: jax.Array, state: Tuple[jax.Array, jax.Array],
+              W: jax.Array, U: jax.Array, b: jax.Array):
+    """One LSTM step.  x_t: [b, in]; state = (h, c): [b, h] each."""
+    h_prev, c_prev = state
+    hdim = h_prev.shape[-1]
+    z = x_t @ W + h_prev @ U + b                     # [b, 4h]
+    i, f, g, o = (z[..., :hdim], z[..., hdim:2 * hdim],
+                  z[..., 2 * hdim:3 * hdim], z[..., 3 * hdim:])
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f)
+    g = jnp.tanh(g)
+    o = jax.nn.sigmoid(o)
+    c_t = f * c_prev + i * g                         # Hadamard products
+    h_t = o * jnp.tanh(c_t)
+    return h_t, (h_t, c_t)
+
+
+def gru_cell(x_t: jax.Array, state: jax.Array,
+             W: jax.Array, U: jax.Array, b: jax.Array):
+    """One GRU step (reset_after).  x_t: [b, in]; state h: [b, h];
+    b: [2, 3h] = (input bias; recurrent bias)."""
+    h_prev = state
+    hdim = h_prev.shape[-1]
+    b_in, b_rec = b[0], b[1]
+    zx = x_t @ W + b_in                              # [b, 3h]
+    zh = h_prev @ U + b_rec
+    zxz, zxr, zxh = jnp.split(zx, 3, axis=-1)
+    zhz, zhr, zhh = jnp.split(zh, 3, axis=-1)
+    z = jax.nn.sigmoid(zxz + zhz)
+    r = jax.nn.sigmoid(zxr + zhr)
+    hh = jnp.tanh(zxh + r * zhh)                     # Hadamard inside tanh
+    h_t = z * h_prev + (1.0 - z) * hh                # Hadamard combine
+    return h_t, h_t
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point cells (bit-accurate hls4ml datapath emulation)
+# ---------------------------------------------------------------------------
+
+
+def _q(x, fp: Optional[FixedPointConfig]):
+    return x if fp is None else quantize(x, fp)
+
+
+def lstm_cell_quantized(x_t, state, W, U, b, fp: FixedPointConfig):
+    """LSTM step with every intermediate on the ap_fixed grid.
+
+    Matches hls4ml's datapath: quantized inputs/weights, quantized
+    accumulator outputs, LUT-indexed activations (quantized in/out),
+    quantized Hadamard products.
+    """
+    h_prev, c_prev = state
+    hdim = h_prev.shape[-1]
+    x_t = _q(x_t, fp)
+    z = _q(x_t @ W + h_prev @ U + b, fp)
+    i, f, g, o = (z[..., :hdim], z[..., hdim:2 * hdim],
+                  z[..., 2 * hdim:3 * hdim], z[..., 3 * hdim:])
+    i = _q(jax.nn.sigmoid(i), fp)
+    f = _q(jax.nn.sigmoid(f), fp)
+    g = _q(jnp.tanh(g), fp)
+    o = _q(jax.nn.sigmoid(o), fp)
+    c_t = _q(_q(f * c_prev, fp) + _q(i * g, fp), fp)
+    h_t = _q(o * _q(jnp.tanh(c_t), fp), fp)
+    return h_t, (h_t, c_t)
+
+
+def gru_cell_quantized(x_t, state, W, U, b, fp: FixedPointConfig):
+    h_prev = state
+    x_t = _q(x_t, fp)
+    zx = _q(x_t @ W + b[0], fp)
+    zh = _q(h_prev @ U + b[1], fp)
+    zxz, zxr, zxh = jnp.split(zx, 3, axis=-1)
+    zhz, zhr, zhh = jnp.split(zh, 3, axis=-1)
+    z = _q(jax.nn.sigmoid(zxz + zhz), fp)
+    r = _q(jax.nn.sigmoid(zxr + zhr), fp)
+    hh = _q(jnp.tanh(_q(zxh + _q(r * zhh, fp), fp)), fp)
+    h_t = _q(_q(z * h_prev, fp) + _q((1.0 - z) * hh, fp), fp)
+    return h_t, h_t
+
+
+def initial_state(cell: str, batch: int, hidden: int, dtype=jnp.float32):
+    h0 = jnp.zeros((batch, hidden), dtype)
+    if cell == "lstm":
+        return (h0, jnp.zeros((batch, hidden), dtype))
+    return h0

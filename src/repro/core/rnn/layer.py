@@ -1,0 +1,80 @@
+"""RNN layer execution modes — the paper's static / non-static scheduling,
+adapted to TPU.
+
+static     — one RNN block processes every timestep; state lives in the block
+             (paper Fig. 1 left).  TPU realization: ``lax.scan`` over time —
+             weights stay resident (VMEM ≈ BRAM), II = seq_len.  The Pallas
+             ``lstm_scan``/``gru_scan`` kernels implement exactly this with
+             explicit VMEM residency (impl='pallas').
+
+nonstatic  — one block per timestep, state flows block->block (Fig. 1 right).
+             TPU realization: fully unrolled python loop — XLA materializes
+             seq_len independent gate computations (≈ seq_len blocks laid out
+             in silicon), enabling cross-inference pipelining.  The
+             multi-device version (`core.rnn.pipeline`) maps timesteps to
+             devices along a mesh axis with collective_permute — a new
+             inference enters the pipe every stage latency: II = 1 block.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FixedPointConfig, RNNConfig
+from repro.core.rnn.cells import (
+    gru_cell,
+    gru_cell_quantized,
+    initial_state,
+    lstm_cell,
+    lstm_cell_quantized,
+)
+
+
+def _cell_fn(cell: str, fp: Optional[FixedPointConfig]):
+    if cell == "lstm":
+        if fp is None:
+            return lstm_cell
+        return lambda x, s, W, U, b: lstm_cell_quantized(x, s, W, U, b, fp)
+    if fp is None:
+        return gru_cell
+    return lambda x, s, W, U, b: gru_cell_quantized(x, s, W, U, b, fp)
+
+
+def rnn_layer(
+    rnn: RNNConfig,
+    xs: jax.Array,                      # [b, T, in]
+    W: jax.Array,
+    U: jax.Array,
+    b: jax.Array,
+    *,
+    fp: Optional[FixedPointConfig] = None,
+    mode: Optional[str] = None,
+    impl: str = "xla",
+) -> jax.Array:
+    """Run the recurrent layer; returns the final hidden state [b, h]."""
+    mode = mode or rnn.mode
+    batch = xs.shape[0]
+    cell = _cell_fn(rnn.cell, fp)
+    s0 = initial_state(rnn.cell, batch, rnn.hidden, xs.dtype)
+
+    if impl == "pallas" and fp is None:
+        from repro.kernels import ops as kops
+        if rnn.cell == "lstm":
+            return kops.lstm_scan(xs, W, U, b)
+        return kops.gru_scan(xs, W, U, b)
+
+    if mode == "static":
+        def step(state, x_t):
+            h_t, new_state = cell(x_t, state, W, U, b)
+            return new_state, ()
+        final, _ = jax.lax.scan(step, s0, jnp.moveaxis(xs, 1, 0))
+        return final[0] if rnn.cell == "lstm" else final
+
+    # nonstatic: fully unrolled — one "block" per timestep
+    state = s0
+    for t in range(xs.shape[1]):
+        _, state = cell(xs[:, t], state, W, U, b)
+    return state[0] if rnn.cell == "lstm" else state

@@ -1,0 +1,4 @@
+from repro.data.jets import top_tagging_dataset  # noqa: F401
+from repro.data.tracks import flavor_tagging_dataset  # noqa: F401
+from repro.data.quickdraw import quickdraw_dataset  # noqa: F401
+from repro.data.lm_synthetic import lm_token_stream  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.ft.monitor import HeartbeatMonitor, StragglerPolicy  # noqa: F401
+from repro.ft.elastic import ElasticPlan, plan_elastic_restart  # noqa: F401

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  lstm_scan / gru_scan — the paper's STATIC MODE on TPU: one weights-resident
+      block (VMEM ~ BRAM) scans the sequence, state lives in VMEM scratch.
+  hadamard             — the elementwise product the paper added to hls4ml.
+  fixed_point          — ap_fixed<W,I> quantization on-chip.
+  rglru_scan           — the RG-LRU gated linear recurrence (recurrentgemma).
+  reuse_matmul         — reuse-factor analogue: K-serialized matmul whose
+      VMEM working set shrinks by R while latency grows by R.
+
+Kernels target TPU (Mosaic); this container is CPU-only so tests run them
+with interpret=True against the pure-jnp oracles in ref.py.  The XLA model
+paths are used for dry-run lowering (DESIGN.md Sec. 3).
+"""

@@ -1,0 +1,39 @@
+"""Pallas ap_fixed<W,I> quantization kernel: scale -> round-half-even ->
+saturate -> rescale, fused on-chip (hls4ml's fixed-point datapath stage)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.config import FixedPointConfig
+
+
+def _quant_kernel(x_ref, o_ref, *, scale: float, lo: float, hi: float):
+    x = x_ref[...].astype(jnp.float32) * scale
+    # round-half-even == jnp.round semantics
+    y = jnp.clip(jnp.round(x), lo, hi)
+    o_ref[...] = (y * (1.0 / scale)).astype(o_ref.dtype)
+
+
+def fixed_point_pallas(x: jax.Array, fp: FixedPointConfig, *,
+                       block: int = 1024, interpret: bool = True) -> jax.Array:
+    """x: [N, M] -> quantized to the ap_fixed<total, integer> grid."""
+    assert x.ndim == 2
+    n, m = x.shape
+    bn = min(block, n)
+    assert n % bn == 0
+    kernel = functools.partial(
+        _quant_kernel, scale=fp.scale,
+        lo=fp.min_value * fp.scale, hi=fp.max_value * fp.scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bn, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,69 @@
+"""Pallas GRU static-mode scan kernel (reset_after, Keras-compatible).
+
+Same schedule as lstm_scan: weights VMEM-resident, h state in scratch,
+sequential time grid.  GRU has 3 gate groups (z|r|hh) and the Hadamard
+product sits inside the candidate tanh (r * (h U_h + b_rec)).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gru_kernel(x_ref, w_ref, u_ref, b_ref, out_ref, h_scr, *,
+                hidden: int, seq_len: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x_t = x_ref[:, 0, :]
+    h = h_scr[...]
+    b_in = b_ref[0]                                        # [3h]
+    b_rec = b_ref[1]
+
+    zx = jnp.dot(x_t, w_ref[...], preferred_element_type=jnp.float32) + b_in
+    zh = jnp.dot(h, u_ref[...], preferred_element_type=jnp.float32) + b_rec
+
+    z = jax.nn.sigmoid(zx[:, :hidden] + zh[:, :hidden])
+    r = jax.nn.sigmoid(zx[:, hidden:2 * hidden] + zh[:, hidden:2 * hidden])
+    hh = jnp.tanh(zx[:, 2 * hidden:] + r * zh[:, 2 * hidden:])
+    h_new = z * h + (1.0 - z) * hh
+    h_scr[...] = h_new
+
+    @pl.when(t == seq_len - 1)
+    def _emit():
+        out_ref[...] = h_new.astype(out_ref.dtype)
+
+
+def gru_scan_pallas(xs: jax.Array, W: jax.Array, U: jax.Array,
+                    b: jax.Array, *, block_batch: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """xs: [B, T, in]; W: [in, 3h]; U: [h, 3h]; b: [2, 3h] -> h [B, h]."""
+    B, T, fin = xs.shape
+    hidden = U.shape[0]
+    assert B % block_batch == 0
+
+    kernel = functools.partial(_gru_kernel, hidden=hidden, seq_len=T)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // block_batch, T),
+        in_specs=[
+            pl.BlockSpec((block_batch, 1, fin), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((fin, 3 * hidden), lambda i, t: (0, 0)),
+            pl.BlockSpec((hidden, 3 * hidden), lambda i, t: (0, 0)),
+            pl.BlockSpec((2, 3 * hidden), lambda i, t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_batch, hidden), lambda i, t: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, hidden), xs.dtype),
+        scratch_shapes=[pltpu.VMEM((block_batch, hidden), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xs, W, U, b)

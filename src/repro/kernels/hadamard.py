@@ -1,0 +1,32 @@
+"""Pallas Hadamard-product kernel — the one op the paper had to add to
+hls4ml's library (Sec. 3).  Elementwise a*b with VMEM tiling; trivially
+VPU-bound, included for paper fidelity and as the simplest BlockSpec example.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hadamard_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] * b_ref[...]
+
+
+def hadamard_pallas(a: jax.Array, b: jax.Array, *, block: int = 1024,
+                    interpret: bool = True) -> jax.Array:
+    """a, b: [N, M] (caller pads rows to the block)."""
+    assert a.shape == b.shape and a.ndim == 2
+    n, m = a.shape
+    bn = min(block, n)
+    assert n % bn == 0
+    return pl.pallas_call(
+        _hadamard_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, m), lambda i: (i, 0)),
+                  pl.BlockSpec((bn, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bn, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), a.dtype),
+        interpret=interpret,
+    )(a, b)

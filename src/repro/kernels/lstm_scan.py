@@ -1,0 +1,90 @@
+"""Pallas LSTM static-mode scan kernel.
+
+TPU adaptation of the paper's STATIC mode (Fig. 1 left): ONE physical block —
+the gate weights stay resident in VMEM across the whole sequence (the BRAM
+analogue), the (h, c) state lives in VMEM scratch, and the sequential grid
+dimension walks timesteps.  HBM traffic: weights read once (not T times),
+x_t streamed in, final h written out — exactly the paper's resource-minimal
+schedule.
+
+Grid: (B/bt, T) — the batch-tile dim is parallel ("independent inferences"),
+the time dim is sequential ("arbitrary": carries scratch state).
+Block shapes are padded to (8, 128) lane/sublane multiples by the caller
+(ops.py) so the MXU sees aligned tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lstm_kernel(x_ref, w_ref, u_ref, b_ref, out_ref, h_scr, c_scr, *,
+                 hidden: int, seq_len: int):
+    """One (batch-tile, timestep) grid cell."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+        c_scr[...] = jnp.zeros_like(c_scr)
+
+    x_t = x_ref[:, 0, :]                                   # [bt, in]
+    h = h_scr[...]
+    c = c_scr[...]
+
+    z = (jnp.dot(x_t, w_ref[...], preferred_element_type=jnp.float32)
+         + jnp.dot(h, u_ref[...], preferred_element_type=jnp.float32)
+         + b_ref[...][None, :])                            # [bt, 4h]
+
+    i = jax.nn.sigmoid(z[:, :hidden])
+    f = jax.nn.sigmoid(z[:, hidden:2 * hidden])
+    g = jnp.tanh(z[:, 2 * hidden:3 * hidden])
+    o = jax.nn.sigmoid(z[:, 3 * hidden:])
+
+    c_new = f * c + i * g                                  # Hadamard products
+    h_new = o * jnp.tanh(c_new)
+    h_scr[...] = h_new
+    c_scr[...] = c_new
+
+    @pl.when(t == seq_len - 1)
+    def _emit():
+        out_ref[...] = h_new.astype(out_ref.dtype)
+
+
+def lstm_scan_pallas(xs: jax.Array, W: jax.Array, U: jax.Array,
+                     b: jax.Array, *, block_batch: int = 128,
+                     interpret: bool = True) -> jax.Array:
+    """xs: [B, T, in]; W: [in, 4h]; U: [h, 4h]; b: [4h] -> final h [B, h].
+
+    The caller (ops.py) pads B to block_batch and hidden/in to lane
+    multiples; this function assumes aligned shapes.
+    """
+    B, T, fin = xs.shape
+    hidden = U.shape[0]
+    assert B % block_batch == 0
+
+    kernel = functools.partial(_lstm_kernel, hidden=hidden, seq_len=T)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // block_batch, T),
+        in_specs=[
+            pl.BlockSpec((block_batch, 1, fin), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((fin, 4 * hidden), lambda i, t: (0, 0)),
+            pl.BlockSpec((hidden, 4 * hidden), lambda i, t: (0, 0)),
+            pl.BlockSpec((4 * hidden,), lambda i, t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_batch, hidden), lambda i, t: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, hidden), xs.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_batch, hidden), jnp.float32),
+            pltpu.VMEM((block_batch, hidden), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xs, W, U, b)

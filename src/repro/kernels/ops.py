@@ -1,0 +1,103 @@
+"""Jit'd public wrappers around the Pallas kernels: padding to hardware-
+aligned tiles, dtype handling, interpret-mode selection (CPU container runs
+interpret=True; on a real TPU set REPRO_PALLAS_INTERPRET=0)."""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FixedPointConfig
+from repro.kernels.fixed_point import fixed_point_pallas
+from repro.kernels.gru_scan import gru_scan_pallas
+from repro.kernels.hadamard import hadamard_pallas
+from repro.kernels.lstm_scan import lstm_scan_pallas
+from repro.kernels.reuse_matmul import reuse_matmul_pallas
+from repro.kernels.rglru_scan import rglru_scan_pallas
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("block_batch",))
+def lstm_scan(xs, W, U, b, *, block_batch: int = 128):
+    """[B, T, in] -> final hidden [B, h]. Pads batch to the block size."""
+    B = xs.shape[0]
+    bt = min(block_batch, max(8, B))
+    xs_p = _pad_axis(xs, 0, bt)
+    out = lstm_scan_pallas(xs_p, W, U, b, block_batch=bt,
+                           interpret=_interpret())
+    return out[:B]
+
+
+@partial(jax.jit, static_argnames=("block_batch",))
+def gru_scan(xs, W, U, b, *, block_batch: int = 128):
+    B = xs.shape[0]
+    bt = min(block_batch, max(8, B))
+    xs_p = _pad_axis(xs, 0, bt)
+    out = gru_scan_pallas(xs_p, W, U, b, block_batch=bt,
+                          interpret=_interpret())
+    return out[:B]
+
+
+@jax.jit
+def hadamard(a, b):
+    shape = a.shape
+    rows = a.size // shape[-1]
+    a2 = a.reshape(rows, shape[-1])
+    b2 = b.reshape(rows, shape[-1])
+    bn = min(1024, rows)
+    a2 = _pad_axis(a2, 0, bn)
+    b2 = _pad_axis(b2, 0, bn)
+    out = hadamard_pallas(a2, b2, block=bn, interpret=_interpret())
+    return out[:rows].reshape(shape)
+
+
+def fixed_point(x, fp: FixedPointConfig):
+    @jax.jit
+    def run(x):
+        shape = x.shape
+        x2 = x.reshape(-1, shape[-1])
+        bn = min(1024, x2.shape[0])
+        x2 = _pad_axis(x2, 0, bn)
+        out = fixed_point_pallas(x2, fp, block=bn, interpret=_interpret())
+        return out[: (x.size // shape[-1])].reshape(shape)
+    return run(x)
+
+
+@partial(jax.jit, static_argnames=("block_batch", "block_width"))
+def rglru_scan(a, bx, *, block_batch: int = 8, block_width: int = 128):
+    """a, bx: [B, T, W] -> all recurrence states [B, T, W]."""
+    B, T, W = a.shape
+    bb = min(block_batch, max(1, B))
+    bw = min(block_width, W)
+    a_p = _pad_axis(_pad_axis(a, 0, bb), 2, bw)
+    b_p = _pad_axis(_pad_axis(bx, 0, bb), 2, bw)
+    out = rglru_scan_pallas(a_p, b_p, block_batch=bb, block_width=bw,
+                            interpret=_interpret())
+    return out[:B, :, :W]
+
+
+@partial(jax.jit, static_argnames=("reuse", "block_m"))
+def reuse_matmul(x, w, *, reuse: int = 1, block_m: int = 128):
+    """[M, K] @ [K, N] with K serialized into `reuse` passes."""
+    M, K = x.shape
+    bm = min(block_m, max(8, M))
+    x_p = _pad_axis(x, 0, bm)
+    out = reuse_matmul_pallas(x_p, w, reuse=reuse, block_m=bm,
+                              interpret=_interpret())
+    return out[:M]

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FixedPointConfig
+
+
+def lstm_scan_ref(xs: jax.Array, W: jax.Array, U: jax.Array,
+                  b: jax.Array) -> jax.Array:
+    """xs: [B, T, in] -> final h [B, h] (Keras gate order i|f|c|o)."""
+    B, T, _ = xs.shape
+    h = U.shape[0]
+
+    def step(carry, x_t):
+        hp, cp = carry
+        z = (x_t @ W + hp @ U + b).astype(jnp.float32)
+        i = jax.nn.sigmoid(z[:, :h])
+        f = jax.nn.sigmoid(z[:, h:2 * h])
+        g = jnp.tanh(z[:, 2 * h:3 * h])
+        o = jax.nn.sigmoid(z[:, 3 * h:])
+        c = f * cp + i * g
+        hn = o * jnp.tanh(c)
+        return (hn, c), None
+
+    init = (jnp.zeros((B, h), jnp.float32), jnp.zeros((B, h), jnp.float32))
+    (hf, _), _ = jax.lax.scan(step, init, jnp.moveaxis(xs, 1, 0))
+    return hf.astype(xs.dtype)
+
+
+def gru_scan_ref(xs: jax.Array, W: jax.Array, U: jax.Array,
+                 b: jax.Array) -> jax.Array:
+    """xs: [B, T, in] -> final h [B, h] (reset_after; b: [2, 3h])."""
+    B, T, _ = xs.shape
+    h = U.shape[0]
+
+    def step(hp, x_t):
+        zx = (x_t @ W + b[0]).astype(jnp.float32)
+        zh = (hp @ U + b[1]).astype(jnp.float32)
+        z = jax.nn.sigmoid(zx[:, :h] + zh[:, :h])
+        r = jax.nn.sigmoid(zx[:, h:2 * h] + zh[:, h:2 * h])
+        hh = jnp.tanh(zx[:, 2 * h:] + r * zh[:, 2 * h:])
+        hn = z * hp + (1.0 - z) * hh
+        return hn, None
+
+    hf, _ = jax.lax.scan(step, jnp.zeros((B, h), jnp.float32),
+                         jnp.moveaxis(xs, 1, 0))
+    return hf.astype(xs.dtype)
+
+
+def hadamard_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a * b
+
+
+def fixed_point_ref(x: jax.Array, fp: FixedPointConfig) -> jax.Array:
+    from repro.core.quant.fixed_point import quantize
+    return quantize(x, fp)
+
+
+def rglru_scan_ref(a: jax.Array, bx: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + bx_t over axis 1 -> all states [B, T, W]."""
+    def step(hp, inp):
+        a_t, b_t = inp
+        hn = a_t.astype(jnp.float32) * hp + b_t.astype(jnp.float32)
+        return hn, hn
+
+    B, T, W = a.shape
+    _, hs = jax.lax.scan(step, jnp.zeros((B, W), jnp.float32),
+                         (jnp.moveaxis(a, 1, 0), jnp.moveaxis(bx, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype)
+
+
+def reuse_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)

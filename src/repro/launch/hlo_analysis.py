@@ -1,0 +1,210 @@
+"""Post-SPMD HLO text analysis: collective bytes with while-loop trip-count
+scaling (scan over layers / microbatches executes its body N times — XLA
+records ``known_trip_count`` in the while op's backend_config).
+
+Outputs per-device "wire bytes" per collective kind using ring-algorithm
+cost models:
+  all-gather      : out_shard x (n-1)          (each device forwards n-1 shards)
+  reduce-scatter  : in_shard  x (n-1)/n
+  all-reduce      : 2 x operand x (n-1)/n      (RS + AG)
+  all-to-all      : operand x (n-1)/n
+  collective-permute : operand
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'f32[8,32]' -> bytes; tuples '(f32[2], f32[4])' -> sum."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    computation: str
+    result_bytes: int
+    operand_bytes: int
+    group_size: int
+    count: int = 1          # execution multiplier (while trip counts)
+    is_f32: bool = False    # result dtype is f32 in the compiled HLO
+
+    @property
+    def wire_bytes(self) -> float:
+        n = max(self.group_size, 2)
+        if self.kind == "all-gather":
+            return self.result_bytes * (n - 1) / n
+        if self.kind == "all-reduce":
+            return 2.0 * self.operand_bytes * (n - 1) / n
+        if self.kind == "reduce-scatter":
+            return self.operand_bytes * (n - 1) / n
+        if self.kind == "all-to-all":
+            return self.operand_bytes * (n - 1) / n
+        return float(self.operand_bytes)  # collective-permute
+
+    @property
+    def wire_bytes_bf16(self) -> float:
+        """bf16-target equivalent: XLA's CPU backend legalizes bf16 arith to
+        f32, doubling every tensor in the compiled HLO vs the TPU target.
+        f32 collectives are counted at half width under this correction."""
+        return self.wire_bytes * (0.5 if self.is_f32 else 1.0)
+
+
+@dataclass
+class HloAnalysis:
+    collectives: List[CollectiveOp] = field(default_factory=list)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(c.wire_bytes * c.count for c in self.collectives)
+
+    @property
+    def total_wire_bytes_bf16(self) -> float:
+        return sum(c.wire_bytes_bf16 * c.count for c in self.collectives)
+
+    def by_kind(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for c in self.collectives:
+            out[c.kind] = out.get(c.kind, 0.0) + c.wire_bytes * c.count
+        return out
+
+    def op_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for c in self.collectives:
+            out[c.kind] = out.get(c.kind, 0) + c.count
+        return out
+
+
+_COMP_START = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^)]*\)|[\w]+\[[\d,]*\](?:\{[^}]*\})?)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|body|condition)=%?([\w\.\-]+)")
+
+
+def analyze_hlo(hlo_text: str) -> HloAnalysis:
+    lines = hlo_text.splitlines()
+
+    # pass 1: computation blocks, per-comp symbol tables, while edges
+    comp = None
+    sym: Dict[str, Dict[str, int]] = {}
+    comp_collectives: Dict[str, List[Tuple[str, str, int, List[str]]]] = {}
+    edges: Dict[str, List[Tuple[str, int]]] = {}   # comp -> [(callee, mult)]
+    entry = None
+
+    for raw in lines:
+        line = raw.rstrip()
+        m = _COMP_START.match(line.strip())
+        if m:
+            comp = m.group(2)
+            sym.setdefault(comp, {})
+            comp_collectives.setdefault(comp, [])
+            edges.setdefault(comp, [])
+            if m.group(1):
+                entry = comp
+            continue
+        if comp is None:
+            continue
+        dm = _DEF_RE.match(line)
+        if dm:
+            sym[comp][dm.group(1)] = _shape_bytes(dm.group(2))
+        # while -> body/cond with trip count
+        if re.search(r"\bwhile\(", line):
+            trip = 1
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trip = int(tm.group(1))
+            for cm in _CALL_RE.finditer(line):
+                edges[comp].append((cm.group(1), trip))
+        elif "to_apply=" in line and ("call(" in line or "fusion(" in line
+                                      or "reduce(" in line or "sort(" in line
+                                      or "scatter(" in line or "map(" in line
+                                      or "conditional(" in line):
+            for cm in _CALL_RE.finditer(line):
+                edges[comp].append((cm.group(1), 1))
+        # collectives
+        for kind in _COLLECTIVES:
+            if re.search(rf"\b{kind}(?:-start)?\(", line):
+                if kind == "all-reduce" and "all-reduce-done" in line:
+                    continue
+                if "-done(" in line:
+                    continue
+                dm2 = _DEF_RE.match(line)
+                result_bytes = _shape_bytes(dm2.group(2)) if dm2 else 0
+                gsize = 0
+                gm = _GROUPS_RE.search(line)
+                if gm:
+                    gsize = int(gm.group(2))
+                else:
+                    gl = _GROUPS_LIST_RE.search(line)
+                    if gl:
+                        first = gl.group(1).split("}")[0].strip("{ ")
+                        gsize = len([x for x in first.split(",") if x.strip()])
+                # operand names
+                call = line.split(f"{kind}(", 1)
+                if len(call) < 2 and f"{kind}-start(" in line:
+                    call = line.split(f"{kind}-start(", 1)
+                opnames = []
+                if len(call) == 2:
+                    args = call[1].split(")")[0]
+                    opnames = re.findall(r"%([\w\.\-]+)", args)
+                is_f32 = bool(dm2) and dm2.group(2).startswith(("f32", "(f32"))
+                comp_collectives[comp].append((kind, result_bytes, gsize,
+                                               opnames, is_f32))
+                break
+
+    # pass 2: execution counts via call-graph walk from ENTRY
+    counts: Dict[str, int] = {}
+
+    def visit(c: str, mult: int):
+        counts[c] = counts.get(c, 0) + mult
+        for callee, m in edges.get(c, []):
+            if callee != c:
+                visit(callee, mult * m)
+
+    if entry is not None:
+        visit(entry, 1)
+    else:  # fall back: every computation counts once
+        for c in sym:
+            counts[c] = 1
+
+    out = HloAnalysis()
+    for c, colls in comp_collectives.items():
+        mult = counts.get(c, 0)
+        if mult == 0:
+            continue
+        for kind, result_bytes, gsize, opnames, is_f32 in colls:
+            operand_bytes = sum(sym[c].get(n, 0) for n in opnames)
+            if operand_bytes == 0:
+                operand_bytes = result_bytes
+            out.collectives.append(CollectiveOp(
+                kind=kind, computation=c, result_bytes=result_bytes,
+                operand_bytes=operand_bytes, group_size=max(gsize, 1),
+                count=mult, is_f32=is_f32))
+    return out

@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run path.
+
+``input_specs(cfg, shape, ctx)`` returns (args, kwargs-free) for the step
+function of the shape's kind, with NamedShardings attached so ``jit(...).
+lower(*args)`` sees the production layout without allocating anything.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models.decode import cache_specs
+from repro.models.init import abstract_params
+from repro.sharding.api import ShardingContext
+
+WHISPER_TEXT_LEN = 448
+
+
+def _sds(shape, dtype, ctx: Optional[ShardingContext], axes):
+    sharding = None
+    if ctx is not None:
+        sharding = NamedSharding(ctx.mesh, ctx.pspec(axes))
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=sharding)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                ctx: Optional[ShardingContext]) -> Dict:
+    """Training/prefill batch: tokens/labels (+ frontend stubs)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "rnn":
+        r = cfg.rnn
+        return {
+            "x": _sds((B, r.seq_len, r.input_size), "float32", ctx,
+                      ("batch", None, None)),
+            "y": _sds((B,), "int32", ctx, ("batch",)),
+        }
+    if cfg.enc_dec:
+        out = {
+            "frame_embeds": _sds((B, S, cfg.d_model), cfg.compute_dtype, ctx,
+                                 ("batch", None, None)),
+            "tokens": _sds((B, WHISPER_TEXT_LEN), "int32", ctx, ("batch", None)),
+        }
+        if shape.kind == "train":
+            out["labels"] = _sds((B, WHISPER_TEXT_LEN), "int32", ctx,
+                                 ("batch", None))
+        return out
+    if cfg.frontend == "vision":
+        n_img = cfg.n_frontend_tokens
+        out = {
+            "tokens": _sds((B, S - n_img), "int32", ctx, ("batch", None)),
+            "img_embeds": _sds((B, n_img, cfg.d_model), cfg.compute_dtype,
+                               ctx, ("batch", None, None)),
+        }
+        if shape.kind == "train":
+            out["labels"] = _sds((B, S), "int32", ctx, ("batch", None))
+        return out
+    out = {"tokens": _sds((B, S), "int32", ctx, ("batch", None))}
+    if shape.kind == "train":
+        out["labels"] = _sds((B, S), "int32", ctx, ("batch", None))
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                       ctx: Optional[ShardingContext]) -> Tuple[Dict, Dict, object, object]:
+    """(cache, tokens, pos) abstract inputs for decode_step."""
+    B, S = shape.global_batch, shape.seq_len
+    cspecs = cache_specs(cfg, B, S)
+    cache = abstract_params(cspecs, ctx)
+    tokens = _sds((B, 1), "int32", ctx, ("batch", None))
+    pos = _sds((B,), "int32", ctx, ("batch",))
+    return cache, tokens, pos

@@ -1,0 +1,25 @@
+"""Production mesh builders.
+
+Single pod:  (data=16, model=16)            = 256 chips (TPU v5e pod)
+Multi-pod:   (pod=2, data=16, model=16)     = 512 chips
+
+Functions (not module constants) so importing never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Arbitrary mesh (tests use (2,4) etc. on 8 host devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))

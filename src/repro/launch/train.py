@@ -1,0 +1,142 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [options]``.
+
+Full production path: mesh + sharding context + sharded params/opt state +
+microbatched train step + checkpoint manager + fault-tolerance hooks.  On
+this CPU container it runs the small configs (paper taggers, tiny variants)
+for real; large archs are exercised through the dry-run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.config import OptimizerConfig, TrainConfig
+from repro.data import (flavor_tagging_dataset, lm_token_stream,
+                        quickdraw_dataset, top_tagging_dataset)
+from repro.ft import StragglerPolicy
+from repro.launch.mesh import make_mesh
+from repro.models.init import param_shardings
+from repro.models.model import build_model
+from repro.registry import get_config
+from repro.sharding.api import sharding_context
+from repro.sharding.auto import auto_overrides
+from repro.testing import tiny_config
+from repro.training import adamw_init, make_train_step
+
+RNN_DATA = {
+    "top-tagging": top_tagging_dataset,
+    "flavor-tagging": flavor_tagging_dataset,
+    "quickdraw": quickdraw_dataset,
+}
+
+
+def _rnn_batches(cfg, batch, seed=0):
+    for key, fn in RNN_DATA.items():
+        if key in cfg.name:
+            x, y = fn(4096, seed=seed)
+            step = 0
+            while True:
+                idx = np.random.RandomState(step).randint(0, len(x), batch)
+                yield {"x": jnp.asarray(x[idx]), "y": jnp.asarray(y[idx])}
+                step += 1
+    raise KeyError(cfg.name)
+
+
+def train(arch: str, steps: int = 100, batch: int = 64, lr: float = 1e-3,
+          seq_len: int = 128, mesh_shape: Optional[tuple] = None,
+          checkpoint_dir: Optional[str] = None, resume: bool = False,
+          tiny: bool = False, log_every: int = 10):
+    cfg = get_config(arch)
+    if tiny:
+        cfg = tiny_config(cfg)
+        cfg = cfg.replace(param_dtype="float32", compute_dtype="float32")
+    model = build_model(cfg)
+
+    mesh = None
+    if mesh_shape:
+        mesh = make_mesh(mesh_shape, ("data", "model")[: len(mesh_shape)]
+                         if len(mesh_shape) > 1 else ("data",))
+
+    opt_cfg = OptimizerConfig(lr=lr, warmup_steps=min(20, steps // 5 + 1),
+                              total_steps=steps, weight_decay=0.01)
+    tc = TrainConfig(optimizer=opt_cfg)
+    ckpt = CheckpointManager(checkpoint_dir) if checkpoint_dir else None
+    straggler = StragglerPolicy()
+
+    ov = auto_overrides(cfg, mesh) if mesh is not None else None
+    with sharding_context(mesh, cfg.family, "train", ov):
+        params = model.init(jax.random.PRNGKey(0))
+        if mesh is not None:
+            shardings = param_shardings(model.param_specs(),
+                                        __import__("repro.sharding.api",
+                                                   fromlist=["current_context"]
+                                                   ).current_context())
+            params = {k: jax.device_put(v, shardings[k])
+                      for k, v in params.items()}
+        opt_state = adamw_init(params, opt_cfg)
+        start = 0
+        if ckpt and resume and ckpt.latest_step() is not None:
+            start, params, opt = ckpt.restore()
+            if opt:
+                opt_state = opt_state._replace(
+                    step=jnp.asarray(opt["step"], jnp.int32),
+                    m=opt["m"], v=opt["v"])
+            print(f"[train] resumed from step {start}")
+
+        step_fn = jax.jit(make_train_step(model, tc, grad_accum=1),
+                          donate_argnums=(0, 1))
+
+        if cfg.family == "rnn":
+            batches = _rnn_batches(cfg, batch)
+        else:
+            stream = lm_token_stream(cfg.vocab_size, batch, seq_len)
+            batches = ({"tokens": jnp.asarray(b["tokens"]),
+                        "labels": jnp.asarray(b["labels"])} for b in stream)
+
+        t_last = time.time()
+        loss = float("nan")
+        for i in range(start, steps):
+            t0 = time.time()
+            params, opt_state, metrics = step_fn(params, opt_state,
+                                                 next(batches))
+            straggler.record_step(0, time.time() - t0)
+            if (i + 1) % log_every == 0 or i == steps - 1:
+                loss = float(metrics["loss"])
+                dt = (time.time() - t_last) / log_every
+                t_last = time.time()
+                print(f"[train] step {i+1}/{steps} loss={loss:.4f} "
+                      f"acc={float(metrics.get('accuracy', 0)):.3f} "
+                      f"{dt*1e3:.0f}ms/step", flush=True)
+            if ckpt and (i + 1) % tc.checkpoint_every == 0:
+                ckpt.save(i + 1, params, opt_state)
+        if ckpt:
+            ckpt.save(steps, params, opt_state)
+    return params, loss
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced config (CPU-runnable for any arch)")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    train(args.arch, args.steps, args.batch, args.lr, args.seq_len,
+          checkpoint_dir=args.checkpoint_dir, resume=args.resume,
+          tiny=args.tiny)
+
+
+if __name__ == "__main__":
+    main()

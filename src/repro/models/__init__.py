@@ -1,0 +1,8 @@
+"""Model zoo. Lazy exports to avoid import cycles with repro.core."""
+
+
+def __getattr__(name):
+    if name in ("build_model", "Model"):
+        from repro.models import model as _m
+        return getattr(_m, name)
+    raise AttributeError(name)

@@ -1,0 +1,241 @@
+"""Attention: GQA/MQA, blockwise (memory-linear) causal/local/bidirectional,
+cross-attention, and decode attention over a (possibly seq-sharded) KV cache.
+
+The causal path uses an *unrolled triangular block schedule*: a python loop
+over query chunks, each attending only to its kv prefix via an inner
+``lax.scan`` with online-softmax (flash-style) f32 accumulators.  This makes
+the compiled FLOPs exactly the triangular count (no masked-out waste) while
+keeping peak memory at chunk x chunk.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.api import constrain
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: [b, sq, h, d], k: [b, sk, hk, d] -> scores [b, h, sq, sk] (f32)."""
+    b, sq, h, d = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, sq, hk, g, d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32)
+    return s.reshape(b, hk * g, sq, k.shape[1])
+
+
+def _gqa_values(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p: [b, h, sq, sk] (f32), v: [b, sk, hk, d] -> [b, sq, h, d]."""
+    b, h, sq, sk = p.shape
+    hk = v.shape[2]
+    g = h // hk
+    pg = p.reshape(b, hk, g, sq, sk)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pg, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, v.shape[-1])
+
+
+def _chunk_scores_block(q, k, v, bias):
+    """One (q-chunk, kv-chunk) block -> (scores_max, exp_sum, weighted_v)."""
+    s = _gqa_scores(q, k)                                  # [b,h,cq,ck] f32
+    if bias is not None:
+        s = s + bias
+    m = jnp.max(s, axis=-1)                                # [b,h,cq]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)                                # [b,h,cq]
+    o = _gqa_values(p, v)                                  # [b,cq,h,d] f32
+    return m, l, o
+
+
+def _merge(acc, m, l, o):
+    """Online-softmax merge of a new block into (m_acc, l_acc, o_acc)."""
+    m_acc, l_acc, o_acc = acc
+    m_new = jnp.maximum(m_acc, m)
+    c_old = jnp.exp(m_acc - m_new)
+    c_new = jnp.exp(m - m_new)
+    l_new = l_acc * c_old + l * c_new
+    # o carried as [b, cq, h, d]; coefficients are [b, h, cq]
+    co = jnp.transpose(c_old, (0, 2, 1))[..., None]
+    cn = jnp.transpose(c_new, (0, 2, 1))[..., None]
+    o_new = o_acc * co + o * cn
+    return m_new, l_new, o_new
+
+
+def _finalize(m, l, o):
+    li = jnp.transpose(1.0 / jnp.maximum(l, 1e-30), (0, 2, 1))[..., None]
+    return o * li
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    scale: Optional[float] = None,
+    chunk_q: int = 1024,
+    chunk_kv: int = 2048,
+    window: int = 0,
+    q_offset: int = 0,
+    unroll_kv: bool = False,
+) -> jax.Array:
+    """Memory-linear attention. q: [b,sq,h,d], k/v: [b,sk,hk,d] -> [b,sq,h,d].
+
+    causal=True uses the triangular unrolled schedule (exact FLOPs).
+    window>0 additionally restricts attention to the last `window` positions.
+    q_offset: absolute position of q[0] relative to k[0] (decode/cross-chunk).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    q = (q * scale).astype(q.dtype)
+
+    cq = min(chunk_q, sq)
+    ck = min(chunk_kv, sk)
+    nq = -(-sq // cq)
+    # pad to chunk multiples
+    pad_q = nq * cq - sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    nk = -(-sk // ck)
+    pad_k = nk * ck - sk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    k_chunks = k.reshape(b, nk, ck, *k.shape[2:])
+    v_chunks = v.reshape(b, nk, ck, *v.shape[2:])
+
+    q_pos_base = jnp.arange(cq)
+    k_pos_base = jnp.arange(ck)
+
+    outs = []
+    for i in range(nq):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=1)
+        q_pos = q_pos_base + i * cq + q_offset
+        # kv prefix this q-chunk can see (static per i -> exact FLOPs)
+        if causal:
+            hi = min(nk, -(-(i * cq + cq + q_offset) // ck))
+            hi = max(hi, 1)
+        else:
+            hi = nk
+        kci = k_chunks[:, :hi]
+        vci = v_chunks[:, :hi]
+
+        def kv_step(acc, inputs):
+            kc, vc, j = inputs
+            k_pos = k_pos_base + j * ck
+            bias = jnp.zeros((cq, ck), jnp.float32)
+            if causal:
+                bias = jnp.where(k_pos[None, :] > q_pos[:, None], NEG_INF, bias)
+            if window > 0:
+                bias = jnp.where(
+                    k_pos[None, :] <= q_pos[:, None] - window, NEG_INF, bias)
+            if pad_k:
+                bias = jnp.where(k_pos[None, :] >= sk, NEG_INF, bias)
+            m, l, o = _chunk_scores_block(qi, kc, vc, bias[None, None])
+            return _merge(acc, m, l, o), ()
+
+        acc0 = (
+            jnp.full((b, h, cq), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, cq), jnp.float32),
+            jnp.zeros((b, cq, h, d), jnp.float32),
+        )
+        if unroll_kv:
+            acc = acc0
+            for j in range(hi):
+                acc, _ = kv_step(acc, (kci[:, j], vci[:, j], jnp.int32(j)))
+            m, l, o = acc
+        else:
+            (m, l, o), _ = jax.lax.scan(
+                kv_step, acc0,
+                (jnp.moveaxis(kci, 1, 0), jnp.moveaxis(vci, 1, 0),
+                 jnp.arange(hi)))
+        outs.append(_finalize(m, l, o))
+
+    out = jnp.concatenate(outs, axis=1)[:, :sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full (einsum) attention — used for short sequences & reference in tests
+# ---------------------------------------------------------------------------
+
+
+def full_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool, scale: Optional[float] = None, window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = _gqa_scores(q * scale, k)                          # [b,h,sq,sk]
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(sk)
+    if causal:
+        s = jnp.where(k_pos[None, :] > q_pos[:, None], NEG_INF, s)
+    if window > 0:
+        s = jnp.where(k_pos[None, :] <= q_pos[:, None] - window, NEG_INF, s)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _gqa_values(p, v)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention over a KV cache (single new token per sequence)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array,          # [b, 1, h, d]
+    k_cache: jax.Array,    # [b, S, hk, d]  (seq dim may be mesh-sharded)
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # [b] valid lengths
+    *,
+    scale: Optional[float] = None,
+    window: int = 0,
+) -> jax.Array:
+    """Masked attention over the cache. Works under GSPMD with the cache's
+    seq dim sharded over 'model': the max/sum reductions become cross-device
+    collectives (flash-decode semantics, XLA-partitioned)."""
+    b, _, h, d = q.shape
+    S = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = _gqa_scores(q * scale, k_cache)                    # [b,h,1,S] f32
+    pos = jnp.arange(S)
+    mask = pos[None, :] >= cache_len[:, None]              # [b,S]
+    if window > 0:
+        mask = mask | (pos[None, :] <= (cache_len[:, None] - 1 - window))
+    s = jnp.where(mask[:, None, None, :], NEG_INF, s)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = _gqa_values(p / jnp.maximum(l, 1e-30), v_cache)    # [b,1,h,d]
+    return o.astype(q.dtype)
+
+
+def decode_attention_masked(
+    q: jax.Array,          # [b, 1, h, d]
+    k_cache: jax.Array,    # [b, S, hk, d]
+    v_cache: jax.Array,
+    valid: jax.Array,      # [b, S] bool — which slots participate
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Decode attention with an explicit slot-validity mask (ring buffers)."""
+    b, _, h, d = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = _gqa_scores(q * scale, k_cache)                    # [b,h,1,S]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = _gqa_values(p / jnp.maximum(l, 1e-30), v_cache)
+    return o.astype(q.dtype)

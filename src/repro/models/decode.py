@@ -1,0 +1,327 @@
+"""Single-token decode steps for every family — the paper's "static mode"
+state update at LLM scale: state (KV cache / SSM state / LRU state) is
+resident, one block processes each new element, II = 1 step.
+
+Cache layout is spec-driven (same machinery as params) so dry-run lowering
+gets correctly sharded ShapeDtypeStructs: KV caches shard their sequence dim
+over 'model' (flash-decode: the softmax max/sum reductions partition across
+the TP axis), batch over the data axes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import transformer as tf
+from repro.models.attention import decode_attention, decode_attention_masked
+from repro.models.init import ParamSpec, ParamSpecs
+from repro.models.layers import apply_rope, embed, norm
+from repro.models.moe import moe_block
+from repro.models.mlp import mlp
+from repro.models.rglru import rglru_decode_step
+from repro.models.ssm import ssm_decode_step, ssm_dims
+from repro.sharding.api import constrain
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                cache_dtype: str = "bfloat16") -> ParamSpecs:
+    L, hk, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    kv_axes = ("layers", "batch", "kv_seq", "kv_heads_r", "head_dim")
+    specs: ParamSpecs = {}
+    if cfg.family == "ssm":
+        d_in, h, conv_dim = ssm_dims(cfg)
+        s = cfg.ssm
+        specs["cache/state"] = ParamSpec(
+            (L, batch, h, s.head_dim, s.d_state),
+            ("layers", "batch", "ssm_heads", None, None), "zeros", "float32")
+        specs["cache/conv"] = ParamSpec(
+            (L, batch, s.d_conv - 1, conv_dim),
+            ("layers", "batch", None, "ssm_inner"), "zeros", cache_dtype)
+        return specs
+    if cfg.family == "hybrid":
+        rg = cfg.rglru
+        w = rg.lru_width or cfg.d_model
+        n_super, rem = divmod(cfg.n_layers, len(rg.pattern))
+        for grp, n in (("hyb", n_super),) + tuple(
+                (f"hybrem{j}", 1) for j in range(rem)):
+            pats = list(enumerate(rg.pattern)) if grp == "hyb" else [
+                (int(grp[6:]), rg.pattern[int(grp[6:])])]
+            for j, kind in pats:
+                pre = f"cache/{grp}{j}" if grp == "hyb" else f"cache/{grp}"
+                lead = (n, batch) if grp == "hyb" else (batch,)
+                la = ("layers", "batch") if grp == "hyb" else ("batch",)
+                if kind == "rglru":
+                    specs[f"{pre}_state"] = ParamSpec(
+                        lead + (w,), la + ("lru_width",), "zeros", "float32")
+                    specs[f"{pre}_conv"] = ParamSpec(
+                        lead + (rg.conv_width - 1, w), la + (None, "lru_width"),
+                        "zeros", cache_dtype)
+                else:
+                    W = min(rg.window, max_len)
+                    specs[f"{pre}_k"] = ParamSpec(
+                        lead + (W, hk, hd), la + ("kv_seq", "kv_heads_r", "head_dim"),
+                        "zeros", cache_dtype)
+                    specs[f"{pre}_v"] = ParamSpec(
+                        lead + (W, hk, hd), la + ("kv_seq", "kv_heads_r", "head_dim"),
+                        "zeros", cache_dtype)
+                    specs[f"{pre}_pos"] = ParamSpec(
+                        lead + (W,), la + ("kv_seq",), "zeros", "int32")
+        return specs
+    if cfg.enc_dec:
+        Ld = cfg.n_decoder_layers
+        specs["cache/k"] = ParamSpec((Ld, batch, max_len, hk, hd), kv_axes,
+                                     "zeros", cache_dtype)
+        specs["cache/v"] = ParamSpec((Ld, batch, max_len, hk, hd), kv_axes,
+                                     "zeros", cache_dtype)
+        specs["cache/xk"] = ParamSpec((Ld, batch, max_len, hk, hd), kv_axes,
+                                      "zeros", cache_dtype)
+        specs["cache/xv"] = ParamSpec((Ld, batch, max_len, hk, hd), kv_axes,
+                                      "zeros", cache_dtype)
+        return specs
+    # dense / moe / vlm
+    specs["cache/k"] = ParamSpec((L, batch, max_len, hk, hd), kv_axes,
+                                 "zeros", cache_dtype)
+    specs["cache/v"] = ParamSpec((L, batch, max_len, hk, hd), kv_axes,
+                                 "zeros", cache_dtype)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def _update_cache(cache_l: jax.Array, new: jax.Array, pos: jax.Array):
+    """cache_l: [b, S, hk, hd]; new: [b, 1, hk, hd]; pos: [b].
+
+    One-hot masked write instead of per-batch dynamic_update_slice: under
+    GSPMD the select keeps the cache's (batch, seq) sharding intact, where a
+    scatter would trigger 'involuntary full rematerialization' (replicating
+    the whole cache — the 19GiB decode peaks in the baseline dry-run)."""
+    S = cache_l.shape[1]
+    sel = (jnp.arange(S)[None, :] == pos[:, None])         # [b, S]
+    return jnp.where(sel[..., None, None], new.astype(cache_l.dtype), cache_l)
+
+
+def _ring_write(cache_l, new, slot):
+    """cache_l: [b, W, hk, hd]; new: [b, 1, hk, hd]; slot: [b].
+    One-hot masked write (sharding-preserving, see _update_cache)."""
+    W = cache_l.shape[1]
+    sel = (jnp.arange(W)[None, :] == slot[:, None])
+    return jnp.where(sel[..., None, None], new.astype(cache_l.dtype), cache_l)
+
+
+def _ring_write_pos(pos_l, slot, pos):
+    """pos_l: [b, W] stores (absolute position + 1); 0 = empty slot."""
+    sel = (jnp.arange(pos_l.shape[1])[None, :] == slot[:, None])
+    return jnp.where(sel, pos[:, None] + 1, pos_l)
+
+
+def _qkv(cfg, x, p, pre, pos, rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p[f"{pre}/wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p[f"{pre}/wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p[f"{pre}/wv"].astype(x.dtype))
+    if rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_decode(cfg, x, p, pre, ck, cv, pos, window=0, rope=True):
+    """x: [b,1,d] pre-normed. Returns (out [b,1,d], new_ck, new_cv)."""
+    q, k, v = _qkv(cfg, x, p, pre, pos, rope)
+    ck = _update_cache(ck, k.astype(ck.dtype), pos)
+    cv = _update_cache(cv, v.astype(cv.dtype), pos)
+    ck = constrain(ck, "batch", "kv_seq", "kv_heads_r", "head_dim")
+    cv = constrain(cv, "batch", "kv_seq", "kv_heads_r", "head_dim")
+    o = decode_attention(q, ck.astype(x.dtype), cv.astype(x.dtype),
+                         pos + 1, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype),
+                     p[f"{pre}/wo"].astype(x.dtype))
+    return out, ck, cv
+
+
+# ---------------------------------------------------------------------------
+# Decode step (per family)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
+                tokens: jax.Array, pos: jax.Array
+                ) -> Tuple[jax.Array, Dict]:
+    """tokens: [b, 1] int32; pos: [b] current positions. Returns
+    (logits [b, 1, V], new cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = embed(tokens, params["embed/table"], cdt)
+    if cfg.family in ("dense", "vlm", "hybrid") or cfg.enc_dec:
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.enc_dec:
+        # whisper decoder: sinusoidal position at each sequence's pos
+        d = cfg.d_model
+        dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+        ang = pos[:, None].astype(jnp.float32) / jnp.power(10000.0, dim / d)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :d]
+        x = x + pe[:, None, :].astype(x.dtype)
+    new_cache = dict(cache)
+
+    if cfg.family == "ssm":
+        stacked = tf.slice_layer(params, "decoder/")
+
+        def body(h, xs):
+            p_l, st, cv = xs
+            hn = norm(cfg, h, p_l, "decoder/norm1")
+            out, (st2, cv2) = ssm_decode_step(cfg, hn, p_l, "decoder/ssm",
+                                              st, cv)
+            return h + out, (st2, cv2)
+
+        x, (st, cv) = jax.lax.scan(
+            body, x, (stacked, cache["cache/state"], cache["cache/conv"]))
+        new_cache["cache/state"], new_cache["cache/conv"] = st, cv
+
+    elif cfg.family == "hybrid":
+        rg = cfg.rglru
+        n_super, rem = divmod(cfg.n_layers, len(rg.pattern))
+        stacked = {k: v for k, v in params.items()
+                   if k.startswith("hyb") and not k.startswith("hybrem")}
+        cache_keys = sorted(k for k in cache if k.startswith("cache/hyb")
+                            and "rem" not in k)
+
+        def body(h, xs):
+            p_l = xs[0]
+            c_l = dict(zip(cache_keys, xs[1]))
+            new_c = []
+            for j, kind in enumerate(rg.pattern):
+                pre = f"hyb{j}"
+                hn = norm(cfg, h, p_l, f"{pre}/norm1")
+                if kind == "rglru":
+                    out, (st2, cv2) = rglru_decode_step(
+                        cfg, hn, p_l, f"{pre}/mix",
+                        c_l[f"cache/{pre}_state"], c_l[f"cache/{pre}_conv"])
+                    c_l[f"cache/{pre}_state"] = st2
+                    c_l[f"cache/{pre}_conv"] = cv2
+                else:
+                    out, ck, cv_, cp = _local_attn_decode(
+                        cfg, hn, p_l, f"{pre}/attn",
+                        c_l[f"cache/{pre}_k"], c_l[f"cache/{pre}_v"],
+                        c_l[f"cache/{pre}_pos"], pos, rg.window)
+                    c_l[f"cache/{pre}_k"] = ck
+                    c_l[f"cache/{pre}_v"] = cv_
+                    c_l[f"cache/{pre}_pos"] = cp
+                h = h + out
+                h2 = norm(cfg, h, p_l, f"{pre}/norm2")
+                h = h + mlp(cfg, h2, p_l, f"{pre}/mlp")
+            return h, tuple(c_l[k] for k in cache_keys)
+
+        x, new_vals = jax.lax.scan(
+            body, x, (stacked, tuple(cache[k] for k in cache_keys)))
+        for k, v in zip(cache_keys, new_vals):
+            new_cache[k] = v
+        for j in range(rem):
+            pre = f"hybrem{j}"
+            p_r = tf.slice_layer(params, f"{pre}/")
+            hn = norm(cfg, x, p_r, f"{pre}/norm1")
+            kind = rg.pattern[j]
+            if kind == "rglru":
+                out, (st2, cv2) = rglru_decode_step(
+                    cfg, hn, p_r, f"{pre}/mix",
+                    cache[f"cache/{pre}_state"], cache[f"cache/{pre}_conv"])
+                new_cache[f"cache/{pre}_state"] = st2
+                new_cache[f"cache/{pre}_conv"] = cv2
+            else:
+                out, ck, cv_, cp = _local_attn_decode(
+                    cfg, hn, p_r, f"{pre}/attn", cache[f"cache/{pre}_k"],
+                    cache[f"cache/{pre}_v"], cache[f"cache/{pre}_pos"],
+                    pos, rg.window)
+                new_cache[f"cache/{pre}_k"] = ck
+                new_cache[f"cache/{pre}_v"] = cv_
+                new_cache[f"cache/{pre}_pos"] = cp
+            x = x + out
+            h2 = norm(cfg, x, p_r, f"{pre}/norm2")
+            x = x + mlp(cfg, h2, p_r, f"{pre}/mlp")
+
+    elif cfg.enc_dec:
+        stacked = tf.slice_layer(params, "xdecoder/")
+
+        def body(h, xs):
+            p_l, ck, cv, xk, xv = xs
+            hn = norm(cfg, h, p_l, "xdecoder/norm1")
+            out, ck, cv = _attn_decode(cfg, hn, p_l, "xdecoder/attn",
+                                       ck, cv, pos, rope=False)
+            h = h + out
+            hx = norm(cfg, h, p_l, "xdecoder/norm_x")
+            qx = jnp.einsum("bsd,dhk->bshk", hx,
+                            p_l["xdecoder/xattn/wq"].astype(hx.dtype))
+            enc_len = jnp.full((h.shape[0],), xk.shape[1], jnp.int32)
+            ox = decode_attention(qx, xk.astype(hx.dtype),
+                                  xv.astype(hx.dtype), enc_len)
+            h = h + jnp.einsum("bshk,hkd->bsd", ox.astype(hx.dtype),
+                               p_l["xdecoder/xattn/wo"].astype(hx.dtype))
+            h2 = norm(cfg, h, p_l, "xdecoder/norm2")
+            h = h + mlp(cfg, h2, p_l, "xdecoder/mlp")
+            return h, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (stacked, cache["cache/k"], cache["cache/v"],
+                      cache["cache/xk"], cache["cache/xv"]))
+        new_cache["cache/k"], new_cache["cache/v"] = ck, cv
+
+    else:  # dense / moe / vlm
+        stacked = tf.slice_layer(params, "decoder/")
+
+        # §Perf D3: the cache lives in the scan CARRY and is updated in
+        # place with dynamic_update_index_in_dim — passing it as xs/ys
+        # double-buffers the full stacked cache (the 2x decode peaks in
+        # the v2 dry-run: stablelm 18.6GiB, phi3 22.5GiB).
+        def body(carry, p_l):
+            h, ck_all, cv_all, l = carry
+            ck = jax.lax.dynamic_index_in_dim(ck_all, l, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_all, l, 0, keepdims=False)
+            hn = norm(cfg, h, p_l, "decoder/norm1")
+            out, ck, cv = _attn_decode(cfg, hn, p_l, "decoder/attn", ck, cv,
+                                       pos, window=cfg.attn_window)
+            ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, l, 0)
+            cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, l, 0)
+            h = h + out
+            h2 = norm(cfg, h, p_l, "decoder/norm2")
+            if cfg.family == "moe":
+                out2, _ = moe_block(cfg, h2, p_l, "decoder/moe", train=False)
+            else:
+                out2 = mlp(cfg, h2, p_l, "decoder/mlp")
+            return (h + out2, ck_all, cv_all, l + 1), ()
+
+        (x, ck, cv, _), _ = jax.lax.scan(
+            body, (x, cache["cache/k"], cache["cache/v"], jnp.int32(0)),
+            stacked)
+        new_cache["cache/k"], new_cache["cache/v"] = ck, cv
+
+    x = norm(cfg, x, params, "final_norm")
+    logits = tf.logits_fn(cfg, params, x)
+    return logits, new_cache
+
+
+def _local_attn_decode(cfg, x, p, pre, ck, cv, cpos, pos, window):
+    """Ring-buffer windowed attention decode (Griffin local layers)."""
+    q, k, v = _qkv(cfg, x, p, pre, pos, rope=True)
+    W = ck.shape[1]
+    slot = jnp.mod(pos, W)
+    ck = _ring_write(ck, k.astype(ck.dtype), slot)
+    cv = _ring_write(cv, v.astype(cv.dtype), slot)
+    cpos = _ring_write_pos(cpos, slot, pos)
+    # slots hold pos+1 (0 = never written); window mask on absolute position
+    valid = (cpos > 0) & (cpos <= pos[:, None] + 1) & \
+            (cpos > pos[:, None] + 1 - window)
+    o = decode_attention_masked(q, ck.astype(x.dtype), cv.astype(x.dtype),
+                                valid)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype),
+                     p[f"{pre}/wo"].astype(x.dtype))
+    return out, ck, cv, cpos

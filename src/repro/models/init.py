@@ -1,0 +1,107 @@
+"""Parameter-spec machinery.
+
+Every model declares a flat ``{path: ParamSpec}`` dict.  From it we derive:
+  * materialized params (small configs, real runs),
+  * abstract params (ShapeDtypeStruct — dry-run lowering, no allocation),
+  * PartitionSpecs (via the active sharding context),
+all guaranteed consistent because they come from one source of truth.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding.api import ShardingContext
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | lecun | embed | rnn_ortho
+    dtype: str = "float32"
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (
+            f"spec rank mismatch: {self.shape} vs {self.logical_axes}")
+
+
+ParamSpecs = Dict[str, ParamSpec]
+Params = Dict[str, jax.Array]
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    if len(shape) == 1:
+        return shape[0]
+    # contraction dim is second-to-last by convention ([..., in, out])
+    return int(np.prod(shape[:-1]))
+
+
+def init_param(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    dtype = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        v = jax.random.normal(key, spec.shape, jnp.float32)
+        return (v * spec.scale).astype(dtype)
+    if spec.init in ("normal", "lecun"):
+        fan = _fan_in(spec.shape)
+        std = spec.scale / np.sqrt(max(fan, 1))
+        v = jax.random.truncated_normal(key, -2.0, 2.0, spec.shape, jnp.float32)
+        return (v * std).astype(dtype)
+    if spec.init == "rnn_ortho":
+        # orthogonal recurrent kernel (keras default for RNN recurrent weights)
+        rows, cols = spec.shape[-2], spec.shape[-1]
+        n = max(rows, cols)
+        a = jax.random.normal(key, spec.shape[:-2] + (n, n), jnp.float32)
+        q, _ = jnp.linalg.qr(a)
+        return (q[..., :rows, :cols] * spec.scale).astype(dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(rng: jax.Array, specs: ParamSpecs) -> Params:
+    keys = jax.random.split(rng, len(specs))
+    return {
+        path: init_param(k, spec)
+        for k, (path, spec) in zip(keys, sorted(specs.items()))
+    }
+
+
+def abstract_params(
+    specs: ParamSpecs, ctx: Optional[ShardingContext] = None
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins (optionally with shardings) — dry-run path."""
+    out = {}
+    for path, spec in specs.items():
+        sharding = None
+        if ctx is not None:
+            sharding = NamedSharding(ctx.mesh, ctx.pspec(spec.logical_axes))
+        out[path] = jax.ShapeDtypeStruct(spec.shape, jnp.dtype(spec.dtype),
+                                         sharding=sharding)
+    return out
+
+
+def param_pspecs(specs: ParamSpecs, ctx: ShardingContext) -> Dict[str, P]:
+    return {path: ctx.pspec(spec.logical_axes) for path, spec in specs.items()}
+
+
+def param_shardings(specs: ParamSpecs, ctx: ShardingContext) -> Dict[str, NamedSharding]:
+    return {
+        path: NamedSharding(ctx.mesh, ctx.pspec(spec.logical_axes))
+        for path, spec in specs.items()
+    }
+
+
+def param_bytes(specs: ParamSpecs) -> int:
+    return sum(
+        int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for s in specs.values()
+    )

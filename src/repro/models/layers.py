@@ -1,0 +1,108 @@
+"""Shared primitive layers: norms, embedding, rotary, activations."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def norm(cfg: ModelConfig, x: jax.Array, p: dict, prefix: str) -> jax.Array:
+    if cfg.norm_type == "rmsnorm":
+        return rms_norm(x, p[f"{prefix}/scale"], cfg.norm_eps)
+    return layer_norm(x, p[f"{prefix}/scale"], p[f"{prefix}/bias"], cfg.norm_eps)
+
+
+def norm_specs(cfg: ModelConfig, prefix: str, stacked: Optional[int] = None) -> dict:
+    """ParamSpecs for a norm layer (optionally layer-stacked)."""
+    from repro.models.init import ParamSpec
+
+    lead = (stacked,) if stacked else ()
+    lead_ax = ("layers",) if stacked else ()
+    init_scale = "zeros" if cfg.norm_type == "rmsnorm" else "ones"
+    out = {
+        f"{prefix}/scale": ParamSpec(lead + (cfg.d_model,), lead_ax + ("embed_nofsdp",),
+                                     init_scale, cfg.param_dtype)
+    }
+    if cfg.norm_type == "layernorm":
+        out[f"{prefix}/bias"] = ParamSpec(lead + (cfg.d_model,),
+                                          lead_ax + ("embed_nofsdp",),
+                                          "zeros", cfg.param_dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)            # [head_dim//2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                     # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., s, hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]                        # [..., s, 1, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed(tokens: jax.Array, table: jax.Array, compute_dtype) -> jax.Array:
+    return jnp.take(table, tokens, axis=0).astype(compute_dtype)
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def squared_relu(x: jax.Array) -> jax.Array:
+    return jnp.square(jax.nn.relu(x))
+
+
+ACTIVATIONS = {
+    "relu": jax.nn.relu,
+    "relu2": squared_relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+}

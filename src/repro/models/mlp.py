@@ -1,0 +1,43 @@
+"""MLP blocks: SwiGLU / GeGLU / squared-ReLU / GELU, TP-sharded over 'ffn'."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.init import ParamSpec
+from repro.models.layers import ACTIVATIONS
+from repro.sharding.api import constrain
+
+
+def mlp_specs(cfg: ModelConfig, prefix: str, stacked=None, d_ff=None) -> dict:
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    lead = (stacked,) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    dt = cfg.param_dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            f"{prefix}/w_gate": ParamSpec(lead + (d, f), lax_ + ("embed", "ffn"), "lecun", dt),
+            f"{prefix}/w_up": ParamSpec(lead + (d, f), lax_ + ("embed", "ffn"), "lecun", dt),
+            f"{prefix}/w_down": ParamSpec(lead + (f, d), lax_ + ("ffn", "embed"), "lecun", dt),
+        }
+    return {
+        f"{prefix}/w_up": ParamSpec(lead + (d, f), lax_ + ("embed", "ffn"), "lecun", dt),
+        f"{prefix}/w_down": ParamSpec(lead + (f, d), lax_ + ("ffn", "embed"), "lecun", dt),
+    }
+
+
+def mlp(cfg: ModelConfig, x: jax.Array, p: dict, prefix: str) -> jax.Array:
+    """x: [b, s, d] -> [b, s, d].  Hidden activations sharded over 'ffn'."""
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        g = jnp.einsum("bsd,df->bsf", x, p[f"{prefix}/w_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p[f"{prefix}/w_up"].astype(x.dtype))
+        h = act(g) * u
+    else:
+        act = ACTIVATIONS["relu2" if cfg.mlp_type == "relu2" else "gelu"]
+        h = act(jnp.einsum("bsd,df->bsf", x,
+                           p[f"{prefix}/w_up"].astype(x.dtype)))
+    h = constrain(h, "batch", "seq_nosp", "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, p[f"{prefix}/w_down"].astype(x.dtype))

@@ -1,0 +1,72 @@
+"""Unified model facade: one object per architecture with
+param_specs / init / loss / forward, dispatched by config family."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import rnn_tagger, transformer
+from repro.models.init import (
+    ParamSpecs,
+    abstract_params,
+    init_params,
+    param_bytes,
+)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- parameters ---------------------------------------------------------
+    def param_specs(self) -> ParamSpecs:
+        if self.cfg.family == "rnn":
+            return rnn_tagger.param_specs(self.cfg)
+        return transformer.param_specs(self.cfg)
+
+    def init(self, rng: jax.Array) -> Dict:
+        return init_params(rng, self.param_specs())
+
+    def abstract_params(self, ctx=None) -> Dict:
+        return abstract_params(self.param_specs(), ctx)
+
+    def param_bytes(self) -> int:
+        return param_bytes(self.param_specs())
+
+    # -- training loss ------------------------------------------------------
+    def loss(self, params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        if cfg.family == "rnn":
+            return rnn_tagger.loss_fn(cfg, params, batch["x"], batch["y"])
+        hidden, aux = transformer.forward(
+            cfg, params, batch["tokens"], train=True,
+            img_embeds=batch.get("img_embeds"),
+            frame_embeds=batch.get("frame_embeds"))
+        loss, metrics = transformer.lm_loss(cfg, params, hidden,
+                                            batch["labels"])
+        if "moe_load_balance" in aux:
+            m = cfg.moe
+            loss = loss + m.aux_loss_weight * aux["moe_load_balance"] \
+                        + m.router_z_loss * aux["moe_z_loss"]
+            metrics.update({k: v for k, v in aux.items()})
+        return loss, metrics
+
+    # -- inference ----------------------------------------------------------
+    def forward(self, params: Dict, batch: Dict) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "rnn":
+            return rnn_tagger.forward(cfg, params, batch["x"])
+        hidden, _ = transformer.forward(
+            cfg, params, batch["tokens"], train=False,
+            img_embeds=batch.get("img_embeds"),
+            frame_embeds=batch.get("frame_embeds"))
+        return transformer.logits_fn(cfg, params, hidden)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,160 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+This is the paper's technique at LLM scale: a *gated linear recurrence*
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(Lambda) * r_t),  r_t, i_t input-dependent gates
+— the direct analogue of the hls4ml LSTM/GRU state update (Eq. 1 of the
+paper), with the Hadamard-product structure the paper had to add to hls4ml.
+
+Train/prefill uses an associative scan (log-depth); decode is the O(1)
+"static-mode" state update.  Width is TP-sharded over 'model' (recurrence is
+elementwise -> no collectives inside the scan).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.init import ParamSpec
+from repro.sharding.api import constrain
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def rglru_specs(cfg: ModelConfig, prefix: str, stacked=None) -> dict:
+    rg = cfg.rglru
+    d = cfg.d_model
+    w = rg.lru_width or d
+    lead = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    dt = cfg.param_dtype
+    return {
+        f"{prefix}/w_x": ParamSpec(lead + (d, w), la + ("embed", "lru_width"), "lecun", dt),
+        f"{prefix}/w_gate": ParamSpec(lead + (d, w), la + ("embed", "lru_width"), "lecun", dt),
+        f"{prefix}/conv_w": ParamSpec(lead + (rg.conv_width, w), la + ("conv", "lru_width"),
+                                      "lecun", dt, 3.0),
+        f"{prefix}/conv_b": ParamSpec(lead + (w,), la + ("lru_width",), "zeros", dt),
+        f"{prefix}/lambda": ParamSpec(lead + (w,), la + ("lru_width",), "ones", dt),
+        f"{prefix}/wa_gate": ParamSpec(lead + (w, w), la + ("lru_width", None), "lecun", dt),
+        f"{prefix}/wi_gate": ParamSpec(lead + (w, w), la + ("lru_width", None), "lecun", dt),
+        f"{prefix}/ba_gate": ParamSpec(lead + (w,), la + ("lru_width",), "zeros", dt),
+        f"{prefix}/bi_gate": ParamSpec(lead + (w,), la + ("lru_width",), "zeros", dt),
+        f"{prefix}/w_out": ParamSpec(lead + (w, d), la + ("lru_width", "embed"), "lecun", dt),
+    }
+
+
+def _lru_gates(p, prefix, xc):
+    """Recurrence/input gates + log-decay.  xc: [b, s, w] (post-conv).
+
+    Gate matmuls run in the compute dtype (bf16 MXU path — §Perf iteration
+    RG-2: they were f32, costing 4x MXU throughput and 2x HBM bytes);
+    the sigmoid/softplus decay math stays f32."""
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", xc, p[f"{prefix}/wa_gate"].astype(xc.dtype),
+                   preferred_element_type=jnp.float32)
+        + p[f"{prefix}/ba_gate"].astype(jnp.float32))
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", xc, p[f"{prefix}/wi_gate"].astype(xc.dtype),
+                   preferred_element_type=jnp.float32)
+        + p[f"{prefix}/bi_gate"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p[f"{prefix}/lambda"].astype(jnp.float32)) * r
+    return i, log_a
+
+
+def _combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def _scan_linear_recurrence(a: jax.Array, b: jax.Array, h0=None,
+                            chunk: int = 256):
+    """h_t = a_t * h_{t-1} + b_t over axis 1.
+
+    §Perf iteration RG-3: chunked two-level scan instead of a full-length
+    associative scan.  A log2(T)-level tree makes ~log2(T) full passes over
+    the [b, T, w] arrays (T=4096 -> 12 passes of HBM traffic); chunking at
+    256 does log2(256)=8 vectorized passes + one tiny [b, nc, w] carry
+    recurrence + one combine pass (~9/12 of the traffic, measured in
+    EXPERIMENTS.md §Perf)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    B, T, W = a.shape
+    if T <= chunk or T % chunk != 0:
+        _, h = jax.lax.associative_scan(_combine, (a, b), axis=1)
+        return h
+
+    nc = T // chunk
+    ar = a.reshape(B, nc, chunk, W)
+    br = b.reshape(B, nc, chunk, W)
+    # within-chunk scans, vectorized across chunks
+    A_cum, h_within = jax.lax.associative_scan(_combine, (ar, br), axis=2)
+    # carry states entering each chunk (tiny sequential recurrence over nc)
+    A_c = A_cum[:, :, -1]                       # [B, nc, W] chunk decay
+    h_c = h_within[:, :, -1]                    # [B, nc, W] chunk output
+
+    def carry_step(h_in, inp):
+        A, hw = inp
+        return A * h_in + hw, h_in
+
+    _, h_ins = jax.lax.scan(
+        carry_step, jnp.zeros((B, W), a.dtype),
+        (jnp.moveaxis(A_c, 1, 0), jnp.moveaxis(h_c, 1, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 1)           # state before each chunk
+    h = h_within + A_cum * h_ins[:, :, None, :]
+    return h.reshape(B, T, W)
+
+
+def rglru_mix(cfg, x, p, prefix, state=None, conv_cache=None, return_state=False):
+    """Griffin recurrent temporal-mixing block.  x: [b, s, d]."""
+    from repro.models.ssm import _causal_conv
+
+    rg = cfg.rglru
+    w = rg.lru_width or cfg.d_model
+
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p[f"{prefix}/w_gate"].astype(x.dtype)))
+    xb = jnp.einsum("bsd,dw->bsw", x, p[f"{prefix}/w_x"].astype(x.dtype))
+    xb = constrain(xb, "batch", "seq_nosp", "lru_width")
+    xc, new_conv_cache = _causal_conv(
+        xb, p[f"{prefix}/conv_w"].astype(x.dtype),
+        p[f"{prefix}/conv_b"].astype(x.dtype), conv_cache)
+
+    i, log_a = _lru_gates(p, prefix, xc)
+    a = jnp.exp(log_a)                                      # [b,s,w] f32
+    # sqrt(1 - a^2) input normalization (Griffin eq. 4)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bterm = beta * (i * xc.astype(jnp.float32))
+    h = _scan_linear_recurrence(a, bterm,
+                                None if state is None else state.astype(jnp.float32))
+    h_last = h[:, -1]                                       # pre-gate state (f32)
+    h = h.astype(x.dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", h, p[f"{prefix}/w_out"].astype(x.dtype))
+    if return_state:
+        return out, (h_last, new_conv_cache)
+    return out
+
+
+def rglru_decode_step(cfg, x, p, prefix, state, conv_cache):
+    """Single-token decode. x: [b,1,d]; state: [b,w] f32."""
+    from repro.models.ssm import _causal_conv
+
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, p[f"{prefix}/w_gate"].astype(x.dtype)))
+    xb = jnp.einsum("bsd,dw->bsw", x, p[f"{prefix}/w_x"].astype(x.dtype))
+    xc, new_conv_cache = _causal_conv(
+        xb, p[f"{prefix}/conv_w"].astype(x.dtype),
+        p[f"{prefix}/conv_b"].astype(x.dtype), conv_cache)
+
+    i, log_a = _lru_gates(p, prefix, xc)                    # [b,1,w]
+    a = jnp.exp(log_a[:, 0])
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a[:, 0]), 1e-12))
+    new_state = a * state + beta * (i[:, 0] * xc[:, 0].astype(jnp.float32))
+    h = new_state[:, None].astype(x.dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", h, p[f"{prefix}/w_out"].astype(x.dtype))
+    return out, (new_state, new_conv_cache)

@@ -1,0 +1,82 @@
+"""The paper's benchmark models: RNN (LSTM/GRU) + dense head classifiers.
+
+Top tagging:    [b, 20, 6]  -> LSTM/GRU(20)  -> Dense(64, ReLU) -> sigmoid(1)
+Flavor tagging: [b, 15, 6]  -> LSTM/GRU(120) -> Dense(50) -> Dense(10) -> softmax(3)
+QuickDraw:      [b, 100, 3] -> LSTM/GRU(128) -> Dense(256) -> Dense(128) -> softmax(5)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FixedPointConfig, ModelConfig
+from repro.core.rnn.cells import rnn_param_specs
+from repro.core.rnn.layer import rnn_layer
+from repro.core.quant.fixed_point import quantize
+from repro.models.init import ParamSpec, ParamSpecs
+
+
+def param_specs(cfg: ModelConfig) -> ParamSpecs:
+    rnn = cfg.rnn
+    assert rnn is not None
+    specs = dict(rnn_param_specs(rnn, "rnn"))
+    prev = rnn.hidden
+    for i, width in enumerate(rnn.dense_sizes):
+        specs[f"dense{i}/w"] = ParamSpec((prev, width), (None, None), "lecun")
+        specs[f"dense{i}/b"] = ParamSpec((width,), (None,), "zeros")
+        prev = width
+    specs["head/w"] = ParamSpec((prev, rnn.n_outputs), (None, None), "lecun")
+    specs["head/b"] = ParamSpec((rnn.n_outputs,), (None,), "zeros")
+    return specs
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Dict,
+    x: jax.Array,                        # [b, T, features]
+    *,
+    fp: Optional[FixedPointConfig] = None,
+    mode: Optional[str] = None,
+    impl: str = "xla",
+    return_logits: bool = False,
+) -> jax.Array:
+    """Returns class probabilities [b, n_outputs] (or pre-activation logits)."""
+    rnn = cfg.rnn
+    h = rnn_layer(rnn, x, params["rnn/kernel"], params["rnn/recurrent"],
+                  params["rnn/bias"], fp=fp, mode=mode, impl=impl)
+
+    def q(t):
+        return t if fp is None else quantize(t, fp)
+
+    h = q(h)
+    for i in range(len(rnn.dense_sizes)):
+        h = q(h @ q(params[f"dense{i}/w"]) + q(params[f"dense{i}/b"]))
+        h = q(jax.nn.relu(h))
+    logits = h @ q(params["head/w"]) + q(params["head/b"])
+    if return_logits:
+        return logits
+    if rnn.output_activation == "sigmoid":
+        return jax.nn.sigmoid(q(logits))
+    # paper note (Sec 5.1): softmax LUT gets extra precision in hls4ml —
+    # we therefore do NOT quantize through the softmax.
+    return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, x: jax.Array, y: jax.Array):
+    """Binary or categorical cross entropy (matches the paper's training)."""
+    rnn = cfg.rnn
+    logits = forward(cfg, params, x, return_logits=True)
+    if rnn.output_activation == "sigmoid":
+        yl = y.astype(jnp.float32).reshape(logits.shape)
+        ls = jax.nn.log_sigmoid(logits)
+        lns = jax.nn.log_sigmoid(-logits)
+        loss = -jnp.mean(yl * ls + (1 - yl) * lns)
+        acc = jnp.mean(((logits[..., 0] > 0) == (y > 0.5)).astype(jnp.float32))
+    else:
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}

@@ -1,0 +1,223 @@
+"""Mamba-2 (SSD, state-space duality) block — arXiv:2405.21060.
+
+Prefill/train: chunked SSD — intra-chunk quadratic attention-like form +
+inter-chunk linear recurrence over per-chunk states (a tiny sequential scan of
+[b, h, p, n] states).  Decode: O(1) single-step state update — literally the
+paper's "static mode" RNN block (state resident, one block per layer).
+
+TP layout: value heads sharded over 'model' (n_groups=1 B/C replicated);
+the recurrence is elementwise across heads so no cross-device communication
+appears inside the scan.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.init import ParamSpec
+from repro.models.layers import rms_norm
+from repro.sharding.api import constrain
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    assert s is not None
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, n_heads, conv_dim
+
+
+def ssm_specs(cfg: ModelConfig, prefix: str, stacked=None) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, h, conv_dim = ssm_dims(cfg)
+    lead = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    dt = cfg.param_dtype
+    # in_proj emits [z (d_in), xBC (conv_dim), dt (h)]
+    return {
+        f"{prefix}/w_in": ParamSpec(lead + (d, 2 * d_in + 2 * s.n_groups * s.d_state + h),
+                                    la + ("embed", "ssm_inner"), "lecun", dt),
+        f"{prefix}/conv_w": ParamSpec(lead + (s.d_conv, conv_dim),
+                                      la + ("conv", "ssm_inner"), "lecun", dt, 3.0),
+        f"{prefix}/conv_b": ParamSpec(lead + (conv_dim,), la + ("ssm_inner",), "zeros", dt),
+        f"{prefix}/dt_bias": ParamSpec(lead + (h,), la + ("ssm_heads",), "zeros", dt),
+        f"{prefix}/a_log": ParamSpec(lead + (h,), la + ("ssm_heads",), "ones", dt),
+        f"{prefix}/d_skip": ParamSpec(lead + (h,), la + ("ssm_heads",), "ones", dt),
+        f"{prefix}/norm_scale": ParamSpec(lead + (d_in,), la + ("ssm_inner",), "zeros", dt),
+        f"{prefix}/w_out": ParamSpec(lead + (d_in, d), la + ("ssm_inner", "embed"), "lecun", dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 cache: jax.Array | None = None):
+    """Depthwise causal conv. x: [b, s, c]; w: [k, c].  Returns (y, new_cache)
+    where cache holds the last k-1 inputs for streaming decode."""
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # [b, s+k-1, c]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    y = y + b[None, None]
+    new_cache = xp[:, -(k - 1):]
+    return y, new_cache
+
+
+def _ssd_chunked(xdt, log_a, B, C, chunk: int, initial_state=None,
+                 unroll: bool = False):
+    """SSD core — fused per-chunk scan (intra-chunk quadratic + inter-chunk
+    recurrence computed together, state carried through the scan).
+
+    xdt: [b,s,h,p] (x pre-multiplied by dt), log_a: [b,s,h] (f32),
+    B,C: [b,s,g,n].  Heads are grouped as h = g * hg (B/C shared per group).
+    Returns (y [b,s,h,p], final_state [b,h,p,n]).
+
+    Memory: one [b, q, q, g, hg] decay/score tensor per chunk step (not
+    materialized across all chunks), which is what makes 32k prefill fit.
+    """
+    b, s, h, p = xdt.shape
+    g, n = B.shape[2], B.shape[3]
+    s_orig = s
+    pad = (-s) % chunk
+    if pad:
+        # identity padding: log_a=0 (a=1) and x=0 leave the state untouched
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        xdt, log_a, B, C = zpad(xdt), zpad(log_a), zpad(B), zpad(C)
+        s = s + pad
+    nc = s // chunk
+    hg = h // g
+    q = chunk
+
+    xdt = xdt.reshape(b, nc, q, g, hg, p)
+    log_a = log_a.reshape(b, nc, q, g, hg)
+    B = B.reshape(b, nc, q, g, n)
+    C = C.reshape(b, nc, q, g, n)
+
+    tril = jnp.tril(jnp.ones((q, q), bool))
+    init = (jnp.zeros((b, g, hg, p, n), jnp.float32)
+            if initial_state is None
+            else initial_state.reshape(b, g, hg, p, n).astype(jnp.float32))
+
+    def chunk_step(state, inp):
+        xdt_c, la_raw, B_c, C_c = inp                    # [b,q,...]
+        la = jnp.cumsum(la_raw, axis=1)                  # [b,q,g,hg] f32
+        # intra-chunk triangular term
+        seg = la[:, :, None] - la[:, None, :]            # [b,i,j,g,hg]
+        decay = jnp.where(tril[None, :, :, None, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bign,bjgn->bijg", C_c, B_c,
+                        preferred_element_type=jnp.float32)
+        y_intra = jnp.einsum("bijg,bijgh,bjghp->bighp", cb, decay,
+                             xdt_c.astype(jnp.float32))
+        # inter-chunk contribution from carried state
+        decay_in = jnp.exp(la)                           # [b,q,g,hg]
+        y_inter = jnp.einsum("bqgn,bghpn->bqghp", C_c.astype(jnp.float32),
+                             state) * decay_in[..., None]
+        # state update
+        la_last = la[:, -1:]                             # [b,1,g,hg]
+        decay_state = jnp.exp(la_last - la)              # [b,q,g,hg]
+        s_c = jnp.einsum("bqgn,bqgh,bqghp->bghpn", B_c.astype(jnp.float32),
+                         decay_state, xdt_c.astype(jnp.float32))
+        new_state = state * jnp.exp(la_last[:, 0])[..., None, None] + s_c
+        return new_state, (y_intra + y_inter).astype(xdt_c.dtype)
+
+    mv = lambda t: jnp.moveaxis(t, 1, 0)
+    if unroll:  # cost-probe mode: make every chunk visible to cost_analysis
+        state, ys = init, []
+        for c in range(nc):
+            state, y_c = chunk_step(
+                state, (xdt[:, c], log_a[:, c], B[:, c], C[:, c]))
+            ys.append(y_c)
+        final, y = state, jnp.stack(ys)
+    else:
+        final, y = jax.lax.scan(chunk_step, init,
+                                (mv(xdt), mv(log_a), mv(B), mv(C)))
+    y = jnp.moveaxis(y, 0, 1).reshape(b, s, h, p)[:, :s_orig]
+    return y, final.reshape(b, h, p, n)
+
+
+def ssm_block(cfg: ModelConfig, x: jax.Array, p: Dict, prefix: str) -> jax.Array:
+    """Training/prefill forward. x: [b, s, d] -> [b, s, d]."""
+    y, _ = ssm_block_with_state(cfg, x, p, prefix, initial_state=None)
+    return y
+
+
+def ssm_block_with_state(cfg, x, p, prefix, initial_state=None,
+                         conv_cache=None):
+    s_cfg = cfg.ssm
+    d_in, h, conv_dim = ssm_dims(cfg)
+    g, n = s_cfg.n_groups, s_cfg.d_state
+    b, s, _ = x.shape
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p[f"{prefix}/w_in"].astype(x.dtype))
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, d_in + conv_dim], axis=-1)
+    xBC, new_conv_cache = _causal_conv(
+        xBC, p[f"{prefix}/conv_w"].astype(x.dtype),
+        p[f"{prefix}/conv_b"].astype(x.dtype), conv_cache)
+    xBC = jax.nn.silu(xBC)
+    xv, B, C = jnp.split(xBC, [d_in, d_in + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p[f"{prefix}/dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p[f"{prefix}/a_log"].astype(jnp.float32))  # [h], negative
+    log_a = dt * a[None, None, :]                           # [b,s,h]
+
+    xv = xv.reshape(b, s, h, s_cfg.head_dim)
+    xdt = xv * dt[..., None].astype(xv.dtype)
+    B = B.reshape(b, s, g, n)
+    C = C.reshape(b, s, g, n)
+
+    xdt = constrain(xdt, "batch", "seq_nosp", "ssm_heads", None)
+    y, final_state = _ssd_chunked(xdt, log_a, B, C,
+                                  min(s_cfg.chunk_size, s), initial_state,
+                                  unroll=cfg.probe_unroll)
+    y = y + xv * p[f"{prefix}/d_skip"].astype(xv.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p[f"{prefix}/norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p[f"{prefix}/w_out"].astype(y.dtype))
+    return out.astype(x.dtype), (final_state, new_conv_cache)
+
+
+def ssm_decode_step(cfg, x, p, prefix, state, conv_cache):
+    """Single-token decode: x [b, 1, d]; state [b,h,p,n]; conv_cache
+    [b, d_conv-1, conv_dim].  O(1) in context length."""
+    s_cfg = cfg.ssm
+    d_in, h, conv_dim = ssm_dims(cfg)
+    g, n = s_cfg.n_groups, s_cfg.d_state
+    b = x.shape[0]
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p[f"{prefix}/w_in"].astype(x.dtype))
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, d_in + conv_dim], axis=-1)
+    xBC, new_conv_cache = _causal_conv(
+        xBC, p[f"{prefix}/conv_w"].astype(x.dtype),
+        p[f"{prefix}/conv_b"].astype(x.dtype), conv_cache)
+    xBC = jax.nn.silu(xBC)
+    xv, B, C = jnp.split(xBC, [d_in, d_in + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p[f"{prefix}/dt_bias"].astype(jnp.float32))[:, 0]  # [b,h]
+    a = -jnp.exp(p[f"{prefix}/a_log"].astype(jnp.float32))
+    a_t = jnp.exp(dt * a[None, :])                          # [b,h]
+
+    xv = xv.reshape(b, h, s_cfg.head_dim)
+    xdt = xv * dt[..., None].astype(xv.dtype)
+    Bt = B.reshape(b, g, n)
+    Ct = C.reshape(b, g, n)
+    hg = h // g
+    Bh = jnp.repeat(Bt, hg, axis=1)                         # [b,h,n]
+    Ch = jnp.repeat(Ct, hg, axis=1)
+
+    new_state = (state * a_t[..., None, None].astype(state.dtype)
+                 + xdt[..., :, None] * Bh[..., None, :])    # [b,h,p,n]
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    y = y + xv * p[f"{prefix}/d_skip"].astype(xv.dtype)[None, :, None]
+    y = y.reshape(b, 1, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p[f"{prefix}/norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p[f"{prefix}/w_out"].astype(y.dtype))
+    return out.astype(x.dtype), (new_state, new_conv_cache)

@@ -1,0 +1,511 @@
+"""Decoder-only LM assembly covering dense / moe / ssm / hybrid / vlm / audio.
+
+Structure:
+  * ``param_specs(cfg)``: single source of truth for parameters (stacked
+    [L, ...] leading dim for scan-over-layers).
+  * ``forward(cfg, params, tokens, ...)``: token embeddings -> scanned,
+    rematerialized layer stack -> final norm.  Families share the residual
+    skeleton and differ in the temporal-mixing block.
+  * ``lm_loss``: vocab-parallel cross entropy (Megatron-style: logits stay
+    sharded over 'vocab'; the LSE reductions partition across the TP axis).
+
+Attention modes (chosen by the sharding context's meta, see sharding/auto.py):
+  'tp'  — sequence gathered per device, heads TP-sharded, exact triangular
+          blockwise schedule (no masked-out FLOPs).
+  'sp'  — sequence stays sharded (one q-chunk per TP rank), KV gathered,
+          rectangular masked blockwise (archs whose head count does not
+          divide the TP axis: gemma-2b, deepseek-coder-33b).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models.init import ParamSpec, ParamSpecs
+from repro.models.layers import apply_rope, embed, norm, norm_specs, softcap
+from repro.models.mlp import mlp, mlp_specs
+from repro.models.moe import moe_block, moe_specs, padded_n_experts
+from repro.models.rglru import rglru_mix, rglru_specs
+from repro.models.ssm import ssm_block, ssm_specs
+from repro.sharding.api import constrain, current_context
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_specs(cfg: ModelConfig, prefix: str, stacked=None) -> ParamSpecs:
+    d = cfg.d_model
+    q_dim, kv_dim = cfg.qkv_dims
+    lead = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    dt = cfg.param_dtype
+    return {
+        f"{prefix}/wq": ParamSpec(lead + (d, cfg.n_heads, cfg.head_dim),
+                                  la + ("embed", "heads", "head_dim"), "lecun", dt),
+        f"{prefix}/wk": ParamSpec(lead + (d, cfg.n_kv_heads, cfg.head_dim),
+                                  la + ("embed", "kv_heads", "head_dim"), "lecun", dt),
+        f"{prefix}/wv": ParamSpec(lead + (d, cfg.n_kv_heads, cfg.head_dim),
+                                  la + ("embed", "kv_heads", "head_dim"), "lecun", dt),
+        f"{prefix}/wo": ParamSpec(lead + (cfg.n_heads, cfg.head_dim, d),
+                                  la + ("heads", "head_dim", "embed"), "lecun", dt),
+    }
+
+
+def _layer_specs(cfg: ModelConfig, n_stacked: int, kind: str = "decoder") -> ParamSpecs:
+    """Specs for one (stacked) layer group of the given kind."""
+    specs: ParamSpecs = {}
+    pre = f"{kind}"
+    if cfg.family == "ssm":
+        specs.update(norm_specs(cfg, f"{pre}/norm1", n_stacked))
+        specs.update(ssm_specs(cfg, f"{pre}/ssm", n_stacked))
+        return specs
+    specs.update(norm_specs(cfg, f"{pre}/norm1", n_stacked))
+    specs.update(_attn_specs(cfg, f"{pre}/attn", n_stacked))
+    specs.update(norm_specs(cfg, f"{pre}/norm2", n_stacked))
+    if cfg.family == "moe":
+        specs.update(moe_specs(cfg, f"{pre}/moe", n_stacked, padded_n_experts(cfg)))
+    else:
+        specs.update(mlp_specs(cfg, f"{pre}/mlp", n_stacked))
+    if kind == "xdecoder":  # enc-dec decoder layer: + cross attention
+        specs.update(norm_specs(cfg, f"{pre}/norm_x", n_stacked))
+        specs.update(_attn_specs(cfg, f"{pre}/xattn", n_stacked))
+    return specs
+
+
+def _hybrid_specs(cfg: ModelConfig) -> ParamSpecs:
+    """Griffin pattern: scan over super-blocks of (rglru, rglru, local_attn),
+    plus unrolled remainder layers."""
+    rg = cfg.rglru
+    n_super, rem = divmod(cfg.n_layers, len(rg.pattern))
+    specs: ParamSpecs = {}
+    for j, kind in enumerate(rg.pattern):
+        specs.update(norm_specs(cfg, f"hyb{j}/norm1", n_super))
+        if kind == "rglru":
+            specs.update(rglru_specs(cfg, f"hyb{j}/mix", n_super))
+        else:
+            specs.update(_attn_specs(cfg, f"hyb{j}/attn", n_super))
+        specs.update(norm_specs(cfg, f"hyb{j}/norm2", n_super))
+        specs.update(mlp_specs(cfg, f"hyb{j}/mlp", n_super))
+    for j in range(rem):
+        kind = rg.pattern[j]
+        specs.update(norm_specs(cfg, f"hybrem{j}/norm1"))
+        if kind == "rglru":
+            specs.update(rglru_specs(cfg, f"hybrem{j}/mix"))
+        else:
+            specs.update(_attn_specs(cfg, f"hybrem{j}/attn"))
+        specs.update(norm_specs(cfg, f"hybrem{j}/norm2"))
+        specs.update(mlp_specs(cfg, f"hybrem{j}/mlp"))
+    return specs
+
+
+def padded_vocab(cfg: ModelConfig, multiple: int = 128) -> int:
+    """Vocab padded for TP divisibility (MaxText-style; whisper's 51865 is
+    odd).  Padded ids never appear in data; they carry ~0 probability mass."""
+    return -(-cfg.vocab_size // multiple) * multiple
+
+
+def param_specs(cfg: ModelConfig) -> ParamSpecs:
+    d, V = cfg.d_model, padded_vocab(cfg)
+    dt = cfg.param_dtype
+    specs: ParamSpecs = {
+        "embed/table": ParamSpec((V, d), ("vocab", "embed"), "embed", dt, 0.02),
+    }
+    specs.update(norm_specs(cfg, "final_norm"))
+    if not cfg.tie_embeddings:
+        specs["unembed/w"] = ParamSpec((d, V), ("embed", "vocab"), "lecun", dt)
+    del V
+    if cfg.frontend == "vision":
+        specs["img_proj/w"] = ParamSpec((d, d), ("embed", None), "lecun", dt)
+    if cfg.enc_dec:
+        specs.update(_layer_specs(cfg, cfg.n_encoder_layers, "encoder"))
+        specs.update(_layer_specs(cfg, cfg.n_decoder_layers, "xdecoder"))
+        specs.update(norm_specs(cfg, "enc_final_norm"))
+        return specs
+    if cfg.family == "hybrid":
+        specs.update(_hybrid_specs(cfg))
+        return specs
+    specs.update(_layer_specs(cfg, cfg.n_layers, "decoder"))
+    return specs
+
+
+def slice_layer(params: Dict, prefix: str) -> Dict:
+    return {k: v for k, v in params.items() if k.startswith(prefix)}
+
+
+# ---------------------------------------------------------------------------
+# Attention block
+# ---------------------------------------------------------------------------
+
+
+def _attn_meta() -> Tuple[str, int]:
+    ctx = current_context()
+    if ctx is None:
+        return "tp", 0
+    mode = ctx.overrides.get("__attn_mode__", "tp")
+    tp = ctx.mesh.shape.get("model", 1)
+    return mode, tp
+
+
+def attention_block(
+    cfg: ModelConfig,
+    x: jax.Array,
+    p: Dict,
+    prefix: str,
+    *,
+    causal: bool,
+    window: int = 0,
+    kv_source: Optional[jax.Array] = None,
+    pos_offset: int = 0,
+    return_kv: bool = False,
+):
+    """Pre-norm'd input -> attention output (pre-residual). x: [b, s, d]."""
+    b, s, _ = x.shape
+    mode, tp = _attn_meta()
+    xs = kv_source if kv_source is not None else x
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p[f"{prefix}/wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xs, p[f"{prefix}/wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xs, p[f"{prefix}/wv"].astype(x.dtype))
+
+    if kv_source is None and cfg.family != "audio":
+        pos = jnp.arange(s) + pos_offset
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+
+    if mode == "sp" and tp > 1 and causal:
+        # sequence stays sharded; KV gathered (small for MQA/GQA archs)
+        q = constrain(q, "batch", "seq", None, "head_dim")
+        k = constrain(k, "batch", None, None, "head_dim")
+        v = constrain(v, "batch", None, None, "head_dim")
+        o = _sp_attention(q, k, v, causal=causal, window=window, tp=tp,
+                          chunk_kv=min(cfg.attn_chunk_kv, 512),
+                          unroll=cfg.probe_unroll)
+    else:
+        # heads-TP: gather sequence, shard heads (exact triangular schedule)
+        q = constrain(q, "batch", None, "heads", "head_dim")
+        k = constrain(k, "batch", None, "kv_heads", "head_dim")
+        v = constrain(v, "batch", None, "kv_heads", "head_dim")
+        o = attn_lib.blockwise_attention(
+            q, k, v, causal=causal, window=window,
+            chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+            unroll_kv=cfg.probe_unroll)
+    o = o.astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p[f"{prefix}/wo"].astype(x.dtype))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _sp_attention(q, k, v, *, causal, window, tp, chunk_kv, unroll=False):
+    """Sequence-parallel attention: q chunk-grid sharded over 'model' (one
+    chunk per rank), KV gathered; rectangular masked blockwise inner scan.
+    Costs ~2x triangular FLOPs for causal (hillclimb target: ring schedule).
+    """
+    b, s, h, d = q.shape
+    assert s % tp == 0
+    cq = s // tp
+    qg = q.reshape(b, tp, cq, h, d)
+    qg = constrain(qg, "batch", "seq_chunks", None, None, None)
+
+    def per_chunk(qc, idx):
+        # qc: [b, cq, h, d]; absolute q offset = idx * cq
+        return _masked_rect(qc, k, v, idx * cq, causal, window, chunk_kv,
+                            unroll=unroll)
+
+    o = jax.vmap(per_chunk, in_axes=(1, 0), out_axes=1)(
+        qg, jnp.arange(tp))
+    o = constrain(o, "batch", "seq_chunks", None, None, None)
+    return o.reshape(b, s, h, d)
+
+
+def _masked_rect(qc, k, v, q_off, causal, window, chunk_kv, unroll=False):
+    """Rectangular blockwise attention for one q chunk at dynamic offset."""
+    b, cq, h, d = qc.shape
+    sk = k.shape[1]
+    ck = min(chunk_kv, sk)
+    nk = sk // ck
+    scale = 1.0 / math.sqrt(d)
+    qs = (qc * scale).astype(qc.dtype)
+    kc = jnp.moveaxis(k.reshape(b, nk, ck, *k.shape[2:]), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nk, ck, *v.shape[2:]), 1, 0)
+    q_pos = jnp.arange(cq) + q_off
+
+    def step(acc, inp):
+        kj, vj, j = inp
+        k_pos = j * ck + jnp.arange(ck)
+        mask = jnp.zeros((cq, ck), bool)
+        if causal:
+            mask = mask | (k_pos[None, :] > q_pos[:, None])
+        if window > 0:
+            mask = mask | (k_pos[None, :] <= q_pos[:, None] - window)
+        s = attn_lib._gqa_scores(qs, kj)
+        s = jnp.where(mask[None, None], attn_lib.NEG_INF, s)
+        m = jnp.max(s, axis=-1)
+        pexp = jnp.exp(s - m[..., None])
+        l = jnp.sum(pexp, axis=-1)
+        o = attn_lib._gqa_values(pexp, vj)
+        return attn_lib._merge(acc, m, l, o), ()
+
+    acc0 = (jnp.full((b, h, cq), attn_lib.NEG_INF, jnp.float32),
+            jnp.zeros((b, h, cq), jnp.float32),
+            jnp.zeros((b, cq, h, d), jnp.float32))
+    if unroll:
+        acc = acc0
+        for j in range(nk):
+            acc, _ = step(acc, (kc[j], vc[j], jnp.int32(j)))
+        m, l, o = acc
+    else:
+        (m, l, o), _ = jax.lax.scan(step, acc0, (kc, vc, jnp.arange(nk)))
+    return attn_lib._finalize(m, l, o).astype(qc.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+
+
+def _residual_in(x):
+    return constrain(x, "batch", "seq", "embed_act")
+
+
+def dense_layer(cfg, x, p, pre, *, causal=True, window=0, pos_offset=0,
+                kv_source=None, cross=False):
+    h = norm(cfg, _residual_in(x), p, f"{pre}/norm1")
+    h = attention_block(cfg, h, p, f"{pre}/attn", causal=causal,
+                        window=window, pos_offset=pos_offset)
+    x = _residual_in(x + h)
+    if cross:
+        hx = norm(cfg, x, p, f"{pre}/norm_x")
+        hx = attention_block(cfg, hx, p, f"{pre}/xattn", causal=False,
+                             kv_source=kv_source)
+        x = _residual_in(x + hx)
+    h2 = norm(cfg, x, p, f"{pre}/norm2")
+    h2 = mlp(cfg, h2, p, f"{pre}/mlp")
+    return _residual_in(x + h2)
+
+
+def moe_layer(cfg, x, p, pre, aux_acc, *, train, pos_offset=0):
+    h = norm(cfg, _residual_in(x), p, f"{pre}/norm1")
+    h = attention_block(cfg, h, p, f"{pre}/attn", causal=True,
+                        pos_offset=pos_offset)
+    x = _residual_in(x + h)
+    h2 = norm(cfg, x, p, f"{pre}/norm2")
+    h2, aux = moe_block(cfg, h2, p, f"{pre}/moe", train=train)
+    for k2, v2 in aux.items():
+        aux_acc[k2] = aux_acc.get(k2, 0.0) + v2
+    return _residual_in(x + h2), aux_acc
+
+
+def ssm_layer(cfg, x, p, pre):
+    h = norm(cfg, _residual_in(x), p, f"{pre}/norm1")
+    h = ssm_block(cfg, h, p, f"{pre}/ssm")
+    return _residual_in(x + h)
+
+
+def hybrid_layer(cfg, x, p, pre, kind, *, pos_offset=0):
+    h = norm(cfg, _residual_in(x), p, f"{pre}/norm1")
+    if kind == "rglru":
+        h = rglru_mix(cfg, h, p, f"{pre}/mix")
+    else:
+        h = attention_block(cfg, h, p, f"{pre}/attn", causal=True,
+                            window=cfg.rglru.window, pos_offset=pos_offset)
+    x = _residual_in(x + h)
+    h2 = norm(cfg, x, p, f"{pre}/norm2")
+    h2 = mlp(cfg, h2, p, f"{pre}/mlp")
+    return _residual_in(x + h2)
+
+
+# ---------------------------------------------------------------------------
+# Stack runner (scan over stacked layers + remat)
+# ---------------------------------------------------------------------------
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _run_stack(cfg, x, params, kind, layer_fn, n_layers):
+    """Scan layer_fn over stacked params under `kind` prefix."""
+    if kind == "hyb":  # super-block group: hyb0/..., hyb1/..., hyb2/...
+        stacked = {k: v for k, v in params.items()
+                   if k.startswith("hyb") and not k.startswith("hybrem")}
+    else:
+        stacked = slice_layer(params, f"{kind}/")
+
+    def body(carry, p_layer):
+        return layer_fn(carry, p_layer), ()
+
+    body = _remat(cfg, body)
+    if cfg.scan_layers and n_layers > 1:
+        x, _ = jax.lax.scan(body, x, stacked, length=n_layers)
+        return x
+    for i in range(n_layers):
+        p_i = {k: v[i] for k, v in stacked.items()}
+        x, _ = body(x, p_i)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Dict,
+    tokens: jax.Array,                     # [b, s_text]
+    *,
+    train: bool = True,
+    img_embeds: Optional[jax.Array] = None,    # vlm: [b, n_patches, d]
+    frame_embeds: Optional[jax.Array] = None,  # audio: [b, s_frames, d]
+) -> Tuple[jax.Array, Dict]:
+    """Returns (final hidden states [b, s, d], aux dict)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    aux: Dict = {}
+
+    if cfg.enc_dec:
+        assert frame_embeds is not None
+        enc = _encode(cfg, params, frame_embeds.astype(cdt))
+        x = embed(tokens, params["embed/table"], cdt)
+        x = x * math.sqrt(cfg.d_model)
+        x = _add_sinusoidal(x)
+        x = _residual_in(x)
+
+        def dec_fn(h, p_layer):
+            return dense_layer(cfg, h, p_layer, "xdecoder", causal=True,
+                               cross=True, kv_source=enc)
+
+        # cross-attention consumes the (shared) encoder output — cannot scan
+        # kv_source through scan xs cheaply; pass via closure (replicated).
+        x = _run_stack(cfg, x, params, "xdecoder", dec_fn, cfg.n_decoder_layers)
+        x = norm(cfg, x, params, "final_norm")
+        return x, aux
+
+    x = embed(tokens, params["embed/table"], cdt)
+    if cfg.family in ("dense", "vlm", "hybrid"):
+        x = x * math.sqrt(cfg.d_model)  # gemma/griffin-style embed scaling
+
+    if cfg.frontend == "vision":
+        assert img_embeds is not None
+        img = jnp.einsum("bnd,de->bne", img_embeds.astype(cdt),
+                         params["img_proj/w"].astype(cdt))
+        x = jnp.concatenate([img, x], axis=1)
+
+    x = _residual_in(x)
+
+    if cfg.family == "ssm":
+        x = _run_stack(cfg, x, params, "decoder",
+                       lambda h, p: ssm_layer(cfg, h, p, "decoder"),
+                       cfg.n_layers)
+    elif cfg.family == "moe":
+        aux_acc: Dict = {}
+
+        def moe_fn(carry, p_layer):
+            h, lb, zl = carry
+            acc: Dict = {}
+            h, acc = moe_layer(cfg, h, p_layer, "decoder", acc, train=train)
+            return (h, lb + acc.get("moe_load_balance", 0.0),
+                    zl + acc.get("moe_z_loss", 0.0)), ()
+
+        body = _remat(cfg, moe_fn)
+        stacked = slice_layer(params, "decoder/")
+        if cfg.scan_layers:
+            (x, lb, zl), _ = jax.lax.scan(
+                body, (x, jnp.float32(0), jnp.float32(0)), stacked,
+                length=cfg.n_layers)
+        else:
+            lb = zl = jnp.float32(0)
+            for i in range(cfg.n_layers):
+                p_i = {k: v[i] for k, v in stacked.items()}
+                (x, lb, zl), _ = body((x, lb, zl), p_i)
+        aux["moe_load_balance"] = lb / cfg.n_layers
+        aux["moe_z_loss"] = zl / cfg.n_layers
+    elif cfg.family == "hybrid":
+        rg = cfg.rglru
+        n_pat = len(rg.pattern)
+        n_super, rem = divmod(cfg.n_layers, n_pat)
+
+        def super_fn(h, p_sb):
+            for j, kind in enumerate(rg.pattern):
+                h = hybrid_layer(cfg, h, p_sb, f"hyb{j}", kind)
+            return h
+
+        x = _run_stack(cfg, x, params, "hyb", lambda h, p: super_fn(h, p),
+                       n_super)
+        for j in range(rem):
+            p_r = slice_layer(params, f"hybrem{j}/")
+            x = _remat(cfg, lambda h, p: hybrid_layer(
+                cfg, h, p, f"hybrem{j}", rg.pattern[j]))(x, p_r)
+    else:  # dense / vlm
+        x = _run_stack(cfg, x, params, "decoder",
+                       lambda h, p: dense_layer(cfg, h, p, "decoder"),
+                       cfg.n_layers)
+
+    x = norm(cfg, x, params, "final_norm")
+    return x, aux
+
+
+def _encode(cfg, params, frames):
+    x = _add_sinusoidal(frames)
+    x = _residual_in(x)
+    x = _run_stack(cfg, x, params, "encoder",
+                   lambda h, p: dense_layer(cfg, h, p, "encoder",
+                                            causal=False),
+                   cfg.n_encoder_layers)
+    return norm(cfg, x, params, "enc_final_norm")
+
+
+def _add_sinusoidal(x):
+    b, s, d = x.shape
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)[:, :d]
+    return x + pe[None].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Logits + vocab-parallel loss
+# ---------------------------------------------------------------------------
+
+
+def logits_fn(cfg: ModelConfig, params: Dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed/table"].astype(x.dtype)     # [V, d]
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed/w"].astype(x.dtype))
+    logits = softcap(logits, cfg.logits_softcap)
+    return constrain(logits, "batch", "seq_nosp", "vocab")
+
+
+def lm_loss(cfg: ModelConfig, params: Dict, hidden: jax.Array,
+            labels: jax.Array, z_loss: float = 1e-4) -> Tuple[jax.Array, Dict]:
+    """Vocab-parallel stable cross entropy.  labels: [b, s], -1 = masked."""
+    logits = logits_fn(cfg, params, hidden).astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - jax.lax.stop_gradient(m)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    lab = jnp.maximum(labels, 0)
+    picked = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    zl = jnp.sum(jnp.square(lse) * mask) / denom
+    metrics = {"nll": loss, "z_loss": zl,
+               "accuracy": jnp.sum((jnp.argmax(logits, -1) == lab) * mask) / denom}
+    return loss + z_loss * zl, metrics

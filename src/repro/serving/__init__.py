@@ -1,0 +1,3 @@
+from repro.serving.engine import RNNServingEngine  # noqa: F401
+from repro.serving.lm_engine import LMServingEngine  # noqa: F401
+from repro.serving.batcher import MicroBatcher, Request  # noqa: F401

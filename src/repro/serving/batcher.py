@@ -1,0 +1,72 @@
+"""Micro-batching request queue — the trigger-style serving front end.
+
+The paper's L1T scenario is a hard-real-time stream (one inference per
+collision, 40 MHz); the coprocessor scenario (QuickDraw on Alveo) is a
+batched service.  MicroBatcher implements the latter: requests accumulate
+until `max_batch` or `max_wait_s`, then flush as one batch — the policy the
+paper's FPGA-vs-GPU throughput comparison (Sec. 5.2) hinges on (batch-1
+latency vs batched throughput).
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    payload: Any
+    arrival_s: float
+    req_id: int
+    result: Any = None
+    done_s: Optional[float] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.done_s is None else self.done_s - self.arrival_s
+
+
+@dataclass
+class MicroBatcher:
+    max_batch: int = 64
+    max_wait_s: float = 0.002
+    _queue: List[Request] = field(default_factory=list)
+    _ids: "itertools.count" = field(default_factory=itertools.count)
+
+    def submit(self, payload: Any, now: Optional[float] = None) -> Request:
+        r = Request(payload, time.time() if now is None else now,
+                    next(self._ids))
+        self._queue.append(r)
+        return r
+
+    def ready(self, now: Optional[float] = None) -> bool:
+        if not self._queue:
+            return False
+        if len(self._queue) >= self.max_batch:
+            return True
+        now = time.time() if now is None else now
+        return now - self._queue[0].arrival_s >= self.max_wait_s
+
+    def drain(self) -> List[Request]:
+        batch, self._queue = (self._queue[: self.max_batch],
+                              self._queue[self.max_batch:])
+        return batch
+
+    def run(self, infer_fn: Callable[[np.ndarray], np.ndarray],
+            now: Optional[float] = None) -> List[Request]:
+        """Flush one batch through infer_fn; stamps results + latencies."""
+        if not self.ready(now):
+            return []
+        batch = self.drain()
+        x = np.stack([r.payload for r in batch])
+        out = np.asarray(infer_fn(x))
+        t = time.time() if now is None else now
+        for i, r in enumerate(batch):
+            r.result = out[i]
+            r.done_s = t
+        return batch

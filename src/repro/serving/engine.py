@@ -1,0 +1,72 @@
+"""RNN serving engine — the paper's deliverable as a service.
+
+Wraps a trained tagger with: execution mode (static scan / non-static
+unrolled / Pallas weights-resident kernel), optional fixed-point datapath,
+micro-batching, and a latency report that pairs measured wall-clock numbers
+with the analytical FPGA design point (core.hls) for the same configuration
+— the two columns the paper compares.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FixedPointConfig, ModelConfig
+from repro.core.hls import HLSDesign, RNNDesignPoint, estimate_design
+from repro.models import rnn_tagger
+from repro.serving.batcher import MicroBatcher
+
+
+@dataclass
+class RNNServingEngine:
+    cfg: ModelConfig
+    params: Dict
+    mode: str = "static"                  # static | nonstatic
+    impl: str = "xla"                     # xla | pallas
+    fp: Optional[FixedPointConfig] = None
+    max_batch: int = 256
+
+    def __post_init__(self):
+        cfg, fp, mode, impl = self.cfg, self.fp, self.mode, self.impl
+
+        def infer(params, x):
+            return rnn_tagger.forward(cfg, params, x, fp=fp, mode=mode,
+                                      impl=impl)
+
+        self._infer = jax.jit(infer)
+        self.batcher = MicroBatcher(max_batch=self.max_batch)
+
+    # -- direct batched inference -------------------------------------------
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(self._infer(self.params, jnp.asarray(x)))
+
+    def warmup(self):
+        r = self.cfg.rnn
+        self.predict(np.zeros((1, r.seq_len, r.input_size), np.float32))
+
+    # -- measured throughput/latency ----------------------------------------
+    def benchmark(self, batch: int, iters: int = 20) -> Dict[str, float]:
+        r = self.cfg.rnn
+        x = np.random.RandomState(0).randn(
+            batch, r.seq_len, r.input_size).astype(np.float32)
+        self.predict(x[:1])                         # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            self.predict(x)
+        dt = (time.perf_counter() - t0) / iters
+        return {"batch": batch, "latency_s": dt,
+                "throughput_eps": batch / dt}
+
+    # -- paired FPGA design point -------------------------------------------
+    def fpga_design(self, reuse_kernel: int = 1, reuse_recurrent: int = 1,
+                    strategy: str = "latency", part: str = "xcku115"
+                    ) -> HLSDesign:
+        return estimate_design(RNNDesignPoint(
+            self.cfg, self.fp or FixedPointConfig(),
+            reuse_kernel, reuse_recurrent, self.mode, strategy, part))

@@ -1,0 +1,107 @@
+"""LM serving engine: prefill + decode with slot-based continuous batching.
+
+The decode step is the paper's static-mode schedule at LLM scale (state
+resident, II = 1 token); the slot manager implements continuous batching —
+finished sequences free their slot, new requests join mid-flight without
+stalling running ones (vLLM-style, sized for fixed-shape XLA programs).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import transformer as tf
+from repro.models.decode import cache_specs, decode_step
+from repro.models.init import init_params
+
+
+@dataclass
+class Slot:
+    active: bool = False
+    req_id: int = -1
+    pos: int = 0
+    tokens: List[int] = field(default_factory=list)
+    max_new: int = 16
+
+
+class LMServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Dict, *,
+                 max_batch: int = 4, max_seq: int = 256,
+                 cache_dtype: str = "float32"):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.slots = [Slot() for _ in range(max_batch)]
+        specs = cache_specs(cfg, max_batch, max_seq, cache_dtype)
+        self.cache = {k: jnp.zeros(s.shape, jnp.dtype(s.dtype))
+                      for k, s in specs.items()}
+
+        def step(params, cache, tokens, pos):
+            return decode_step(cfg, params, cache, tokens, pos)
+
+        self._step = jax.jit(step, donate_argnums=(1,))
+        self._next_req = 0
+
+    # -- request management --------------------------------------------------
+    def add_request(self, prompt: List[int], max_new: int = 16) -> Optional[int]:
+        for s in self.slots:
+            if not s.active:
+                s.active = True
+                s.req_id = self._next_req
+                self._next_req += 1
+                s.pos = 0
+                s.tokens = list(prompt)
+                s.max_new = max_new
+                s._prompt_len = len(prompt)
+                return s.req_id
+        return None                     # queue full
+
+    def _advance_prompt_or_sample(self, s: Slot, logits_row) -> int:
+        """Teacher-force remaining prompt tokens, then greedy-sample."""
+        if s.pos + 1 < s._prompt_len:
+            return s.tokens[s.pos + 1]
+        return int(jnp.argmax(logits_row))
+
+    # -- one engine tick: every active slot decodes one token ----------------
+    def tick(self) -> Dict[int, List[int]]:
+        if not any(s.active for s in self.slots):
+            return {}
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        pos = np.zeros((self.max_batch,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s.active:
+                tokens[i, 0] = s.tokens[s.pos]
+                pos[i] = s.pos
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos))
+        logits = np.asarray(logits[:, 0])
+
+        finished: Dict[int, List[int]] = {}
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            nxt = self._advance_prompt_or_sample(s, logits[i])
+            if s.pos + 1 >= s._prompt_len:
+                s.tokens.append(nxt)
+            s.pos += 1
+            done = (len(s.tokens) - s._prompt_len >= s.max_new
+                    or s.pos >= self.max_seq - 1)
+            if done:
+                finished[s.req_id] = list(s.tokens)
+                s.active = False        # slot freed for the next request
+        return finished
+
+    def run_to_completion(self, max_ticks: int = 512) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {}
+        for _ in range(max_ticks):
+            out.update(self.tick())
+            if not any(s.active for s in self.slots):
+                break
+        return out

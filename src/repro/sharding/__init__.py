@@ -1,0 +1,9 @@
+from repro.sharding.api import (  # noqa: F401
+    ShardingContext,
+    current_context,
+    sharding_context,
+    constrain,
+    logical_to_pspec,
+    named_sharding,
+)
+from repro.sharding.rules import RULE_PROFILES, rules_for  # noqa: F401

@@ -1,0 +1,114 @@
+"""Sharding context: thread (mesh, rules, data axes) through model code.
+
+Model code calls ``constrain(x, 'batch', 'seq', 'embed_act')``.  With no
+active context (unit tests, single-device runs) this is the identity, so the
+model zoo runs unmodified on 1 CPU device.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.rules import MeshAxes, rules_for
+
+_STATE = threading.local()
+
+
+@dataclass
+class ShardingContext:
+    mesh: Mesh
+    rules: Dict[str, MeshAxes]
+    data_axes: Tuple[str, ...] = ("data",)
+    overrides: Dict[str, MeshAxes] = field(default_factory=dict)
+
+    def resolve(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        if logical in self.overrides:
+            axis = self.overrides[logical]
+        elif logical in self.rules:
+            axis = self.rules[logical]
+        else:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        if axis == "__data__":
+            return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+        return axis
+
+    def pspec(self, logical_axes: Tuple[Optional[str], ...]) -> P:
+        used = set()
+        out = []
+        for name in logical_axes:
+            axis = self.resolve(name)
+            # a mesh axis may appear at most once in a PartitionSpec; on
+            # conflict the later dim is left unsharded (documented behaviour)
+            flat = axis if isinstance(axis, tuple) else (axis,) if axis else ()
+            if any(a in used for a in flat):
+                out.append(None)
+                continue
+            used.update(flat)
+            out.append(axis)
+        return P(*out)
+
+
+def current_context() -> Optional[ShardingContext]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_context(
+    mesh: Optional[Mesh],
+    family: str = "dense",
+    kind: str = "train",
+    overrides: Optional[Dict[str, MeshAxes]] = None,
+):
+    """Activate sharding for model code. mesh=None -> no-op context."""
+    if mesh is None:
+        yield None
+        return
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    ctx = ShardingContext(
+        mesh=mesh,
+        rules=dict(rules_for(family, kind)),
+        data_axes=data_axes or (mesh.axis_names[0],),
+        overrides=dict(overrides or {}),
+    )
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def logical_to_pspec(logical_axes: Tuple[Optional[str], ...]) -> Optional[P]:
+    ctx = current_context()
+    if ctx is None:
+        return None
+    return ctx.pspec(logical_axes)
+
+
+def named_sharding(logical_axes: Tuple[Optional[str], ...]) -> Optional[NamedSharding]:
+    ctx = current_context()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, ctx.pspec(logical_axes))
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op without context)."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"constrain: {len(logical_axes)} axes for rank-{x.ndim} array"
+        )
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, ctx.pspec(tuple(logical_axes)))
+    )

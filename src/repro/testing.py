@@ -1,0 +1,51 @@
+"""Reduced configs for smoke tests: same family, tiny dims."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.config import ModelConfig, MoEConfig, RGLRUConfig, SSMConfig
+
+
+def tiny_config(full: ModelConfig) -> ModelConfig:
+    """Shrink an assigned arch to CPU-testable size, keeping its family,
+    attention grouping structure, MLP type, and block pattern."""
+    kw = dict(
+        n_layers=min(full.n_layers, 2 if not full.rglru else 4),
+        d_model=64,
+        vocab_size=256,
+        d_ff=128,
+        param_dtype="float32",
+        compute_dtype="float32",
+        grad_accum=1,
+        attn_chunk_q=32,
+        attn_chunk_kv=32,
+        remat="none",
+    )
+    if full.n_heads:
+        ratio = max(full.n_heads // max(full.n_kv_heads, 1), 1)
+        n_heads = 4
+        kw.update(n_heads=n_heads,
+                  n_kv_heads=max(n_heads // ratio, 1),
+                  head_dim=16)
+    if full.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            full.moe, n_experts=8,
+            top_k=min(full.moe.top_k, 2),
+            n_shared_experts=min(full.moe.n_shared_experts, 1),
+            d_ff_expert=32)
+        kw["d_ff"] = 32
+    if full.ssm is not None:
+        kw["ssm"] = dataclasses.replace(full.ssm, d_state=16, head_dim=16,
+                                        chunk_size=8)
+    if full.rglru is not None:
+        kw["rglru"] = dataclasses.replace(full.rglru, lru_width=64, window=16)
+        kw["n_layers"] = 4  # one super-block + 1 remainder
+    if full.enc_dec:
+        kw.update(n_encoder_layers=2, n_decoder_layers=2, n_layers=2,
+                  max_encoder_len=32)
+    if full.frontend == "vision":
+        kw["n_frontend_tokens"] = 8
+    if full.rnn is not None:
+        return full  # paper taggers are already tiny
+    return dataclasses.replace(full, **kw)

@@ -1,0 +1,7 @@
+from repro.training.optimizer import (  # noqa: F401
+    OptState,
+    adamw_init,
+    adamw_update,
+    lr_schedule,
+)
+from repro.training.train_step import make_train_step  # noqa: F401

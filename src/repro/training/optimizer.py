@@ -1,0 +1,81 @@
+"""AdamW with warmup-cosine schedule and global-norm clipping (from scratch —
+no optax in this container).  Optimizer state shards exactly like params
+(moments inherit the param logical axes), i.e. fully-sharded (ZeRO-ish) by
+construction under FSDP rules.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimizerConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array                     # scalar int32
+    m: Dict[str, jax.Array]
+    v: Dict[str, jax.Array]
+
+
+def lr_schedule(opt: OptimizerConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = opt.lr * (s + 1.0) / max(opt.warmup_steps, 1)
+    total = max(opt.total_steps - opt.warmup_steps, 1)
+    t = jnp.clip((s - opt.warmup_steps) / total, 0.0, 1.0)
+    cos = 0.5 * opt.lr * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(s < opt.warmup_steps, warm, cos)
+
+
+def adamw_init(params: Dict[str, jax.Array],
+               opt: OptimizerConfig) -> OptState:
+    dt = jnp.dtype(opt.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m={k: zeros(p) for k, p in params.items()},
+        v={k: zeros(p) for k, p in params.items()},
+    )
+
+
+def global_norm(tree: Dict[str, jax.Array]) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in tree.values()))
+
+
+_NO_DECAY = ("bias", "norm", "scale", "a_log", "dt_bias", "lambda", "d_skip")
+
+
+def adamw_update(
+    params: Dict[str, jax.Array],
+    grads: Dict[str, jax.Array],
+    state: OptState,
+    opt: OptimizerConfig,
+) -> Tuple[Dict[str, jax.Array], OptState, Dict[str, jax.Array]]:
+    step = state.step + 1
+    lr = lr_schedule(opt, state.step)
+
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, opt.grad_clip / jnp.maximum(gn, 1e-9)) \
+        if opt.grad_clip > 0 else jnp.float32(1.0)
+
+    b1, b2, eps = opt.b1, opt.b2, opt.eps
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_p, new_m, new_v = {}, {}, {}
+    for k, p in params.items():
+        g = grads[k].astype(jnp.float32) * clip
+        m = state.m[k].astype(jnp.float32) * b1 + (1 - b1) * g
+        v = state.v[k].astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if opt.weight_decay > 0 and not any(s in k for s in _NO_DECAY):
+            update = update + opt.weight_decay * p.astype(jnp.float32)
+        new_p[k] = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        new_m[k] = m.astype(state.m[k].dtype)
+        new_v[k] = v.astype(state.v[k].dtype)
+
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_p, OptState(step, new_m, new_v), metrics

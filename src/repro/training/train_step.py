@@ -1,0 +1,93 @@
+"""Train step builder: grad accumulation (microbatch scan) + AdamW update +
+optional int8 cross-replica gradient compression.
+
+The returned function is pure (params, opt_state, batch) -> (params,
+opt_state, metrics) and is what launch/dryrun.py lowers for the roofline.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, OptimizerConfig, TrainConfig
+from repro.models.model import Model
+from repro.sharding.api import constrain
+from repro.training.optimizer import OptState, adamw_update
+
+
+def _split_microbatches(batch: Dict, accum: int) -> Dict:
+    """[B, ...] -> [accum, B/accum, ...] (microbatch dim is scanned)."""
+    def r(x):
+        b = x.shape[0]
+        assert b % accum == 0, f"batch {b} % accum {accum}"
+        return x.reshape(accum, b // accum, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(
+    model: Model,
+    train_cfg: TrainConfig,
+    grad_accum: Optional[int] = None,
+    accum_dtype: str = "float32",
+    grad_shardings: Optional[Dict] = None,
+) -> Callable:
+    cfg = model.cfg
+    accum = grad_accum if grad_accum is not None else max(cfg.grad_accum, 1)
+    opt = train_cfg.optimizer
+    acc_dt = jnp.dtype(accum_dtype)
+
+    def _shard_grads(g):
+        """Pin gradients to the parameter shardings: without this GSPMD
+        keeps grads replicated and ALL-REDUCES them (measured: 5.4 TiB/dev
+        on nemotron train_4k); with it backward emits reduce-scatters into
+        the sharded accumulation buffer."""
+        if grad_shardings is None:
+            return g
+        return {k: jax.lax.with_sharding_constraint(v, grad_shardings[k])
+                if k in grad_shardings else v for k, v in g.items()}
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: OptState, batch: Dict):
+        if accum > 1:
+            mbs = _split_microbatches(batch, accum)
+
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), g = grad_fn(params, mb)
+                g = _shard_grads(g)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            g0 = _shard_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params))
+            (grads, loss_sum), ms = jax.lax.scan(
+                micro, (g0, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), ms)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = _shard_grads(grads)
+
+        if train_cfg.compress_grads:
+            from repro.training.grad_compression import compress_decompress
+            grads = compress_decompress(grads)
+
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,91 @@
+"""Fault tolerance: heartbeats, stragglers, elastic restart planning,
+HLO collective analyzer."""
+
+import numpy as np
+
+from repro.ft import HeartbeatMonitor, StragglerPolicy, plan_elastic_restart
+from repro.launch.hlo_analysis import analyze_hlo, _shape_bytes
+
+
+def test_heartbeat_detects_dead_worker():
+    hb = HeartbeatMonitor(n_workers=4, timeout_s=10)
+    for w in range(4):
+        hb.beat(w, now=0.0)
+    assert hb.healthy(now=5.0)
+    for w in (0, 1, 3):
+        hb.beat(w, now=20.0)
+    assert hb.dead_workers(now=25.0) == {2}
+
+
+def test_straggler_policy_escalates():
+    sp = StragglerPolicy(threshold=1.5, patience=2)
+    for step in range(3):
+        for w in range(4):
+            sp.record_step(w, 1.0 if w != 2 else 3.0)
+        actions = sp.evaluate()
+    assert actions[2] == "evict"
+    assert actions[0] == "ok"
+
+
+def test_straggler_recovers_after_good_steps():
+    sp = StragglerPolicy(threshold=1.5, patience=3)
+    for w in range(3):
+        sp.record_step(w, 1.0)
+    sp.record_step(3, 5.0)
+    sp.evaluate()
+    for w in range(4):
+        sp.record_step(w, 1.0)
+    actions = sp.evaluate()
+    assert actions[3] == "ok"
+
+
+def test_elastic_plan_prefers_model_axis_intact():
+    p = plan_elastic_restart(healthy_chips=511, original_chips=512)
+    assert p.mesh_shape == (16, 16)          # drop a pod, keep TP=16
+    p = plan_elastic_restart(healthy_chips=200, original_chips=256)
+    assert p.mesh_shape[-1] == 16            # TP width preserved
+    assert p.mesh_shape[0] * p.mesh_shape[1] <= 200
+    p = plan_elastic_restart(healthy_chips=1)
+    assert p.mesh_shape == (1, 1)
+
+
+def test_elastic_batch_rescale():
+    p = plan_elastic_restart(healthy_chips=128, original_chips=256)
+    assert p.global_batch_scale == 0.5       # keep per-chip batch constant
+
+
+# -- HLO analyzer -------------------------------------------------------------
+
+SAMPLE = """
+%body (param: (s32[], f32[32,16])) -> (s32[], f32[32,16]) {
+  %param = (s32[], f32[32,16]{1,0}) parameter(0)
+  %gte = f32[32,16]{1,0} get-tuple-element(%param), index=1
+  %ag = f32[64,16]{1,0} all-gather(%gte), channel_id=1, replica_groups=[4,2]<=[8], dimensions={0}
+  %ar = f32[32,16]{1,0} all-reduce(%gte), channel_id=2, replica_groups=[2,4]<=[8], to_apply=%add
+  ROOT %t = (s32[], f32[32,16]{1,0}) tuple(%param, %ar)
+}
+ENTRY %main (p: f32[32,16]) -> f32[32,16] {
+  %p = f32[32,16]{1,0} parameter(0)
+  %w = (s32[], f32[32,16]{1,0}) while(%p), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  %cp = f32[32,16]{1,0} collective-permute(%p), channel_id=3, source_target_pairs={{0,1}}
+  ROOT %out = f32[32,16]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[32,16]") == 2048
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("(s32[], f32[4,4])") == 68
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_analyzer_trip_count_scaling():
+    a = analyze_hlo(SAMPLE)
+    kinds = {c.kind: c for c in a.collectives}
+    assert kinds["all-gather"].count == 7           # inside 7-trip while
+    assert kinds["all-reduce"].count == 7
+    assert kinds["collective-permute"].count == 1   # entry-level
+    # ring models: AG wire = result*(n-1)/n = 4096*1/2
+    assert kinds["all-gather"].wire_bytes == 2048
+    assert kinds["all-reduce"].wire_bytes == 2 * 2048 * 3 / 4

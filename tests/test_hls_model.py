@@ -1,0 +1,107 @@
+"""HLS design-space model vs every latency number printed in the paper
+(Tables 2-5) + the scaling laws of Figs 3-6."""
+
+import pytest
+
+from repro.config import FixedPointConfig
+from repro.core.hls import RNNDesignPoint, estimate_design
+from repro.registry import get_config
+
+FP16 = FixedPointConfig(16, 6)
+
+# (reuse_kernel, reuse_recurrent) -> (min_us, max_us) from the paper
+TABLE_2 = {  # top tagging
+    "gru": {(6, 5): (2.4, 6.5), (12, 10): (3.2, 7.3),
+            (30, 20): (5.0, 9.1), (60, 60): (8.0, 12.1)},
+    "lstm": {(6, 5): (2.7, 6.8), (12, 10): (3.5, 7.6),
+             (30, 20): (5.3, 9.4), (60, 40): (8.3, 12.4)},
+}
+TABLE_3 = {  # flavor tagging (GRU row)
+    (48, 40): (6.7, 24.8), (90, 60): (9.8, 27.9),
+    (120, 120): (11.5, 29.6), (240, 240): (20.5, 38.6),
+}
+TABLE_4 = {  # quickdraw (GRU row)
+    (48, 32): (35.4, 164.0), (96, 64): (59.4, 188.0),
+    (192, 128): (107.0, 235.0), (384, 384): (203.0, 331.0),
+}
+
+
+def _check(design, lo, hi, tol=0.12):
+    assert design.latency_min_us == pytest.approx(lo, rel=tol)
+    assert design.latency_max_us == pytest.approx(hi, rel=tol)
+
+
+@pytest.mark.parametrize("cell", ["gru", "lstm"])
+def test_table_2_top_tagging_latencies(cell):
+    cfg = get_config(f"top-tagging-{cell}")
+    for (rk, rr), (lo, hi) in TABLE_2[cell].items():
+        _check(estimate_design(RNNDesignPoint(cfg, FP16, rk, rr)), lo, hi)
+
+
+def test_table_3_flavor_tagging_latencies():
+    cfg = get_config("flavor-tagging-gru")
+    for (rk, rr), (lo, hi) in TABLE_3.items():
+        _check(estimate_design(RNNDesignPoint(cfg, FP16, rk, rr)), lo, hi)
+
+
+def test_table_4_quickdraw_latencies():
+    cfg = get_config("quickdraw-gru")
+    for (rk, rr), (lo, hi) in TABLE_4.items():
+        _check(estimate_design(RNNDesignPoint(
+            cfg, FixedPointConfig(26, 10), rk, rr, part="u250")), lo, hi)
+
+
+def test_table_5_static_vs_nonstatic_ii():
+    cfg = get_config("top-tagging-gru")
+    st = estimate_design(RNNDesignPoint(cfg, FixedPointConfig(10, 6),
+                                        strategy="latency", mode="static"))
+    ns = estimate_design(RNNDesignPoint(cfg, FixedPointConfig(10, 6),
+                                        strategy="latency", mode="nonstatic"))
+    assert ns.ii_cycles == 1                       # paper: II -> 1
+    assert st.ii_cycles == pytest.approx(315, rel=0.1)  # paper: 315
+    # >300x throughput gain (paper Sec 5.3)
+    assert ns.throughput_eps / st.throughput_eps > 300
+    # latencies comparable
+    assert ns.latency_min_us == pytest.approx(st.latency_min_us, rel=0.15)
+
+
+def test_fig_6_nonstatic_fits_only_small_widths():
+    cfg = get_config("top-tagging-gru")
+    fits = {}
+    for W in (10, 16, 22):
+        d = estimate_design(RNNDesignPoint(cfg, FixedPointConfig(W, 6),
+                                           strategy="latency",
+                                           mode="nonstatic"))
+        fits[W] = d.fits
+    assert fits[10] and not fits[16] and not fits[22]
+
+
+def test_fig_3_dsp_flat_then_doubles():
+    cfg = get_config("top-tagging-gru")
+    d12 = estimate_design(RNNDesignPoint(cfg, FixedPointConfig(12, 6), 6, 5))
+    d18 = estimate_design(RNNDesignPoint(cfg, FixedPointConfig(18, 6), 6, 5))
+    d22 = estimate_design(RNNDesignPoint(cfg, FixedPointConfig(22, 6), 6, 5))
+    assert d12.dsp == d18.dsp                      # flat until DSP width
+    assert d22.dsp == 2 * d18.dsp                  # then doubles
+
+
+def test_resource_scaling_laws():
+    cfg_g = get_config("top-tagging-gru")
+    cfg_l = get_config("top-tagging-lstm")
+    a = estimate_design(RNNDesignPoint(cfg_g, FP16, 6, 5))
+    b = estimate_design(RNNDesignPoint(cfg_g, FP16, 12, 10))
+    assert a.dsp == pytest.approx(2 * b.dsp, rel=0.05)   # 1/R DSP scaling
+    l = estimate_design(RNNDesignPoint(cfg_l, FP16, 6, 5))
+    assert 1.1 < l.dsp / a.dsp < 1.45             # GRU ~3/4 of LSTM (Sec 5.2)
+    ns = estimate_design(RNNDesignPoint(cfg_g, FP16, 6, 5, mode="nonstatic"))
+    assert ns.dsp == 20 * a.dsp                   # x seq_len (Fig 6)
+
+
+def test_quickdraw_throughput_overlaps_paper_range():
+    """Paper Sec 5.2: QuickDraw LSTM II-derived throughput 4300-9700 ev/s."""
+    cfg = get_config("quickdraw-lstm")
+    tputs = [estimate_design(RNNDesignPoint(
+        cfg, FixedPointConfig(26, 10), rk, rr, part="u250")).throughput_eps
+        for (rk, rr) in TABLE_4]
+    assert min(tputs) < 4300 * 1.3
+    assert any(4300 * 0.7 <= t <= 9700 * 1.3 for t in tputs)

@@ -1,0 +1,99 @@
+"""Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes
+(interpret mode on CPU), plus hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import FixedPointConfig
+from repro.kernels import ops, ref
+
+
+def _allclose(a, b, tol=3e-5):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    assert a.shape == b.shape
+    np.testing.assert_allclose(a, b, rtol=tol, atol=tol)
+
+
+# -- recurrent scan kernels ---------------------------------------------------
+
+RNN_SHAPES = [(1, 5, 3, 8), (4, 20, 6, 20), (9, 15, 6, 120), (2, 100, 3, 128)]
+
+
+@pytest.mark.parametrize("B,T,F,H", RNN_SHAPES)
+def test_lstm_scan_matches_ref(B, T, F, H, rng):
+    xs = jnp.asarray(rng.randn(B, T, F).astype(np.float32))
+    W = jnp.asarray(rng.randn(F, 4 * H).astype(np.float32) * 0.3)
+    U = jnp.asarray(rng.randn(H, 4 * H).astype(np.float32) * 0.3)
+    b = jnp.asarray(rng.randn(4 * H).astype(np.float32) * 0.1)
+    _allclose(ops.lstm_scan(xs, W, U, b), ref.lstm_scan_ref(xs, W, U, b))
+
+
+@pytest.mark.parametrize("B,T,F,H", RNN_SHAPES)
+def test_gru_scan_matches_ref(B, T, F, H, rng):
+    xs = jnp.asarray(rng.randn(B, T, F).astype(np.float32))
+    W = jnp.asarray(rng.randn(F, 3 * H).astype(np.float32) * 0.3)
+    U = jnp.asarray(rng.randn(H, 3 * H).astype(np.float32) * 0.3)
+    b = jnp.asarray(rng.randn(2, 3 * H).astype(np.float32) * 0.1)
+    _allclose(ops.gru_scan(xs, W, U, b), ref.gru_scan_ref(xs, W, U, b))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_lstm_scan_dtypes(dtype, rng):
+    dt = jnp.dtype(dtype)
+    xs = jnp.asarray(rng.randn(4, 10, 6), dtype=dt)
+    W = jnp.asarray(rng.randn(6, 80) * 0.3, dtype=dt)
+    U = jnp.asarray(rng.randn(20, 80) * 0.3, dtype=dt)
+    b = jnp.asarray(rng.randn(80) * 0.1, dtype=dt)
+    out = ops.lstm_scan(xs, W, U, b)
+    assert out.dtype == dt
+    _allclose(out, ref.lstm_scan_ref(xs, W, U, b), tol=2e-2)
+
+
+# -- hadamard / fixed point ---------------------------------------------------
+
+@given(n=st.integers(1, 7), m=st.integers(1, 130))
+@settings(max_examples=10, deadline=None)
+def test_hadamard_property(n, m):
+    r = np.random.RandomState(n * 131 + m)
+    a = jnp.asarray(r.randn(n, m).astype(np.float32))
+    b = jnp.asarray(r.randn(n, m).astype(np.float32))
+    _allclose(ops.hadamard(a, b), a * b, tol=0)
+
+
+@given(total=st.integers(4, 24), integer=st.integers(1, 12))
+@settings(max_examples=15, deadline=None)
+def test_fixed_point_kernel_matches_quantizer(total, integer):
+    if integer >= total:
+        return
+    fp = FixedPointConfig(total_bits=total, integer_bits=integer)
+    r = np.random.RandomState(total * 31 + integer)
+    x = jnp.asarray((r.randn(8, 33) * 3).astype(np.float32))
+    _allclose(ops.fixed_point(x, fp), ref.fixed_point_ref(x, fp), tol=0)
+
+
+# -- rglru + reuse matmul -----------------------------------------------------
+
+@pytest.mark.parametrize("B,T,W", [(1, 7, 16), (5, 37, 200), (8, 64, 128)])
+def test_rglru_scan_matches_ref(B, T, W, rng):
+    a = jnp.asarray(np.exp(-np.abs(rng.randn(B, T, W))).astype(np.float32))
+    bx = jnp.asarray(rng.randn(B, T, W).astype(np.float32))
+    _allclose(ops.rglru_scan(a, bx), ref.rglru_scan_ref(a, bx))
+
+
+@pytest.mark.parametrize("reuse", [1, 2, 4, 8, 16])
+def test_reuse_matmul_all_reuse_factors(reuse, rng):
+    x = jnp.asarray(rng.randn(100, 64).astype(np.float32))
+    w = jnp.asarray(rng.randn(64, 48).astype(np.float32))
+    _allclose(ops.reuse_matmul(x, w, reuse=reuse),
+              ref.reuse_matmul_ref(x, w), tol=2e-5)
+
+
+def test_reuse_matmul_vmem_tradeoff():
+    """The paper's reuse knob: VMEM working set shrinks monotonically in R."""
+    from repro.kernels.reuse_matmul import vmem_bytes
+    sizes = [vmem_bytes(128, 512, 256, r) for r in (1, 2, 4, 8)]
+    assert all(a > b for a, b in zip(sizes, sizes[1:]))

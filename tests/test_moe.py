@@ -1,0 +1,118 @@
+"""MoE block invariants: combine-weight normalization, chunking equivalence,
+capacity semantics, phantom-expert padding."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.models.moe import _moe_tokens, moe_block
+from repro.registry import get_config
+from repro.testing import tiny_config
+
+
+def _setup(arch="qwen3-moe-30b-a3b", **moe_kw):
+    cfg = tiny_config(get_config(arch))
+    if moe_kw:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, **moe_kw))
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    p_moe = {k[len("decoder/"):]: v[0]
+             for k, v in params.items() if k.startswith("decoder/moe")}
+    return cfg, p_moe
+
+
+def test_chunked_equals_unchunked(rng):
+    cfg, p = _setup(capacity_factor=8.0, eval_capacity_factor=8.0)
+    x = jnp.asarray(rng.randn(2, 16, cfg.d_model).astype(np.float32) * 0.3)
+    o1, a1 = _moe_tokens(cfg, x, p, "moe", train=False)
+    # force chunking by reshaping through moe_block on a longer seq built
+    # from tiling — instead compare two manual chunk sizes
+    xa = x[:, :8]
+    xb = x[:, 8:]
+    oa, _ = _moe_tokens(cfg, xa, p, "moe", train=False)
+    ob, _ = _moe_tokens(cfg, xb, p, "moe", train=False)
+    o2 = jnp.concatenate([oa, ob], axis=1)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_no_drop_outputs_match_manual_topk(rng):
+    cfg, p = _setup(capacity_factor=8.0, eval_capacity_factor=8.0,
+                    n_shared_experts=0)
+    m = cfg.moe
+    x = jnp.asarray(rng.randn(1, 6, cfg.d_model).astype(np.float32) * 0.3)
+    out, _ = _moe_tokens(cfg, x, p, "moe", train=False)
+
+    # manual per-token computation
+    xf = np.asarray(x).reshape(6, cfg.d_model)
+    logits = xf @ np.asarray(p["moe/router"], np.float32)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    ref = np.zeros_like(xf)
+    for t in range(6):
+        top = np.argsort(-probs[t])[: m.top_k]
+        w = probs[t][top] / probs[t][top].sum()
+        for e, we in zip(top, w):
+            wg = np.asarray(p["moe/we_gate"][e], np.float32)
+            wu = np.asarray(p["moe/we_up"][e], np.float32)
+            wd = np.asarray(p["moe/we_down"][e], np.float32)
+            h = (xf[t] @ wg)
+            h = h / (1 + np.exp(-h)) * (xf[t] @ wu)
+            ref[t] += we * (h @ wd)
+    np.testing.assert_allclose(np.asarray(out).reshape(6, -1), ref,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_capacity_drops_tokens_gracefully(rng):
+    cfg, p = _setup(capacity_factor=0.1, eval_capacity_factor=0.1,
+                    n_shared_experts=0)
+    x = jnp.asarray(rng.randn(2, 32, cfg.d_model).astype(np.float32))
+    out, _ = _moe_tokens(cfg, x, p, "moe", train=True)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # some rows should be exactly zero (dropped -> residual only)
+    norms = np.linalg.norm(np.asarray(out).reshape(-1, cfg.d_model), axis=1)
+    assert (norms < 1e-7).any()
+
+
+def test_aux_losses_positive_and_bounded(rng):
+    cfg, p = _setup()
+    x = jnp.asarray(rng.randn(2, 16, cfg.d_model).astype(np.float32))
+    _, aux = _moe_tokens(cfg, x, p, "moe", train=True)
+    lb = float(aux["moe_load_balance"])
+    assert 0.5 < lb < float(cfg.moe.n_experts)
+    assert float(aux["moe_z_loss"]) >= 0
+
+
+def test_phantom_expert_padding_never_selected(rng):
+    """qwen2's 60 experts pad to the TP multiple; phantoms get -inf router
+    logits so no token routes to them."""
+    from repro.sharding.api import ShardingContext, _STATE
+    from repro.sharding.rules import rules_for
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 2, "model": 8}
+
+    cfg = tiny_config(get_config("qwen2-moe-a2.7b"))
+    # simulate a padded router (n_experts=8 real, padded to 16)
+    cfg2 = cfg.replace(moe=dataclasses.replace(cfg.moe, n_experts=6))
+    m = build_model(cfg2)
+    ctx = ShardingContext(FakeMesh(), rules_for("moe"), ("data",))
+    _STATE.ctx = ctx
+    try:
+        specs = m.param_specs()
+        e_pad = specs["decoder/moe/router"].shape[-1]
+        assert e_pad == 8                       # padded to model axis
+    finally:
+        _STATE.ctx = None
+    params = {k: jnp.zeros(s.shape, jnp.dtype(s.dtype))
+              for k, s in specs.items()}
+    p_moe = {k[len("decoder/"):]: v[0]
+             for k, v in params.items() if k.startswith("decoder/moe")}
+    x = jnp.asarray(rng.randn(1, 4, cfg2.d_model).astype(np.float32))
+    out, _ = _moe_tokens(cfg2, x, p_moe, "moe", train=True)
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,105 @@
+"""Optimizer + grad compression + train-step machinery."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import OptimizerConfig
+from repro.training import adamw_init, adamw_update, lr_schedule
+from repro.training.grad_compression import (compress_decompress,
+                                             compress_with_error_feedback,
+                                             quantize_int8)
+
+
+def test_adamw_minimizes_quadratic():
+    opt = OptimizerConfig(lr=0.1, warmup_steps=5, total_steps=200,
+                          weight_decay=0.0, grad_clip=0)
+    target = jnp.asarray(np.random.RandomState(0).randn(8).astype(np.float32))
+    params = {"w": jnp.zeros(8)}
+    st = adamw_init(params, opt)
+    for _ in range(150):
+        g = {"w": 2 * (params["w"] - target)}
+        params, st, _ = adamw_update(params, g, st, opt)
+    assert float(jnp.max(jnp.abs(params["w"] - target))) < 0.05
+
+
+def test_grad_clip_bounds_update():
+    opt = OptimizerConfig(lr=1.0, warmup_steps=0, total_steps=10,
+                          grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    st = adamw_init(params, opt)
+    g = {"w": jnp.full(4, 1e6)}
+    _, _, metrics = adamw_update(params, g, st, opt)
+    assert float(metrics["grad_norm"]) > 1e5      # raw norm reported
+
+
+def test_lr_schedule_warmup_and_cosine():
+    opt = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=110)
+    assert float(lr_schedule(opt, jnp.asarray(0))) < 0.2
+    assert float(lr_schedule(opt, jnp.asarray(9))) == pytest.approx(1.0)
+    assert float(lr_schedule(opt, jnp.asarray(109))) < 0.01
+
+
+def test_no_weight_decay_on_norms():
+    opt = OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=10,
+                          weight_decay=1.0, grad_clip=0)
+    params = {"layer/norm1/scale": jnp.ones(4), "layer/w": jnp.ones(4)}
+    st = adamw_init(params, opt)
+    g = {k: jnp.zeros(4) for k in params}
+    new, _, _ = adamw_update(params, g, st, opt)
+    assert float(jnp.max(jnp.abs(new["layer/norm1/scale"] - 1.0))) < 1e-6
+    assert float(jnp.max(jnp.abs(new["layer/w"] - 1.0))) > 0.01
+
+
+def test_int8_quantization_error_bounded():
+    g = jnp.asarray(np.random.RandomState(1).randn(256).astype(np.float32))
+    q, s = quantize_int8(g)
+    err = jnp.abs(q.astype(jnp.float32) * s - g)
+    assert float(jnp.max(err)) <= float(s) / 2 + 1e-7
+
+
+def test_error_feedback_accumulates_lost_mass():
+    rng = np.random.RandomState(2)
+    grads = {"w": jnp.asarray(rng.randn(64).astype(np.float32))}
+    plain = compress_decompress(grads)
+    # one-shot loss
+    loss1 = float(jnp.sum(jnp.abs(plain["w"] - grads["w"])))
+    # error feedback: over repeated identical grads, the RUNNING SUM of
+    # transmitted gradients converges to the running sum of true gradients
+    err = None
+    sent = jnp.zeros(64)
+    for i in range(20):
+        out, err = compress_with_error_feedback(grads, err)
+        sent = sent + out["w"]
+    drift = float(jnp.max(jnp.abs(sent - 20 * grads["w"])))
+    assert drift <= loss1 + 1e-5       # residual bounded, not accumulating
+
+
+def test_train_step_grad_accum_matches_full_batch():
+    """accum=2 over a linear model == single step on the full batch."""
+    from repro.config import TrainConfig
+    from repro.models.model import build_model
+    from repro.registry import get_config
+    from repro.training import make_train_step
+
+    cfg = get_config("top-tagging-gru")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    tc = TrainConfig(optimizer=OptimizerConfig(lr=1e-2, warmup_steps=0,
+                                               total_steps=10, grad_clip=0,
+                                               weight_decay=0))
+    x = jnp.asarray(np.random.RandomState(0)
+                    .randn(8, 20, 6).astype(np.float32))
+    y = jnp.asarray(np.arange(8) % 2, dtype=jnp.int32)
+    batch = {"x": x, "y": y}
+
+    s1 = make_train_step(m, tc, grad_accum=1)
+    s2 = make_train_step(m, tc, grad_accum=2)
+    st = adamw_init(params, tc.optimizer)
+    p1, _, m1 = jax.jit(s1)(params, st, batch)
+    p2, _, m2 = jax.jit(s2)(params, st, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    for k in p1:
+        np.testing.assert_allclose(np.asarray(p1[k]), np.asarray(p2[k]),
+                                   rtol=1e-4, atol=1e-5)

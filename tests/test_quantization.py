@@ -1,0 +1,97 @@
+"""ap_fixed emulation properties + PTQ machinery (paper Sec. 5.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import FixedPointConfig
+from repro.core.quant.fixed_point import (fixed_point_error_bound, quantize,
+                                          quantize_np, saturates)
+from repro.core.quant.ptq import binary_auc, multiclass_mean_auc
+
+
+@given(total=st.integers(4, 22), integer=st.integers(1, 10))
+@settings(max_examples=20, deadline=None)
+def test_quantize_idempotent(total, integer):
+    if integer >= total:
+        return
+    fp = FixedPointConfig(total_bits=total, integer_bits=integer)
+    x = jnp.asarray(np.random.RandomState(total).randn(64).astype(np.float32))
+    q1 = quantize(x, fp)
+    q2 = quantize(q1, fp)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@given(total=st.integers(4, 20), integer=st.integers(1, 10))
+@settings(max_examples=20, deadline=None)
+def test_quantize_on_grid_and_bounded_error(total, integer):
+    if integer >= total:
+        return
+    fp = FixedPointConfig(total_bits=total, integer_bits=integer)
+    r = np.random.RandomState(integer * 7 + total)
+    x = r.randn(256).astype(np.float32) * 2
+    q = np.asarray(quantize(jnp.asarray(x), fp))
+    # grid membership: q * 2^F integral
+    scaled = q * fp.scale
+    np.testing.assert_allclose(scaled, np.round(scaled), atol=1e-3)
+    # range respected
+    assert q.max() <= fp.max_value + 1e-6
+    assert q.min() >= fp.min_value - 1e-6
+    # error bound for in-range values
+    inr = (x < fp.max_value) & (x > fp.min_value)
+    assert np.abs(q[inr] - x[inr]).max() <= fixed_point_error_bound(fp) + 1e-6
+
+
+def test_saturation_vs_wrap():
+    fp_sat = FixedPointConfig(8, 4, saturation="sat")
+    x = jnp.asarray([100.0, -100.0])
+    q = np.asarray(quantize(x, fp_sat))
+    assert q[0] == pytest.approx(fp_sat.max_value)
+    assert q[1] == pytest.approx(fp_sat.min_value)
+
+
+def test_truncation_mode_rounds_down():
+    fp = FixedPointConfig(8, 4, rounding="trn")
+    q = float(quantize(jnp.asarray([0.99 / 16 + 0.3]), fp)[0])
+    # floor to the grid below
+    assert q <= 0.3 + 0.99 / 16
+
+
+def test_host_and_device_quantizers_agree():
+    fp = FixedPointConfig(16, 6)
+    x = np.random.RandomState(0).randn(128).astype(np.float32) * 4
+    a = quantize_np(x, fp)
+    b = np.asarray(quantize(jnp.asarray(x), fp))
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_more_fractional_bits_reduce_error():
+    r = np.random.RandomState(1)
+    x = jnp.asarray(r.randn(512).astype(np.float32))
+    errs = []
+    for fb in (2, 4, 8, 12):
+        fp = FixedPointConfig(6 + fb, 6)
+        errs.append(float(jnp.abs(quantize(x, fp) - x).max()))
+    assert all(a >= b for a, b in zip(errs, errs[1:]))
+
+
+def test_saturates_diagnostic():
+    fp = FixedPointConfig(8, 2)
+    x = jnp.asarray([0.0, 0.5, 10.0, -10.0])
+    assert float(saturates(x, fp)) == pytest.approx(0.5)
+
+
+# -- AUC machinery ------------------------------------------------------------
+
+def test_binary_auc_perfect_and_random():
+    y = np.array([0, 0, 1, 1])
+    assert binary_auc(np.array([0.1, 0.2, 0.8, 0.9]), y) == 1.0
+    assert binary_auc(np.array([0.9, 0.8, 0.2, 0.1]), y) == 0.0
+    assert binary_auc(np.array([0.5, 0.5, 0.5, 0.5]), y) == pytest.approx(0.5)
+
+
+def test_multiclass_auc():
+    probs = np.eye(3)[np.array([0, 1, 2, 0, 1, 2])] * 0.9 + 0.03
+    y = np.array([0, 1, 2, 0, 1, 2])
+    assert multiclass_mean_auc(probs, y) == 1.0

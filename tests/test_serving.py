@@ -1,0 +1,75 @@
+"""Serving layer: micro-batcher policy, LM continuous batching, RNN engine."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import build_model
+from repro.registry import get_config
+from repro.serving import LMServingEngine, MicroBatcher, RNNServingEngine
+from repro.testing import tiny_config
+
+
+def test_microbatcher_flushes_on_size_and_timeout():
+    mb = MicroBatcher(max_batch=3, max_wait_s=1.0)
+    mb.submit(np.zeros(2), now=0.0)
+    assert not mb.ready(now=0.5)
+    mb.submit(np.zeros(2), now=0.5)
+    mb.submit(np.zeros(2), now=0.6)
+    assert mb.ready(now=0.6)               # size trigger
+    done = mb.run(lambda x: x + 1, now=0.7)
+    assert len(done) == 3
+    assert done[0].latency_s == pytest.approx(0.7)
+    mb.submit(np.zeros(2), now=1.0)
+    assert not mb.ready(now=1.5)
+    assert mb.ready(now=2.1)               # timeout trigger
+
+
+def test_rnn_engine_static_nonstatic_same_predictions(rng):
+    cfg = get_config("top-tagging-gru")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    x = rng.randn(9, 20, 6).astype(np.float32)
+    p1 = RNNServingEngine(cfg, params, mode="static").predict(x)
+    p2 = RNNServingEngine(cfg, params, mode="nonstatic").predict(x)
+    np.testing.assert_allclose(p1, p2, rtol=1e-5, atol=1e-6)
+
+
+def test_rnn_engine_pallas_impl(rng):
+    cfg = get_config("top-tagging-lstm")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    x = rng.randn(5, 20, 6).astype(np.float32)
+    p1 = RNNServingEngine(cfg, params, impl="xla").predict(x)
+    p2 = RNNServingEngine(cfg, params, impl="pallas").predict(x)
+    np.testing.assert_allclose(p1, p2, rtol=1e-4, atol=1e-5)
+
+
+def test_lm_engine_continuous_batching_slot_reuse():
+    cfg = tiny_config(get_config("stablelm-3b"))
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = LMServingEngine(cfg, params, max_batch=2, max_seq=32)
+    a = eng.add_request([3, 4, 5], max_new=2)
+    b = eng.add_request([6], max_new=3)
+    assert eng.add_request([7]) is None    # full
+    done = eng.run_to_completion()
+    assert set(done) == {a, b}
+    assert len(done[a]) == 3 + 2 and len(done[b]) == 1 + 3
+    # slots recycled
+    c = eng.add_request([8, 9], max_new=2)
+    assert c is not None
+    done2 = eng.run_to_completion()
+    assert len(done2[c]) == 4
+
+
+def test_lm_engine_greedy_determinism():
+    cfg = tiny_config(get_config("gemma-2b"))
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    outs = []
+    for _ in range(2):
+        eng = LMServingEngine(cfg, params, max_batch=2, max_seq=32)
+        rid = eng.add_request([5, 11, 2], max_new=5)
+        outs.append(tuple(eng.run_to_completion()[rid]))
+    assert outs[0] == outs[1]

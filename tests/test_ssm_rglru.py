@@ -1,0 +1,96 @@
+"""SSD (Mamba-2) and RG-LRU numerics: chunked vs naive recurrence, chunk-size
+invariance, prefill->decode state handoff continuity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.rglru import _scan_linear_recurrence
+from repro.models.ssm import _ssd_chunked
+
+
+def _naive_ssd(xdt, log_a, B, C):
+    b, s, h, p = xdt.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    y = np.zeros((b, s, h, p), np.float32)
+    state = np.zeros((b, h, p, n), np.float32)
+    for t in range(s):
+        for hh in range(h):
+            gi = hh // hg
+            a = np.exp(log_a[:, t, hh])
+            state[:, hh] = (state[:, hh] * a[:, None, None]
+                            + xdt[:, t, hh][:, :, None] * B[:, t, gi][:, None, :])
+            y[:, t, hh] = np.einsum("bpn,bn->bp", state[:, hh], C[:, t, gi])
+    return y, state
+
+
+def _rand_ssd(rng, b=2, s=24, h=4, p=8, g=2, n=16):
+    xdt = rng.randn(b, s, h, p).astype(np.float32) * 0.5
+    log_a = -np.abs(rng.randn(b, s, h)).astype(np.float32) * 0.3
+    B = rng.randn(b, s, g, n).astype(np.float32) * 0.3
+    C = rng.randn(b, s, g, n).astype(np.float32) * 0.3
+    return xdt, log_a, B, C
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 24])
+def test_ssd_chunked_matches_naive(chunk, rng):
+    xdt, log_a, B, C = _rand_ssd(rng)
+    y_ref, st_ref = _naive_ssd(xdt, log_a, B, C)
+    y, st = _ssd_chunked(jnp.asarray(xdt), jnp.asarray(log_a),
+                         jnp.asarray(B), jnp.asarray(C), chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st).reshape(st_ref.shape), st_ref,
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_non_divisible_seq_padding(rng):
+    xdt, log_a, B, C = _rand_ssd(rng, s=13)
+    y_ref, st_ref = _naive_ssd(xdt, log_a, B, C)
+    y, st = _ssd_chunked(jnp.asarray(xdt), jnp.asarray(log_a),
+                         jnp.asarray(B), jnp.asarray(C), chunk=8)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st).reshape(st_ref.shape), st_ref,
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_initial_state_continuity(rng):
+    """Running [0:s1] then [s1:] with the carried state == running [0:s]."""
+    xdt, log_a, B, C = _rand_ssd(rng, s=32)
+    j = lambda t: jnp.asarray(t)
+    y_full, st_full = _ssd_chunked(j(xdt), j(log_a), j(B), j(C), chunk=8)
+    s1 = 16
+    y1, st1 = _ssd_chunked(j(xdt[:, :s1]), j(log_a[:, :s1]), j(B[:, :s1]),
+                           j(C[:, :s1]), chunk=8)
+    y2, st2 = _ssd_chunked(j(xdt[:, s1:]), j(log_a[:, s1:]), j(B[:, s1:]),
+                           j(C[:, s1:]), chunk=8, initial_state=st1)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, s1:]),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(s=st.integers(2, 40), w=st.sampled_from([4, 16]))
+@settings(max_examples=10, deadline=None)
+def test_linear_recurrence_property(s, w):
+    r = np.random.RandomState(s * 13 + w)
+    a = jnp.asarray(np.exp(-np.abs(r.randn(2, s, w))).astype(np.float32))
+    b = jnp.asarray(r.randn(2, s, w).astype(np.float32))
+    h = np.asarray(_scan_linear_recurrence(a, b))
+    hh = np.zeros((2, w), np.float32)
+    for t in range(s):
+        hh = np.asarray(a)[:, t] * hh + np.asarray(b)[:, t]
+        np.testing.assert_allclose(h[:, t], hh, rtol=3e-5, atol=3e-5)
+
+
+def test_linear_recurrence_with_initial_state(rng):
+    a = jnp.asarray(np.exp(-np.abs(rng.randn(1, 8, 4))).astype(np.float32))
+    b = jnp.asarray(rng.randn(1, 8, 4).astype(np.float32))
+    h0 = jnp.asarray(rng.randn(1, 4).astype(np.float32))
+    h = _scan_linear_recurrence(a, b, h0)
+    hh = np.asarray(h0).copy()
+    for t in range(8):
+        hh = np.asarray(a)[:, t] * hh + np.asarray(b)[:, t]
+    np.testing.assert_allclose(np.asarray(h[:, -1]), hh, rtol=3e-5, atol=3e-5)
