@@ -12,12 +12,30 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.config import FixedPointConfig
+from repro.core.hls.resources import estimate_schedule
 from repro.kernels import ops, ref
 from repro.kernels.reuse_matmul import vmem_bytes
+from repro.kernels.schedule import KernelSchedule
+from repro.registry import get_config
+from repro.testing import assert_schedule_conformance
 
 
 def run(full: bool = False):
     rng = np.random.RandomState(0)
+
+    # the KernelSchedule sweep: conformance error + latency/DSP derived from
+    # the SAME schedule object the kernel just executed (paper Fig. 1 curve)
+    rnn = get_config("top-tagging-lstm").rnn
+    reuses = (1, 2, 4, 8, 16) if full else (1, 2, 4, 8)
+    for sched in KernelSchedule.sweep(reuses, block_batch=8,
+                                      backend="pallas_interpret"):
+        err = assert_schedule_conformance(
+            "lstm", sched, B=4, T=rnn.seq_len, F=rnn.input_size, H=rnn.hidden)
+        est = estimate_schedule(sched, rnn)
+        emit(f"kernels/schedule/lstm/{sched.mode}/R{sched.reuse_factor}",
+             float(est.latency_cycles),
+             f"max_err={err:.2e}|ii={est.ii_cycles}|dsp={est.dsp}"
+             f"|bram={est.bram_18k}|vmem_bytes={est.vmem_bytes}")
 
     # correctness deltas (paper benchmark shapes)
     for name, B, T, F, H in (("top", 8, 20, 6, 20),

@@ -8,7 +8,9 @@ import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.config import FixedPointConfig
-from repro.core.hls import RNNDesignPoint, estimate_design
+from repro.core.hls import (RNNDesignPoint, design_point_for_schedule,
+                            estimate_design)
+from repro.kernels.schedule import KernelSchedule
 from repro.models import build_model
 from repro.registry import get_config
 from repro.serving import RNNServingEngine
@@ -23,8 +25,9 @@ def run(full: bool = False):
     params = m.init(jax.random.PRNGKey(0))
 
     for mode in ("static", "nonstatic"):
-        d = estimate_design(RNNDesignPoint(
-            cfg, FixedPointConfig(10, 6), strategy="latency", mode=mode))
+        sched = KernelSchedule(mode=mode)
+        d = estimate_design(design_point_for_schedule(
+            cfg, sched, FixedPointConfig(10, 6), strategy="latency"))
         p = PAPER_T5[mode]
         emit(f"table5/{mode}", d.latency_min_us,
              f"ii={d.ii_cycles}|paper_ii={p['ii']}"
@@ -37,6 +40,17 @@ def run(full: bool = False):
         b = eng.benchmark(batch=1, iters=20)
         emit(f"table5/{mode}/measured_batch1", b["latency_s"] * 1e6,
              f"throughput={b['throughput_eps']:.0f}eps")
+
+    # Fig 1 latency-resource curve: one schedule object sweeps it, and the
+    # same object is what kernels/ops.py executes on TPU.  R values are
+    # divisors of the GRU gate dim (3h = 60) so effective reuse == R —
+    # the same hls4ml-style values the paper's Table 2 sweeps
+    for sched in KernelSchedule.sweep((1, 2, 6, 12, 30)):
+        d = estimate_design(design_point_for_schedule(
+            cfg, sched, FixedPointConfig(16, 6)))
+        emit(f"fig1/{sched.mode}/R{sched.reuse_factor}", d.latency_min_us,
+             f"dsp={d.dsp}|lut={d.lut}|bram={d.bram_18k}|ii={d.ii_cycles}"
+             f"|fits={d.fits}")
 
     # Fig 6: resource blowup of nonstatic vs static across widths
     for W in (10, 14, 18):

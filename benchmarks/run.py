@@ -9,21 +9,52 @@
   bench_roofline           §Roofline rows from the dry-run artifacts
 
 ``--full`` widens sweeps (all 6 tagger models, finer quantization grid).
+``--smoke`` is the CI fail-fast path: import every bench module (catching
+import-time API drift), then run a minimal KernelSchedule conformance sweep;
+exits non-zero on ANY failure instead of swallowing it.
 """
 
 import argparse
+import os
 import sys
 import time
 
-sys.path.insert(0, "src")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+
+def smoke() -> int:
+    """Fast import + conformance check; returns a process exit code."""
+    t0 = time.time()
+    from benchmarks import (bench_kernels, bench_latency_resources,  # noqa: F401
+                            bench_quantization, bench_roofline,
+                            bench_static_nonstatic, bench_throughput)
+    print("smoke/imports,0,ok")
+
+    from repro.kernels.schedule import KernelSchedule
+    from repro.testing import assert_schedule_conformance
+    for cell in ("lstm", "gru"):
+        for sched in KernelSchedule.sweep((1, 4), block_batch=8,
+                                          backend="pallas_interpret"):
+            err = assert_schedule_conformance(cell, sched, B=3, T=5, F=4, H=8)
+            print(f"smoke/{cell}/{sched.mode}/R{sched.reuse_factor},"
+                  f"0,max_err={err:.1e}")
+    print(f"smoke/wall_s,{(time.time()-t0)*1e6:.0f},ok")
+    return 0
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="import benches + minimal schedule sweep, fail fast")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (e.g. roofline,kernels)")
     args, _ = ap.parse_known_args()
+
+    if args.smoke:
+        sys.exit(smoke())
 
     from benchmarks import (bench_kernels, bench_latency_resources,
                             bench_quantization, bench_roofline,

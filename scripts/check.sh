@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Fail-fast repo check: import-time regressions first, then tier-1 tests.
+#
+#   1. pytest --collect-only  — catches JAX API drift at import time (the
+#      AxisType / TPUCompilerParams class of breakage) in seconds
+#   2. benchmarks/run.py --smoke — bench imports + minimal schedule sweep
+#   3. tier-1: pytest -x -q   — the full suite, first failure stops
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== collection (import-time) check =="
+python -m pytest -q --collect-only >/dev/null
+
+echo "== benchmark smoke =="
+python benchmarks/run.py --smoke
+
+echo "== tier-1 tests =="
+python -m pytest -x -q

@@ -11,6 +11,8 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
+from repro.kernels.schedule import KernelSchedule
+
 # ---------------------------------------------------------------------------
 # Sub-configs
 # ---------------------------------------------------------------------------
@@ -68,6 +70,15 @@ class RNNConfig:
     # hls4ml-style knobs
     reuse_kernel: int = 1
     reuse_recurrent: int = 1
+    # explicit kernel schedule; None derives one from the knobs above
+    schedule: Optional[KernelSchedule] = None
+
+    def kernel_schedule(self) -> KernelSchedule:
+        """The schedule this layer executes AND is costed with — models pick
+        it from config, kernels run it, core.hls estimates from it."""
+        if self.schedule is not None:
+            return self.schedule
+        return KernelSchedule(reuse_factor=self.reuse_kernel, mode=self.mode)
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,13 @@
 from repro.core.hls.design import (  # noqa: F401
     HLSDesign,
     RNNDesignPoint,
+    design_point_for_schedule,
     estimate_design,
+    estimate_design_for_schedule,
+    schedule_estimate_for,
 )
-from repro.core.hls.resources import FPGA_PARTS  # noqa: F401
+from repro.core.hls.resources import (  # noqa: F401
+    FPGA_PARTS,
+    ScheduleEstimate,
+    estimate_schedule,
+)

@@ -22,7 +22,14 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
 from repro.config import FixedPointConfig, ModelConfig, RNNConfig
-from repro.core.hls.resources import FPGA_PARTS, FPGAPart, mults_per_dsp
+from repro.core.hls.resources import (
+    FPGA_PARTS,
+    FPGAPart,
+    ScheduleEstimate,
+    estimate_schedule,
+    mults_per_dsp,
+)
+from repro.kernels.schedule import KernelSchedule
 
 
 # per-benchmark calibration: (c_pipe cycles, max-min latency offset cycles,
@@ -161,6 +168,41 @@ def estimate_design(pt: RNNDesignPoint) -> HLSDesign:
         fits=fits,
         part=part.name,
     )
+
+
+def design_point_for_schedule(cfg: ModelConfig, schedule: KernelSchedule,
+                              fp: Optional[FixedPointConfig] = None,
+                              **kw) -> RNNDesignPoint:
+    """Bridge a kernel schedule to the table-calibrated design-space model:
+    the SAME object that executes on TPU (kernels/ops.py) prices out the
+    FPGA design, so sweeping schedules sweeps the paper's Fig. 1 curve.
+
+    The reuse factor is clamped to the divisor the kernel actually executes
+    (effective_reuse), keeping the priced design and the executed schedule
+    in lockstep for non-divisor R requests.
+    """
+    assert cfg.rnn is not None
+    g = 4 if cfg.rnn.cell == "lstm" else 3
+    r_eff = schedule.effective_reuse(g * cfg.rnn.hidden)
+    return RNNDesignPoint(
+        cfg, fp if fp is not None else FixedPointConfig(),
+        reuse_kernel=r_eff,
+        reuse_recurrent=r_eff,
+        mode=schedule.mode, **kw)
+
+
+def estimate_design_for_schedule(cfg: ModelConfig, schedule: KernelSchedule,
+                                 fp: Optional[FixedPointConfig] = None,
+                                 **kw) -> HLSDesign:
+    return estimate_design(design_point_for_schedule(cfg, schedule, fp, **kw))
+
+
+def schedule_estimate_for(cfg: ModelConfig, schedule: KernelSchedule,
+                          fp: Optional[FixedPointConfig] = None
+                          ) -> ScheduleEstimate:
+    """Kernel-level (gate matmul) estimate from the same schedule object."""
+    assert cfg.rnn is not None
+    return estimate_schedule(schedule, cfg.rnn, fp)
 
 
 # paper Sec. 5.2 GPU reference points (Nvidia V100, QuickDraw LSTM)

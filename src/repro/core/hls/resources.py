@@ -1,8 +1,17 @@
-"""FPGA part catalogue (paper Sec. 5) and DSP packing rules."""
+"""FPGA part catalogue (paper Sec. 5), DSP packing rules, and the
+schedule-driven latency/resource estimator.
+
+``estimate_schedule`` consumes the SAME :class:`KernelSchedule` object the
+Pallas kernels execute (kernels/ops.py), so the latency-cycle count is by
+construction the kernel's sequential grid length and the DSP/BRAM/VMEM
+numbers describe the weight tile that schedule actually keeps live.
+"""
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+
+from repro.kernels.schedule import KernelSchedule
 
 
 @dataclass(frozen=True)
@@ -36,3 +45,77 @@ def mults_per_dsp(total_bits: int) -> float:
     if total_bits <= 27:
         return 2.0
     return 4.0
+
+
+# ---------------------------------------------------------------------------
+# Schedule-driven estimates (the software side of the paper's Fig. 1 curve)
+# ---------------------------------------------------------------------------
+
+# pipeline depth of one reuse pass (activation LUT + accumulate), cycles
+_C_PIPE = 4
+
+
+@dataclass(frozen=True)
+class ScheduleEstimate:
+    """What one (cell, schedule) point costs, in paper units.
+
+    latency_cycles  end-to-end cycles for ONE inference — grows with R
+    ii_cycles       cycles before the next inference can enter
+    dsp             parallel multipliers live at once (x seq_len blocks for
+                    non-static) — shrinks with R
+    bram_18k        weight storage (non-static replicates per block)
+    vmem_bytes      TPU analogue: live weight tile + scratch per kernel step
+    """
+
+    schedule: KernelSchedule
+    latency_cycles: int
+    ii_cycles: int
+    dsp: int
+    bram_18k: int
+    vmem_bytes: int
+
+
+def gate_mults(cell: str, input_size: int, hidden: int) -> int:
+    """Multiplications of one recurrent step (kernel + recurrent matmul)."""
+    g = 4 if cell == "lstm" else 3
+    return (input_size + hidden) * g * hidden
+
+
+def estimate_schedule(schedule: KernelSchedule, rnn, fp=None
+                      ) -> ScheduleEstimate:
+    """Latency/resource estimate derived from the schedule object itself.
+
+    ``rnn`` is an ``RNNConfig``; ``fp`` an optional ``FixedPointConfig``
+    (defaults to the paper's ap_fixed<16,6>).  Monotone by construction:
+    latency_cycles rises and dsp falls as reuse_factor grows.
+    """
+    total_bits = fp.total_bits if fp is not None else 16
+    g = 4 if rnn.cell == "lstm" else 3
+    # price what EXECUTES: the kernels clamp reuse to a divisor of the gate
+    # dim (ops.py), so the estimate must use the same effective R or it
+    # would describe a schedule that never runs
+    R = schedule.effective_reuse(g * rnn.hidden)
+    mults = gate_mults(rnn.cell, rnn.input_size, rnn.hidden)
+
+    # latency/II in kernel sequential steps (exactly the Pallas grid length
+    # (B/bt, T, R_eff)), each step costing a pipeline constant
+    latency = rnn.seq_len * R + _C_PIPE
+    ii = (rnn.seq_len * R if schedule.mode == "static"
+          else R + _C_PIPE)
+
+    # parallel multipliers per block = mults / R; non-static has seq_len
+    # blocks in silicon (Fig. 6 resource blowup)
+    blocks = rnn.seq_len if schedule.mode == "nonstatic" else 1
+    dsp = int(-(-mults // R) * mults_per_dsp(total_bits)) * blocks
+    weight_bits = mults * total_bits
+    bram = int(-(-weight_bits // 18432)) * blocks
+
+    # TPU: live weight column tile + gate scratch + state, f32
+    gw = (g * rnn.hidden) // R
+    bt = schedule.block_batch
+    vmem = 4 * ((rnn.input_size + rnn.hidden) * gw        # weight tile
+                + bt * g * rnn.hidden                     # z scratch
+                + 2 * bt * rnn.hidden)                    # h, c state
+    return ScheduleEstimate(schedule=schedule, latency_cycles=latency,
+                            ii_cycles=ii, dsp=dsp, bram_18k=bram,
+                            vmem_bytes=vmem)

@@ -50,12 +50,38 @@ def rnn_param_specs(rnn: RNNConfig, prefix: str = "rnn") -> ParamSpecs:
 # ---------------------------------------------------------------------------
 
 
+def tiled_matmul(x: jax.Array, w: jax.Array, reuse: int = 1) -> jax.Array:
+    """x @ w computed as ``reuse`` sequential column tiles — the cell-level
+    realization of the schedule's reuse factor.  Column tiles are
+    independent, so any R agrees with R=1 up to fp accumulation order
+    (each output column is the same dot product); what changes is the live
+    weight working set, which the Pallas kernels and the HLS estimators
+    track.  The hot XLA path (layer.py) always uses R=1; this exists for
+    explicit schedule emulation and as documentation of the partitioning.
+    """
+    if reuse <= 1:
+        return x @ w
+    n = w.shape[-1]
+    assert n % reuse == 0, (n, reuse)
+    ns = n // reuse
+    return jnp.concatenate(
+        [x @ w[:, r * ns:(r + 1) * ns] for r in range(reuse)], axis=-1)
+
+
 def lstm_cell(x_t: jax.Array, state: Tuple[jax.Array, jax.Array],
-              W: jax.Array, U: jax.Array, b: jax.Array):
-    """One LSTM step.  x_t: [b, in]; state = (h, c): [b, h] each."""
+              W: jax.Array, U: jax.Array, b: jax.Array, *, reuse: int = 1,
+              matmul=None):
+    """One LSTM step.  x_t: [b, in]; state = (h, c): [b, h] each.
+
+    ``matmul`` swaps the gate matmul implementation (the non-static Pallas
+    path injects its column-serialized kernel here, so the gate equations
+    live in exactly one place); default is ``tiled_matmul`` at ``reuse``.
+    """
+    mm = matmul if matmul is not None else (
+        lambda a, w: tiled_matmul(a, w, reuse))
     h_prev, c_prev = state
     hdim = h_prev.shape[-1]
-    z = x_t @ W + h_prev @ U + b                     # [b, 4h]
+    z = mm(x_t, W) + mm(h_prev, U) + b
     i, f, g, o = (z[..., :hdim], z[..., hdim:2 * hdim],
                   z[..., 2 * hdim:3 * hdim], z[..., 3 * hdim:])
     i = jax.nn.sigmoid(i)
@@ -68,14 +94,18 @@ def lstm_cell(x_t: jax.Array, state: Tuple[jax.Array, jax.Array],
 
 
 def gru_cell(x_t: jax.Array, state: jax.Array,
-             W: jax.Array, U: jax.Array, b: jax.Array):
+             W: jax.Array, U: jax.Array, b: jax.Array, *, reuse: int = 1,
+             matmul=None):
     """One GRU step (reset_after).  x_t: [b, in]; state h: [b, h];
-    b: [2, 3h] = (input bias; recurrent bias)."""
+    b: [2, 3h] = (input bias; recurrent bias).  ``matmul`` as in lstm_cell.
+    """
+    mm = matmul if matmul is not None else (
+        lambda a, w: tiled_matmul(a, w, reuse))
     h_prev = state
     hdim = h_prev.shape[-1]
     b_in, b_rec = b[0], b[1]
-    zx = x_t @ W + b_in                              # [b, 3h]
-    zh = h_prev @ U + b_rec
+    zx = mm(x_t, W) + b_in                           # [b, 3h]
+    zh = mm(h_prev, U) + b_rec
     zxz, zxr, zxh = jnp.split(zx, 3, axis=-1)
     zhz, zhr, zhh = jnp.split(zh, 3, axis=-1)
     z = jax.nn.sigmoid(zxz + zhz)

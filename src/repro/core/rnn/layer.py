@@ -31,6 +31,7 @@ from repro.core.rnn.cells import (
     lstm_cell,
     lstm_cell_quantized,
 )
+from repro.kernels.schedule import KernelSchedule
 
 
 def _cell_fn(cell: str, fp: Optional[FixedPointConfig]):
@@ -53,18 +54,30 @@ def rnn_layer(
     fp: Optional[FixedPointConfig] = None,
     mode: Optional[str] = None,
     impl: str = "xla",
+    schedule: Optional[KernelSchedule] = None,
 ) -> jax.Array:
-    """Run the recurrent layer; returns the final hidden state [b, h]."""
-    mode = mode or rnn.mode
+    """Run the recurrent layer; returns the final hidden state [b, h].
+
+    The execution schedule comes from (highest priority first) the
+    ``schedule`` argument, the config's ``rnn.kernel_schedule()``, with the
+    explicit ``mode`` argument overriding the schedule's mode either way.
+    """
+    schedule = schedule or rnn.kernel_schedule()
+    if mode is not None and mode != schedule.mode:
+        schedule = schedule.replace(mode=mode)
+    mode = schedule.mode
     batch = xs.shape[0]
+    # XLA cells always run reuse=1: column tiling is bit-identical there
+    # (cells.tiled_matmul) and only costs graph size; the reuse factor takes
+    # physical effect in the Pallas kernels and the HLS estimators
     cell = _cell_fn(rnn.cell, fp)
     s0 = initial_state(rnn.cell, batch, rnn.hidden, xs.dtype)
 
     if impl == "pallas" and fp is None:
         from repro.kernels import ops as kops
         if rnn.cell == "lstm":
-            return kops.lstm_scan(xs, W, U, b)
-        return kops.gru_scan(xs, W, U, b)
+            return kops.lstm_scan(xs, W, U, b, schedule=schedule)
+        return kops.gru_scan(xs, W, U, b, schedule=schedule)
 
     if mode == "static":
         def step(state, x_t):

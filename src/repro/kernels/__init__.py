@@ -7,6 +7,15 @@
   rglru_scan           — the RG-LRU gated linear recurrence (recurrentgemma).
   reuse_matmul         — reuse-factor analogue: K-serialized matmul whose
       VMEM working set shrinks by R while latency grows by R.
+  col_matmul           — column-serialized matmul: the non-static per-
+      timestep block with the gate matmul split into R sequential tiles.
+
+Every scan kernel dispatches through the reuse-factor scheduling layer
+(schedule.KernelSchedule via ops.py): reuse_factor partitions gate matmuls
+into sequential column tiles, mode selects static (one weights-resident
+block) vs non-static (one block per timestep), and the same schedule object
+feeds core.hls's latency/DSP estimators.  compat.py absorbs JAX API drift
+(TPUCompilerParams/CompilerParams, sharding.AxisType).
 
 Kernels target TPU (Mosaic); this container is CPU-only so tests run them
 with interpret=True against the pure-jnp oracles in ref.py.  The XLA model

@@ -1,0 +1,37 @@
+"""JAX version-drift shims shared by every Pallas kernel.
+
+The Pallas TPU compiler-params dataclass was renamed across JAX releases
+(``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``); kernels import the
+resolved symbol from here instead of guessing.  Same for the optional
+``jax.sharding.AxisType`` enum used by the mesh builders.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+try:  # jax >= 0.5-ish
+    from jax.sharding import AxisType  # noqa: F401
+    HAS_AXIS_TYPE = True
+except ImportError:  # older jax: meshes are implicitly "auto"
+    AxisType = None
+    HAS_AXIS_TYPE = False
+
+try:  # jax >= 0.6: top-level export, replication check kwarg is check_vma
+    shard_map = jax.shard_map
+except AttributeError:  # older jax: experimental home, kwarg is check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *args, check_vma=None, **kw):
+        if check_vma is not None:
+            kw.setdefault("check_rep", check_vma)
+        return _shard_map(f, *args, **kw)
+
+
+def tpu_compiler_params(*, dimension_semantics) -> "CompilerParams":
+    """Build compiler params with per-grid-dim semantics, any JAX version."""
+    return CompilerParams(dimension_semantics=tuple(dimension_semantics))

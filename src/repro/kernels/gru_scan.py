@@ -1,8 +1,12 @@
-"""Pallas GRU static-mode scan kernel (reset_after, Keras-compatible).
+"""Pallas GRU static-mode scan kernel (reset_after, Keras-compatible) with
+reuse-factor column tiling.
 
 Same schedule as lstm_scan: weights VMEM-resident, h state in scratch,
 sequential time grid.  GRU has 3 gate groups (z|r|hh) and the Hadamard
-product sits inside the candidate tanh (r * (h U_h + b_rec)).
+product sits inside the candidate tanh (r * (h U_h + b_rec)), so the kernel
+accumulates the input-side (zx) and recurrent-side (zh) pre-activations in
+separate scratches across the R sequential column tiles and combines them at
+the last tile.
 """
 
 from __future__ import annotations
@@ -14,56 +18,74 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
 
-def _gru_kernel(x_ref, w_ref, u_ref, b_ref, out_ref, h_scr, *,
-                hidden: int, seq_len: int):
+
+def _gru_kernel(x_ref, w_ref, u_ref, b_ref, out_ref, zx_scr, zh_scr, h_scr,
+                *, hidden: int, seq_len: int, reuse: int):
     t = pl.program_id(1)
+    r = pl.program_id(2)
+    gw = (3 * hidden) // reuse
 
-    @pl.when(t == 0)
+    @pl.when(jnp.logical_and(t == 0, r == 0))
     def _init():
         h_scr[...] = jnp.zeros_like(h_scr)
 
     x_t = x_ref[:, 0, :]
     h = h_scr[...]
-    b_in = b_ref[0]                                        # [3h]
+    b_in = b_ref[0]                                        # [gw]
     b_rec = b_ref[1]
 
-    zx = jnp.dot(x_t, w_ref[...], preferred_element_type=jnp.float32) + b_in
-    zh = jnp.dot(h, u_ref[...], preferred_element_type=jnp.float32) + b_rec
+    zx_scr[:, pl.ds(r * gw, gw)] = (
+        jnp.dot(x_t, w_ref[...], preferred_element_type=jnp.float32) + b_in)
+    zh_scr[:, pl.ds(r * gw, gw)] = (
+        jnp.dot(h, u_ref[...], preferred_element_type=jnp.float32) + b_rec)
 
-    z = jax.nn.sigmoid(zx[:, :hidden] + zh[:, :hidden])
-    r = jax.nn.sigmoid(zx[:, hidden:2 * hidden] + zh[:, hidden:2 * hidden])
-    hh = jnp.tanh(zx[:, 2 * hidden:] + r * zh[:, 2 * hidden:])
-    h_new = z * h + (1.0 - z) * hh
-    h_scr[...] = h_new
+    @pl.when(r == reuse - 1)
+    def _update():
+        zx = zx_scr[...]                                   # [bt, 3h]
+        zh = zh_scr[...]
+        z = jax.nn.sigmoid(zx[:, :hidden] + zh[:, :hidden])
+        rg = jax.nn.sigmoid(zx[:, hidden:2 * hidden]
+                            + zh[:, hidden:2 * hidden])
+        hh = jnp.tanh(zx[:, 2 * hidden:] + rg * zh[:, 2 * hidden:])
+        h_new = z * h_scr[...] + (1.0 - z) * hh
+        h_scr[...] = h_new
 
-    @pl.when(t == seq_len - 1)
-    def _emit():
-        out_ref[...] = h_new.astype(out_ref.dtype)
+        @pl.when(t == seq_len - 1)
+        def _emit():
+            out_ref[...] = h_new.astype(out_ref.dtype)
 
 
 def gru_scan_pallas(xs: jax.Array, W: jax.Array, U: jax.Array,
                     b: jax.Array, *, block_batch: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    reuse: int = 1, interpret: bool = True) -> jax.Array:
     """xs: [B, T, in]; W: [in, 3h]; U: [h, 3h]; b: [2, 3h] -> h [B, h]."""
     B, T, fin = xs.shape
     hidden = U.shape[0]
     assert B % block_batch == 0
+    assert (3 * hidden) % reuse == 0
+    gw = (3 * hidden) // reuse
 
-    kernel = functools.partial(_gru_kernel, hidden=hidden, seq_len=T)
+    kernel = functools.partial(_gru_kernel, hidden=hidden, seq_len=T,
+                               reuse=reuse)
     return pl.pallas_call(
         kernel,
-        grid=(B // block_batch, T),
+        grid=(B // block_batch, T, reuse),
         in_specs=[
-            pl.BlockSpec((block_batch, 1, fin), lambda i, t: (i, t, 0)),
-            pl.BlockSpec((fin, 3 * hidden), lambda i, t: (0, 0)),
-            pl.BlockSpec((hidden, 3 * hidden), lambda i, t: (0, 0)),
-            pl.BlockSpec((2, 3 * hidden), lambda i, t: (0, 0)),
+            pl.BlockSpec((block_batch, 1, fin), lambda i, t, r: (i, t, 0)),
+            pl.BlockSpec((fin, gw), lambda i, t, r: (0, r)),
+            pl.BlockSpec((hidden, gw), lambda i, t, r: (0, r)),
+            pl.BlockSpec((2, gw), lambda i, t, r: (0, r)),
         ],
-        out_specs=pl.BlockSpec((block_batch, hidden), lambda i, t: (i, 0)),
+        out_specs=pl.BlockSpec((block_batch, hidden), lambda i, t, r: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, hidden), xs.dtype),
-        scratch_shapes=[pltpu.VMEM((block_batch, hidden), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        scratch_shapes=[
+            pltpu.VMEM((block_batch, 3 * hidden), jnp.float32),
+            pltpu.VMEM((block_batch, 3 * hidden), jnp.float32),
+            pltpu.VMEM((block_batch, hidden), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(xs, W, U, b)

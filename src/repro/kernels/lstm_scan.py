@@ -1,4 +1,4 @@
-"""Pallas LSTM static-mode scan kernel.
+"""Pallas LSTM static-mode scan kernel with reuse-factor column tiling.
 
 TPU adaptation of the paper's STATIC mode (Fig. 1 left): ONE physical block —
 the gate weights stay resident in VMEM across the whole sequence (the BRAM
@@ -7,10 +7,16 @@ dimension walks timesteps.  HBM traffic: weights read once (not T times),
 x_t streamed in, final h written out — exactly the paper's resource-minimal
 schedule.
 
-Grid: (B/bt, T) — the batch-tile dim is parallel ("independent inferences"),
-the time dim is sequential ("arbitrary": carries scratch state).
-Block shapes are padded to (8, 128) lane/sublane multiples by the caller
-(ops.py) so the MXU sees aligned tiles.
+Reuse factor R (hls4ml's central knob): the gate matmul z = x W + h U + b is
+partitioned into R *sequential column tiles* of width 4h/R.  Per sequential
+step only a (fin + h) x 4h/R weight tile is live — the parallel-multiplier
+working set (DSP analogue) shrinks by R — while the sequential grid grows to
+T x R steps (latency x R).  R = 1 degenerates to the fully parallel kernel.
+
+Grid: (B/bt, T, R) — batch tiles parallel ("independent inferences"), time
+and reuse sequential ("arbitrary": they carry scratch state).  Block shapes
+are padded to (8, 128) lane/sublane multiples by the caller (ops.py) so the
+MXU sees aligned tiles.
 """
 
 from __future__ import annotations
@@ -22,69 +28,84 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
 
-def _lstm_kernel(x_ref, w_ref, u_ref, b_ref, out_ref, h_scr, c_scr, *,
-                 hidden: int, seq_len: int):
-    """One (batch-tile, timestep) grid cell."""
+
+def _lstm_kernel(x_ref, w_ref, u_ref, b_ref, out_ref, z_scr, h_scr, c_scr, *,
+                 hidden: int, seq_len: int, reuse: int):
+    """One (batch-tile, timestep, column-tile) grid cell."""
     t = pl.program_id(1)
+    r = pl.program_id(2)
+    gw = (4 * hidden) // reuse
 
-    @pl.when(t == 0)
+    @pl.when(jnp.logical_and(t == 0, r == 0))
     def _init():
         h_scr[...] = jnp.zeros_like(h_scr)
         c_scr[...] = jnp.zeros_like(c_scr)
 
     x_t = x_ref[:, 0, :]                                   # [bt, in]
-    h = h_scr[...]
-    c = c_scr[...]
+    h = h_scr[...]                                         # pre-update state
 
-    z = (jnp.dot(x_t, w_ref[...], preferred_element_type=jnp.float32)
-         + jnp.dot(h, u_ref[...], preferred_element_type=jnp.float32)
-         + b_ref[...][None, :])                            # [bt, 4h]
+    # column tile r of the gate pre-activations: a (fin+h) x gw weight slice
+    # is the only weight data live this step — the reuse resource saving
+    z_scr[:, pl.ds(r * gw, gw)] = (
+        jnp.dot(x_t, w_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h, u_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...][None, :])
 
-    i = jax.nn.sigmoid(z[:, :hidden])
-    f = jax.nn.sigmoid(z[:, hidden:2 * hidden])
-    g = jnp.tanh(z[:, 2 * hidden:3 * hidden])
-    o = jax.nn.sigmoid(z[:, 3 * hidden:])
+    @pl.when(r == reuse - 1)
+    def _update():
+        z = z_scr[...]                                     # [bt, 4h]
+        c = c_scr[...]
+        i = jax.nn.sigmoid(z[:, :hidden])
+        f = jax.nn.sigmoid(z[:, hidden:2 * hidden])
+        g = jnp.tanh(z[:, 2 * hidden:3 * hidden])
+        o = jax.nn.sigmoid(z[:, 3 * hidden:])
 
-    c_new = f * c + i * g                                  # Hadamard products
-    h_new = o * jnp.tanh(c_new)
-    h_scr[...] = h_new
-    c_scr[...] = c_new
+        c_new = f * c + i * g                              # Hadamard products
+        h_new = o * jnp.tanh(c_new)
+        h_scr[...] = h_new
+        c_scr[...] = c_new
 
-    @pl.when(t == seq_len - 1)
-    def _emit():
-        out_ref[...] = h_new.astype(out_ref.dtype)
+        @pl.when(t == seq_len - 1)
+        def _emit():
+            out_ref[...] = h_new.astype(out_ref.dtype)
 
 
 def lstm_scan_pallas(xs: jax.Array, W: jax.Array, U: jax.Array,
                      b: jax.Array, *, block_batch: int = 128,
-                     interpret: bool = True) -> jax.Array:
+                     reuse: int = 1, interpret: bool = True) -> jax.Array:
     """xs: [B, T, in]; W: [in, 4h]; U: [h, 4h]; b: [4h] -> final h [B, h].
 
-    The caller (ops.py) pads B to block_batch and hidden/in to lane
-    multiples; this function assumes aligned shapes.
+    The caller (ops.py) pads B to block_batch, clamps ``reuse`` to a divisor
+    of 4h, and pads hidden/in to lane multiples; this function assumes
+    aligned shapes.
     """
     B, T, fin = xs.shape
     hidden = U.shape[0]
     assert B % block_batch == 0
+    assert (4 * hidden) % reuse == 0
+    gw = (4 * hidden) // reuse
 
-    kernel = functools.partial(_lstm_kernel, hidden=hidden, seq_len=T)
+    kernel = functools.partial(_lstm_kernel, hidden=hidden, seq_len=T,
+                               reuse=reuse)
     return pl.pallas_call(
         kernel,
-        grid=(B // block_batch, T),
+        grid=(B // block_batch, T, reuse),
         in_specs=[
-            pl.BlockSpec((block_batch, 1, fin), lambda i, t: (i, t, 0)),
-            pl.BlockSpec((fin, 4 * hidden), lambda i, t: (0, 0)),
-            pl.BlockSpec((hidden, 4 * hidden), lambda i, t: (0, 0)),
-            pl.BlockSpec((4 * hidden,), lambda i, t: (0,)),
+            pl.BlockSpec((block_batch, 1, fin), lambda i, t, r: (i, t, 0)),
+            pl.BlockSpec((fin, gw), lambda i, t, r: (0, r)),
+            pl.BlockSpec((hidden, gw), lambda i, t, r: (0, r)),
+            pl.BlockSpec((gw,), lambda i, t, r: (r,)),
         ],
-        out_specs=pl.BlockSpec((block_batch, hidden), lambda i, t: (i, 0)),
+        out_specs=pl.BlockSpec((block_batch, hidden), lambda i, t, r: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, hidden), xs.dtype),
         scratch_shapes=[
+            pltpu.VMEM((block_batch, 4 * hidden), jnp.float32),
             pltpu.VMEM((block_batch, hidden), jnp.float32),
             pltpu.VMEM((block_batch, hidden), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(xs, W, U, b)

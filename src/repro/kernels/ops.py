@@ -1,26 +1,45 @@
 """Jit'd public wrappers around the Pallas kernels: padding to hardware-
-aligned tiles, dtype handling, interpret-mode selection (CPU container runs
-interpret=True; on a real TPU set REPRO_PALLAS_INTERPRET=0)."""
+aligned tiles, dtype handling, and — the scheduling layer — dispatch of every
+scan kernel through a single :class:`KernelSchedule`.
+
+A schedule carries (reuse_factor, mode, block_batch, backend) and selects:
+
+  backend "xla"             the lax.scan golden reference (ref.py) — the
+                            bit-for-bit ground truth of the conformance
+                            harness;
+  backend "pallas_*"/"auto" the Pallas kernels.  Static mode runs the
+                            weights-resident scan kernel with the gate
+                            matmuls partitioned into reuse_factor sequential
+                            column tiles; non-static mode unrolls one block
+                            per timestep, each block built from the
+                            column-serialized ``col_matmul`` kernel (paper
+                            Fig. 1 right).
+
+The same schedule object drives ``core.hls.resources.estimate_schedule`` so
+software latency/resource numbers describe exactly what executes here.
+
+CPU containers run interpret=True; on a real TPU either set
+REPRO_PALLAS_INTERPRET=0 or use backend="pallas_tpu".
+"""
 
 from __future__ import annotations
 
-import os
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import FixedPointConfig
+from repro.kernels import ref
 from repro.kernels.fixed_point import fixed_point_pallas
 from repro.kernels.gru_scan import gru_scan_pallas
 from repro.kernels.hadamard import hadamard_pallas
 from repro.kernels.lstm_scan import lstm_scan_pallas
-from repro.kernels.reuse_matmul import reuse_matmul_pallas
+from repro.kernels.reuse_matmul import col_matmul_pallas, reuse_matmul_pallas
 from repro.kernels.rglru_scan import rglru_scan_pallas
-
-
-def _interpret() -> bool:
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+from repro.kernels.schedule import KernelSchedule
+from repro.kernels.schedule import _env_interpret as _interpret
 
 
 def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
@@ -33,24 +52,95 @@ def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-@partial(jax.jit, static_argnames=("block_batch",))
-def lstm_scan(xs, W, U, b, *, block_batch: int = 128):
-    """[B, T, in] -> final hidden [B, h]. Pads batch to the block size."""
+def _resolve(schedule: Optional[KernelSchedule],
+             block_batch: Optional[int], default_bb: int = 128
+             ) -> KernelSchedule:
+    if schedule is None:
+        return KernelSchedule(block_batch=block_batch or default_bb)
+    if block_batch is not None:
+        return schedule.replace(block_batch=block_batch)
+    return schedule
+
+
+# ---------------------------------------------------------------------------
+# Non-static building block: per-timestep column-serialized gate matmul
+# ---------------------------------------------------------------------------
+
+
+def _gate_mm(x: jax.Array, w: jax.Array, reuse: int,
+             interpret: bool) -> jax.Array:
+    """f32 x @ w through the column-tiled Pallas kernel (one per-timestep
+    'block' of the non-static pipeline)."""
+    M = x.shape[0]
+    bm = min(128, max(8, M))
+    x_p = _pad_axis(x.astype(jnp.float32), 0, bm)
+    out = col_matmul_pallas(x_p, w.astype(jnp.float32), reuse=reuse,
+                            block_m=bm, interpret=interpret)
+    return out[:M]
+
+
+def _cell_nonstatic(cell: str, xs, W, U, b,
+                    schedule: KernelSchedule) -> jax.Array:
+    """One block per timestep (Fig. 1 right): the cell equations come from
+    core.rnn.cells with the gate matmul swapped for the column-serialized
+    Pallas kernel — the math lives in exactly one place."""
+    from repro.core.rnn.cells import gru_cell, initial_state, lstm_cell
+
+    B, T, _ = xs.shape
+    H = U.shape[0]
+    g = 4 if cell == "lstm" else 3
+    re = schedule.effective_reuse(g * H)
+    itp = schedule.interpret
+
+    def mm(a, w):
+        return _gate_mm(a, w, re, itp)
+
+    state = initial_state(cell, B, H, jnp.float32)
+    bf = b.astype(jnp.float32)
+    step = lstm_cell if cell == "lstm" else gru_cell
+    for t in range(T):
+        _, state = step(xs[:, t], state, W, U, bf, matmul=mm)
+    h = state[0] if cell == "lstm" else state
+    return h.astype(xs.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Scheduled scan kernels
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("schedule", "block_batch"))
+def lstm_scan(xs, W, U, b, *, schedule: Optional[KernelSchedule] = None,
+              block_batch: Optional[int] = None):
+    """[B, T, in] -> final hidden [B, h], scheduled by ``schedule``."""
+    schedule = _resolve(schedule, block_batch)
+    if not schedule.use_pallas:
+        return ref.lstm_scan_ref(xs, W, U, b)
+    if schedule.mode == "nonstatic":
+        return _cell_nonstatic("lstm", xs, W, U, b, schedule)
     B = xs.shape[0]
-    bt = min(block_batch, max(8, B))
+    bt = min(schedule.block_batch, max(8, B))
     xs_p = _pad_axis(xs, 0, bt)
     out = lstm_scan_pallas(xs_p, W, U, b, block_batch=bt,
-                           interpret=_interpret())
+                           reuse=schedule.effective_reuse(4 * U.shape[0]),
+                           interpret=schedule.interpret)
     return out[:B]
 
 
-@partial(jax.jit, static_argnames=("block_batch",))
-def gru_scan(xs, W, U, b, *, block_batch: int = 128):
+@partial(jax.jit, static_argnames=("schedule", "block_batch"))
+def gru_scan(xs, W, U, b, *, schedule: Optional[KernelSchedule] = None,
+             block_batch: Optional[int] = None):
+    schedule = _resolve(schedule, block_batch)
+    if not schedule.use_pallas:
+        return ref.gru_scan_ref(xs, W, U, b)
+    if schedule.mode == "nonstatic":
+        return _cell_nonstatic("gru", xs, W, U, b, schedule)
     B = xs.shape[0]
-    bt = min(block_batch, max(8, B))
+    bt = min(schedule.block_batch, max(8, B))
     xs_p = _pad_axis(xs, 0, bt)
     out = gru_scan_pallas(xs_p, W, U, b, block_batch=bt,
-                          interpret=_interpret())
+                          reuse=schedule.effective_reuse(3 * U.shape[0]),
+                          interpret=schedule.interpret)
     return out[:B]
 
 
@@ -79,25 +169,61 @@ def fixed_point(x, fp: FixedPointConfig):
     return run(x)
 
 
-@partial(jax.jit, static_argnames=("block_batch", "block_width"))
-def rglru_scan(a, bx, *, block_batch: int = 8, block_width: int = 128):
-    """a, bx: [B, T, W] -> all recurrence states [B, T, W]."""
+@partial(jax.jit, static_argnames=("schedule", "block_batch", "block_width"))
+def rglru_scan(a, bx, *, schedule: Optional[KernelSchedule] = None,
+               block_batch: Optional[int] = None, block_width: int = 128):
+    """a, bx: [B, T, W] -> all recurrence states [B, T, W].
+
+    Reuse for this matmul-free kernel serializes the width tiles: per
+    sequential step one W/R-wide tile of VPU lanes is live.
+    """
+    schedule = _resolve(schedule, block_batch, default_bb=8)
     B, T, W = a.shape
-    bb = min(block_batch, max(1, B))
-    bw = min(block_width, W)
+    if not schedule.use_pallas:
+        return ref.rglru_scan_ref(a, bx)
+    if schedule.mode == "nonstatic":
+        h = jnp.zeros((B, W), jnp.float32)
+        hs = []
+        for t in range(T):                 # one block per timestep
+            h = a[:, t].astype(jnp.float32) * h + bx[:, t].astype(jnp.float32)
+            hs.append(h)
+        return jnp.stack(hs, axis=1).astype(a.dtype)
+    reuse = schedule.reuse_factor
+    bb = min(schedule.block_batch, max(1, B))
+    bw = min(block_width, -(-W // reuse))  # ceil: R sequential width tiles
     a_p = _pad_axis(_pad_axis(a, 0, bb), 2, bw)
     b_p = _pad_axis(_pad_axis(bx, 0, bb), 2, bw)
     out = rglru_scan_pallas(a_p, b_p, block_batch=bb, block_width=bw,
-                            interpret=_interpret())
+                            serial_width=reuse > 1,
+                            interpret=schedule.interpret)
     return out[:B, :, :W]
 
 
-@partial(jax.jit, static_argnames=("reuse", "block_m"))
-def reuse_matmul(x, w, *, reuse: int = 1, block_m: int = 128):
-    """[M, K] @ [K, N] with K serialized into `reuse` passes."""
+@partial(jax.jit, static_argnames=("reuse", "block_m", "schedule"))
+def reuse_matmul(x, w, *, reuse: int = 1, block_m: int = 128,
+                 schedule: Optional[KernelSchedule] = None):
+    """[M, K] @ [K, N] with K serialized into `reuse` passes (a schedule's
+    reuse_factor overrides the bare ``reuse`` argument)."""
+    if schedule is not None:
+        if not schedule.use_pallas:
+            return ref.reuse_matmul_ref(x, w)
+        reuse = schedule.effective_reuse(x.shape[1])
+        interpret = schedule.interpret
+    else:
+        interpret = _interpret()
     M, K = x.shape
     bm = min(block_m, max(8, M))
     x_p = _pad_axis(x, 0, bm)
     out = reuse_matmul_pallas(x_p, w, reuse=reuse, block_m=bm,
-                              interpret=_interpret())
+                              interpret=interpret)
     return out[:M]
+
+
+# kernel name -> (scheduled entry point, golden reference) — the conformance
+# harness and benchmarks enumerate this
+SCHEDULED_KERNELS = {
+    "lstm": (lstm_scan, ref.lstm_scan_ref),
+    "gru": (gru_scan, ref.gru_scan_ref),
+    "rglru": (rglru_scan, ref.rglru_scan_ref),
+    "reuse_matmul": (reuse_matmul, ref.reuse_matmul_ref),
+}

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _reuse_mm_kernel(x_ref, w_ref, o_ref, acc_scr, *, reuse: int):
     r = pl.program_id(1)
@@ -61,7 +63,44 @@ def reuse_matmul_pallas(x: jax.Array, w: jax.Array, *, reuse: int = 1,
         out_specs=pl.BlockSpec((block_m, N), lambda i, r: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w)
+
+
+def _col_mm_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+def col_matmul_pallas(x: jax.Array, w: jax.Array, *, reuse: int = 1,
+                      block_m: int = 128, interpret: bool = True
+                      ) -> jax.Array:
+    """x @ w with the OUTPUT columns serialized into `reuse` sequential tiles.
+
+    This is the gate-matmul schedule of the scan kernels exposed standalone:
+    per sequential step only a K x N/R weight tile is live (the DSP/BRAM
+    working set shrinks by R) and the grid runs R sequential passes.  The
+    non-static execution mode builds each per-timestep block out of these.
+    N must divide by reuse; M by block_m (ops.py pads / clamps).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and N % reuse == 0 and M % block_m == 0
+    ns = N // reuse
+
+    return pl.pallas_call(
+        _col_mm_kernel,
+        grid=(M // block_m, reuse),
+        in_specs=[
+            pl.BlockSpec((block_m, K), lambda i, r: (i, 0)),
+            pl.BlockSpec((K, ns), lambda i, r: (0, r)),
+        ],
+        out_specs=pl.BlockSpec((block_m, ns), lambda i, r: (i, r)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, w)

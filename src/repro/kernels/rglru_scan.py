@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _rglru_kernel(a_ref, bx_ref, out_ref, h_scr, *, seq_len: int):
     t = pl.program_id(2)
@@ -36,10 +38,18 @@ def _rglru_kernel(a_ref, bx_ref, out_ref, h_scr, *, seq_len: int):
 
 def rglru_scan_pallas(a: jax.Array, bx: jax.Array, *,
                       block_batch: int = 8, block_width: int = 128,
+                      serial_width: bool = False,
                       interpret: bool = True) -> jax.Array:
-    """a, bx: [B, T, W] (decay and gated input) -> all states h [B, T, W]."""
+    """a, bx: [B, T, W] (decay and gated input) -> all states h [B, T, W].
+
+    ``serial_width=True`` is the reuse-factor schedule for this (matmul-free)
+    recurrence: the width tiles execute sequentially instead of in parallel,
+    so one tile's worth of VPU lanes (the DSP analogue) is reused W/wt times
+    per step — resources / R, sequential grid length x R.
+    """
     B, T, Wd = a.shape
     assert B % block_batch == 0 and Wd % block_width == 0
+    width_sem = "arbitrary" if serial_width else "parallel"
 
     kernel = functools.partial(_rglru_kernel, seq_len=T)
     return pl.pallas_call(
@@ -55,7 +65,7 @@ def rglru_scan_pallas(a: jax.Array, bx: jax.Array, *,
                                lambda i, j, t: (i, t, j)),
         out_shape=jax.ShapeDtypeStruct((B, T, Wd), a.dtype),
         scratch_shapes=[pltpu.VMEM((block_batch, block_width), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", width_sem, "arbitrary")),
         interpret=interpret,
     )(a, bx)

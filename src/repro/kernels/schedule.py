@@ -1,0 +1,131 @@
+"""Reuse-factor scheduling layer — ONE object that configures every scan
+kernel AND the analytical HLS estimators.
+
+The paper's central knob is the hls4ml reuse factor: with reuse R each DSP
+performs R multiplications per matrix product, so DSPs shrink by R while
+latency grows by R (Tables 2-4), and the static / non-static mode choice
+trades initiation interval against resource replication (Table 5, Fig. 6).
+``KernelSchedule`` carries exactly those degrees of freedom plus the TPU
+execution backend, and is:
+
+  * hashable / frozen — usable as a ``jax.jit`` static argument;
+  * honored by the Pallas kernels: gate matmuls are partitioned into
+    ``reuse_factor`` *sequential column tiles* (one extra sequential grid
+    dimension), so the kernel's sequential grid length really is
+    ``sequential_steps(seq_len)``;
+  * the input to ``core.hls.resources.estimate_schedule`` — latency-cycle
+    and DSP/BRAM estimates are derived from the same object the kernel
+    executes, which is what makes the software sweep of the paper's Fig. 1
+    latency–resource curve trustworthy.
+
+Dependency note: this module imports nothing from ``repro`` so that
+``repro.config`` can embed schedules in frozen model configs.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from dataclasses import dataclass, replace
+from typing import Iterable, Tuple
+
+MODES = ("static", "nonstatic")
+BACKENDS = ("auto", "xla", "pallas_interpret", "pallas_tpu")
+
+
+def _env_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@dataclass(frozen=True)
+class KernelSchedule:
+    """How a scan kernel is scheduled on the latency–resource curve.
+
+    reuse_factor  hls4ml reuse R: gate matmuls run as R sequential column
+                  tiles; latency x R, parallel multipliers (DSP analogue,
+                  VMEM-resident weight tile on TPU) / R.
+    mode          "static" — one weights-resident block scans the whole
+                  sequence (paper Fig. 1 left, II = seq_len x R).
+                  "nonstatic" — one block per timestep, state flows
+                  block-to-block (Fig. 1 right, II = one block latency).
+    block_batch   batch tile per kernel invocation (TPU sublane analogue of
+                  the paper's "independent inferences in flight").
+    backend       "auto" (Pallas; interpret controlled by
+                  REPRO_PALLAS_INTERPRET), "pallas_interpret",
+                  "pallas_tpu", or "xla" (the lax.scan golden reference).
+    """
+
+    reuse_factor: int = 1
+    mode: str = "static"
+    block_batch: int = 128
+    backend: str = "auto"
+
+    def __post_init__(self):
+        if self.reuse_factor < 1:
+            raise ValueError(f"reuse_factor must be >= 1: {self.reuse_factor}")
+        if self.mode not in MODES:
+            raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
+        if self.block_batch < 1:
+            raise ValueError(f"block_batch must be >= 1: {self.block_batch}")
+
+    # -- backend resolution -------------------------------------------------
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.backend != "xla"
+
+    @property
+    def interpret(self) -> bool:
+        if self.backend == "pallas_interpret":
+            return True
+        if self.backend == "pallas_tpu":
+            return False
+        return _env_interpret()
+
+    # -- reuse partitioning -------------------------------------------------
+
+    def effective_reuse(self, dim: int) -> int:
+        """Largest divisor of ``dim`` that also divides ``reuse_factor``.
+
+        Column tiles must align with the gate layout (i|f|c|o packed along
+        the last axis), so the tiled dimension has to split evenly; ragged
+        reuse requests degrade gracefully to the nearest feasible divisor
+        instead of erroring (same behavior hls4ml applies to invalid R).
+        """
+        return math.gcd(self.reuse_factor, dim)
+
+    def sequential_steps(self, seq_len: int) -> int:
+        """Sequential kernel grid length — the software latency axis.
+
+        Static: one block serializes time x reuse.  Non-static: the chain of
+        seq_len blocks still costs seq_len x R end-to-end for one inference
+        (each block serializes its R column tiles).
+        """
+        return seq_len * self.reuse_factor
+
+    def initiation_interval(self, seq_len: int) -> int:
+        """Sequential steps before the NEXT inference can enter (paper II).
+
+        Static re-uses the single block for the whole sequence; non-static
+        frees its first block after one block latency (II 315 -> 1 in
+        Table 5 terms, scaled by R).
+        """
+        if self.mode == "static":
+            return seq_len * self.reuse_factor
+        return self.reuse_factor
+
+    # -- sweeping -----------------------------------------------------------
+
+    def replace(self, **kw) -> "KernelSchedule":
+        return replace(self, **kw)
+
+    @classmethod
+    def sweep(cls, reuse_factors: Iterable[int] = (1, 2, 4, 8),
+              modes: Iterable[str] = MODES, *, block_batch: int = 128,
+              backend: str = "auto") -> Tuple["KernelSchedule", ...]:
+        """The paper's Fig. 1 sweep grid as schedule objects."""
+        return tuple(cls(reuse_factor=r, mode=m, block_batch=block_batch,
+                         backend=backend)
+                     for m in modes for r in reuse_factors)

@@ -9,17 +9,25 @@ Functions (not module constants) so importing never touches jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.kernels.compat import HAS_AXIS_TYPE, AxisType
+
+
+def _mk(shape, axes) -> Mesh:
+    if HAS_AXIS_TYPE:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    # older jax: make_mesh has no axis_types kwarg and every axis is "auto"
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)
 
 
 def make_mesh(shape, axes) -> Mesh:
     """Arbitrary mesh (tests use (2,4) etc. on 8 host devices)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mk(tuple(shape), tuple(axes))

@@ -41,12 +41,17 @@ def forward(
     fp: Optional[FixedPointConfig] = None,
     mode: Optional[str] = None,
     impl: str = "xla",
+    schedule=None,
     return_logits: bool = False,
 ) -> jax.Array:
-    """Returns class probabilities [b, n_outputs] (or pre-activation logits)."""
+    """Returns class probabilities [b, n_outputs] (or pre-activation logits).
+
+    ``schedule`` (a KernelSchedule) overrides the config-derived execution
+    schedule of the recurrent layer."""
     rnn = cfg.rnn
     h = rnn_layer(rnn, x, params["rnn/kernel"], params["rnn/recurrent"],
-                  params["rnn/bias"], fp=fp, mode=mode, impl=impl)
+                  params["rnn/bias"], fp=fp, mode=mode, impl=impl,
+                  schedule=schedule)
 
     def q(t):
         return t if fp is None else quantize(t, fp)

@@ -27,17 +27,20 @@ from repro.serving.batcher import MicroBatcher
 class RNNServingEngine:
     cfg: ModelConfig
     params: Dict
-    mode: str = "static"                  # static | nonstatic
+    mode: Optional[str] = None            # static | nonstatic | None: from
+                                          # the schedule / config
     impl: str = "xla"                     # xla | pallas
     fp: Optional[FixedPointConfig] = None
     max_batch: int = 256
+    schedule: Optional[object] = None     # KernelSchedule override
 
     def __post_init__(self):
         cfg, fp, mode, impl = self.cfg, self.fp, self.mode, self.impl
+        schedule = self.schedule
 
         def infer(params, x):
             return rnn_tagger.forward(cfg, params, x, fp=fp, mode=mode,
-                                      impl=impl)
+                                      impl=impl, schedule=schedule)
 
         self._infer = jax.jit(infer)
         self.batcher = MicroBatcher(max_batch=self.max_batch)
@@ -64,9 +67,18 @@ class RNNServingEngine:
                 "throughput_eps": batch / dt}
 
     # -- paired FPGA design point -------------------------------------------
+    @property
+    def resolved_mode(self) -> str:
+        if self.mode is not None:
+            return self.mode
+        if self.schedule is not None:
+            return self.schedule.mode
+        return self.cfg.rnn.mode
+
     def fpga_design(self, reuse_kernel: int = 1, reuse_recurrent: int = 1,
                     strategy: str = "latency", part: str = "xcku115"
                     ) -> HLSDesign:
         return estimate_design(RNNDesignPoint(
             self.cfg, self.fp or FixedPointConfig(),
-            reuse_kernel, reuse_recurrent, self.mode, strategy, part))
+            reuse_kernel, reuse_recurrent, self.resolved_mode,
+            strategy, part))

@@ -1,10 +1,21 @@
-"""Reduced configs for smoke tests: same family, tiny dims."""
+"""Test support: reduced smoke-test configs + the golden-model conformance
+harness for the kernel scheduling layer.
+
+The conformance harness is the safety net of the reuse-factor refactor:
+every (kernel x mode x reuse_factor x dtype) cell must reproduce the XLA
+``lax.scan`` reference (kernels/ref.py) within dtype tolerance.  Tests and
+benchmarks both drive it via :func:`assert_schedule_conformance`.
+"""
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
 
 from repro.config import ModelConfig, MoEConfig, RGLRUConfig, SSMConfig
+from repro.kernels.schedule import KernelSchedule
 
 
 def tiny_config(full: ModelConfig) -> ModelConfig:
@@ -49,3 +60,72 @@ def tiny_config(full: ModelConfig) -> ModelConfig:
     if full.rnn is not None:
         return full  # paper taggers are already tiny
     return dataclasses.replace(full, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Golden-model conformance harness for KernelSchedule
+# ---------------------------------------------------------------------------
+
+# default absolute/relative tolerance per dtype: fp32 accumulation error over
+# a scan; bf16 inputs round at ~2^-8
+CONFORMANCE_TOL: Dict[str, float] = {"float32": 3e-5, "bfloat16": 2e-2}
+
+
+def make_kernel_inputs(kernel: str, *, B: int = 4, T: int = 12, F: int = 6,
+                       H: int = 20, M: int = 32, K: int = 64, N: int = 48,
+                       dtype: str = "float32", seed: int = 0
+                       ) -> Tuple:
+    """Deterministic inputs for one scheduled kernel.
+
+    lstm/gru use (B, T, F, H); rglru uses (B, T, H) with H as the width;
+    reuse_matmul uses (M, K, N).
+    """
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(seed)
+    dt = jnp.dtype(dtype)
+    if kernel in ("lstm", "gru"):
+        g = 4 if kernel == "lstm" else 3
+        xs = jnp.asarray(rng.randn(B, T, F), dtype=dt)
+        W = jnp.asarray(rng.randn(F, g * H) * 0.3, dtype=dt)
+        U = jnp.asarray(rng.randn(H, g * H) * 0.3, dtype=dt)
+        bshape = (g * H,) if kernel == "lstm" else (2, g * H)
+        b = jnp.asarray(rng.randn(*bshape) * 0.1, dtype=dt)
+        return xs, W, U, b
+    if kernel == "rglru":
+        a = jnp.asarray(np.exp(-np.abs(rng.randn(B, T, H))), dtype=dt)
+        bx = jnp.asarray(rng.randn(B, T, H), dtype=dt)
+        return a, bx
+    if kernel == "reuse_matmul":
+        x = jnp.asarray(rng.randn(M, K), dtype=dt)
+        w = jnp.asarray(rng.randn(K, N), dtype=dt)
+        return x, w
+    raise KeyError(f"unknown kernel {kernel!r}")
+
+
+def assert_schedule_conformance(kernel: str, schedule: KernelSchedule, *,
+                                dtype: str = "float32",
+                                tol: Optional[float] = None,
+                                seed: int = 0, **shape_kw) -> float:
+    """Run one (kernel x schedule x dtype) cell against the XLA golden model.
+
+    Returns the max abs error; raises AssertionError beyond tolerance.
+    Shape kwargs (B, T, F, H, M, K, N) pass through to make_kernel_inputs —
+    ragged batches and off-lane hidden sizes are legal, the scheduling layer
+    owns the padding.
+    """
+    from repro.kernels import ops
+
+    scheduled, golden = ops.SCHEDULED_KERNELS[kernel]
+    inputs = make_kernel_inputs(kernel, dtype=dtype, seed=seed, **shape_kw)
+    got = np.asarray(scheduled(*inputs, schedule=schedule), np.float32)
+    want = np.asarray(golden(*inputs), np.float32)
+    assert got.shape == want.shape, (kernel, schedule, got.shape, want.shape)
+    err = float(np.max(np.abs(got - want))) if got.size else 0.0
+    limit = CONFORMANCE_TOL[dtype] if tol is None else tol
+    scale = max(1.0, float(np.max(np.abs(want)))) if want.size else 1.0
+    assert err <= limit * scale, (
+        f"{kernel} diverged from golden model under {schedule}: "
+        f"max_err={err:.3e} > {limit * scale:.3e} (dtype={dtype}, "
+        f"shapes={shape_kw})")
+    return err

@@ -4,11 +4,21 @@ import sys
 # NOTE: no xla_force_host_platform_device_count here — smoke tests and
 # benches must see 1 device (multi-device tests spawn subprocesses).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
 
-import numpy as np
-import pytest
+# Install the deterministic hypothesis fallback before collection so
+# property-test modules import even when hypothesis isn't in the container.
+import _hypothesis_stub  # noqa: E402
+
+_hypothesis_stub.install()
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
 
 
-@pytest.fixture(scope="session")
+@pytest.fixture()
 def rng():
+    # function-scoped: every test draws from a fresh, fixed seed, so results
+    # cannot depend on which other tests ran first (a session-scoped shared
+    # stream made borderline-tolerance tests order-dependent)
     return np.random.RandomState(0)

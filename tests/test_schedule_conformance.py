@@ -1,0 +1,260 @@
+"""Golden-model conformance for the reuse-factor scheduling layer.
+
+Every (kernel x mode x reuse_factor x dtype) cell must match the XLA
+``lax.scan`` reference within dtype tolerance, and the HLS estimates must be
+computed from the SAME schedule object the kernel executes, with the paper's
+monotone trade-off: latency rises and DSP falls as reuse_factor grows.
+"""
+
+import pytest
+
+from repro.core.hls.resources import estimate_schedule
+from repro.kernels.schedule import BACKENDS, MODES, KernelSchedule
+from repro.registry import get_config
+from repro.testing import assert_schedule_conformance
+
+REUSE_FACTORS = (1, 2, 4, 8)
+CELLS = ("lstm", "gru")
+
+
+def _sched(reuse, mode, block_batch=8):
+    return KernelSchedule(reuse_factor=reuse, mode=mode,
+                          block_batch=block_batch,
+                          backend="pallas_interpret")
+
+
+# ---------------------------------------------------------------------------
+# The acceptance sweep: {lstm, gru} x {static, nonstatic} x {1, 2, 4, 8}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("reuse", REUSE_FACTORS)
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("cell", CELLS)
+def test_cell_schedule_conformance(cell, mode, reuse):
+    assert_schedule_conformance(cell, _sched(reuse, mode),
+                                B=4, T=10, F=6, H=20, seed=reuse)
+
+
+@pytest.mark.parametrize("reuse", (1, 4))
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("cell", CELLS)
+def test_cell_schedule_conformance_bf16(cell, mode, reuse):
+    assert_schedule_conformance(cell, _sched(reuse, mode), dtype="bfloat16",
+                                B=4, T=8, F=6, H=20, seed=3)
+
+
+@pytest.mark.parametrize("reuse", REUSE_FACTORS)
+@pytest.mark.parametrize("mode", MODES)
+def test_rglru_schedule_conformance(mode, reuse):
+    assert_schedule_conformance("rglru", _sched(reuse, mode),
+                                B=3, T=9, H=128, seed=reuse)
+
+
+@pytest.mark.parametrize("reuse", REUSE_FACTORS + (16,))
+def test_reuse_matmul_schedule_conformance(reuse):
+    assert_schedule_conformance("reuse_matmul", _sched(reuse, "static"),
+                                M=33, K=64, N=48, seed=reuse)
+
+
+def test_xla_backend_is_the_golden_model():
+    """backend='xla' must be exactly the reference (error 0 by identity)."""
+    s = KernelSchedule(backend="xla")
+    for cell in CELLS:
+        err = assert_schedule_conformance(cell, s, B=3, T=7, F=4, H=12)
+        assert err == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Edge shapes through the scheduling layer: ragged batch, T=1, off-lane H
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B", (1, 3, 9))          # not multiples of 8
+@pytest.mark.parametrize("cell", CELLS)
+def test_ragged_batch(cell, B):
+    assert_schedule_conformance(cell, _sched(2, "static"),
+                                B=B, T=6, F=5, H=20, seed=B)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("cell", CELLS)
+def test_single_timestep(cell, mode):
+    assert_schedule_conformance(cell, _sched(4, mode), B=4, T=1, F=6, H=20)
+
+
+@pytest.mark.parametrize("H", (20, 100, 130))     # off the 128-lane boundary
+@pytest.mark.parametrize("cell", CELLS)
+def test_off_lane_hidden(cell, H):
+    assert_schedule_conformance(cell, _sched(4, "static"),
+                                B=4, T=5, F=6, H=H, seed=H)
+
+
+def test_ragged_reuse_degrades_to_divisor():
+    """4h=52 is not divisible by 8: effective reuse falls back to gcd."""
+    s = _sched(8, "static")
+    assert s.effective_reuse(4 * 13) == 4
+    assert_schedule_conformance("lstm", s, B=2, T=4, F=3, H=13)
+
+
+def test_rglru_ragged_width():
+    assert_schedule_conformance("rglru", _sched(4, "static"),
+                                B=5, T=7, H=200)
+
+
+# ---------------------------------------------------------------------------
+# Schedule object semantics + HLS estimates from the same object
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError):
+        KernelSchedule(reuse_factor=0)
+    with pytest.raises(ValueError):
+        KernelSchedule(mode="pipelined")
+    with pytest.raises(ValueError):
+        KernelSchedule(backend="cuda")
+    assert all(b in BACKENDS for b in ("xla", "auto"))
+
+
+def test_schedule_sweep_grid():
+    grid = KernelSchedule.sweep()
+    assert len(grid) == 8
+    assert len(set(grid)) == 8             # hashable + distinct
+    assert {s.mode for s in grid} == set(MODES)
+
+
+def test_sequential_steps_and_ii():
+    s = KernelSchedule(reuse_factor=4, mode="static")
+    assert s.sequential_steps(20) == 80
+    assert s.initiation_interval(20) == 80
+    n = s.replace(mode="nonstatic")
+    assert n.initiation_interval(20) == 4  # one block latency
+
+    # same kernel, same grid: the Pallas static grid is (B/bt, T, R) whose
+    # sequential length is exactly sequential_steps
+    assert s.sequential_steps(20) == 20 * s.reuse_factor
+
+
+@pytest.mark.parametrize("cell", CELLS)
+def test_estimates_monotone_in_reuse(cell):
+    """Latency rises and DSP falls as R grows — from the SAME schedule
+    objects the conformance sweep executed (acceptance criterion).
+
+    hidden=24 makes every swept R an exact divisor of both 4h and 3h, so
+    effective reuse == requested reuse across the sweep.
+    """
+    import dataclasses
+
+    rnn = dataclasses.replace(get_config(f"top-tagging-{cell}").rnn,
+                              hidden=24)
+    ests = [estimate_schedule(_sched(r, "static"), rnn)
+            for r in REUSE_FACTORS]
+    lat = [e.latency_cycles for e in ests]
+    dsp = [e.dsp for e in ests]
+    vmem = [e.vmem_bytes for e in ests]
+    assert all(a < b for a, b in zip(lat, lat[1:])), lat
+    assert all(a > b for a, b in zip(dsp, dsp[1:])), dsp
+    assert all(a >= b for a, b in zip(vmem, vmem[1:])), vmem
+
+
+def test_estimate_prices_effective_reuse():
+    """For non-divisor R the kernel clamps reuse to gcd (ops.py); the
+    estimate must describe the schedule that actually executes, not the
+    requested one."""
+    rnn = get_config("top-tagging-gru").rnn        # 3h = 60, gcd(8, 60) = 4
+    assert _sched(8, "static").effective_reuse(3 * rnn.hidden) == 4
+    e8 = estimate_schedule(_sched(8, "static"), rnn)
+    e4 = estimate_schedule(_sched(4, "static"), rnn)
+    assert (e8.latency_cycles, e8.ii_cycles, e8.dsp, e8.vmem_bytes) == \
+        (e4.latency_cycles, e4.ii_cycles, e4.dsp, e4.vmem_bytes)
+
+
+def test_nonstatic_resource_blowup_static_ii_blowup():
+    """Paper Table 5 / Fig. 6: non-static replicates resources x seq_len but
+    drops II to one block; static is the reverse."""
+    rnn = get_config("top-tagging-gru").rnn
+    st = estimate_schedule(_sched(1, "static"), rnn)
+    ns = estimate_schedule(_sched(1, "nonstatic"), rnn)
+    assert ns.dsp == rnn.seq_len * st.dsp
+    assert ns.ii_cycles < st.ii_cycles
+
+
+def test_design_bridge_uses_schedule():
+    """The table-calibrated design model prices the same schedule object
+    (R values are divisors of the GRU gate dim, so effective == requested)."""
+    from repro.core.hls import estimate_design_for_schedule
+    cfg = get_config("top-tagging-gru")
+    designs = [estimate_design_for_schedule(cfg, _sched(r, "static"))
+               for r in (1, 2, 6, 12)]
+    lat = [d.latency_min_us for d in designs]
+    dsp = [d.dsp for d in designs]
+    assert all(a < b for a, b in zip(lat, lat[1:])), lat
+    assert all(a >= b for a, b in zip(dsp, dsp[1:])), dsp
+
+    # a non-divisor request is priced as the design that executes
+    d8 = estimate_design_for_schedule(cfg, _sched(8, "static"))
+    d4 = estimate_design_for_schedule(cfg, _sched(4, "static"))
+    assert d8 == d4
+
+
+def test_resolve_honors_schedule_block_batch():
+    """A caller-supplied schedule's block_batch survives dispatch (rglru
+    used to clobber it with its per-kernel default)."""
+    from repro.kernels.ops import _resolve
+
+    s = KernelSchedule(block_batch=64)
+    assert _resolve(s, None).block_batch == 64
+    assert _resolve(s, None, default_bb=8).block_batch == 64
+    assert _resolve(None, None, default_bb=8).block_batch == 8
+    assert _resolve(s, 16).block_batch == 16   # explicit arg still wins
+
+
+def test_tiled_matmul_matches_untiled():
+    """Column tiling at the cell level matches the full matmul to fp32
+    accumulation-order tolerance for any divisor R."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.rnn.cells import tiled_matmul
+
+    r = np.random.RandomState(7)
+    x = jnp.asarray(r.randn(5, 12).astype(np.float32))
+    w = jnp.asarray(r.randn(12, 24).astype(np.float32))
+    base = np.asarray(x @ w)
+    for reuse in (1, 2, 3, 4, 6, 8, 12, 24):
+        np.testing.assert_allclose(
+            np.asarray(tiled_matmul(x, w, reuse)), base,
+            rtol=1e-6, atol=1e-6)
+
+
+def test_config_picks_schedule():
+    """Models resolve their schedule from config; explicit schedule wins."""
+    import dataclasses
+
+    rnn = get_config("top-tagging-lstm").rnn
+    assert rnn.kernel_schedule() == KernelSchedule(
+        reuse_factor=rnn.reuse_kernel, mode=rnn.mode)
+    s = KernelSchedule(reuse_factor=4, mode="nonstatic")
+    rnn2 = dataclasses.replace(rnn, schedule=s)
+    assert rnn2.kernel_schedule() is s
+
+
+def test_layer_routes_schedule_through_pallas():
+    """rnn_layer(impl='pallas', schedule=...) matches the XLA layer."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.rnn.layer import rnn_layer
+    from repro.testing import make_kernel_inputs
+
+    rnn = get_config("top-tagging-lstm").rnn
+    xs, W, U, b = make_kernel_inputs("lstm", B=5, T=rnn.seq_len,
+                                     F=rnn.input_size, H=rnn.hidden)
+    ref = rnn_layer(rnn, xs, W, U, b, impl="xla")
+    for s in (KernelSchedule(reuse_factor=4, backend="pallas_interpret"),
+              KernelSchedule(reuse_factor=2, mode="nonstatic",
+                             backend="pallas_interpret")):
+        out = rnn_layer(rnn, xs, W, U, b, impl="pallas", schedule=s)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
