@@ -29,7 +29,8 @@ def smoke() -> int:
     t0 = time.time()
     from benchmarks import (bench_kernels, bench_latency_resources,  # noqa: F401
                             bench_quantization, bench_roofline,
-                            bench_static_nonstatic, bench_throughput)
+                            bench_serving, bench_static_nonstatic,
+                            bench_throughput)
     print("smoke/imports,0,ok")
 
     from repro.kernels.schedule import KernelSchedule
@@ -40,6 +41,9 @@ def smoke() -> int:
             err = assert_schedule_conformance(cell, sched, B=3, T=5, F=4, H=8)
             print(f"smoke/{cell}/{sched.mode}/R{sched.reuse_factor},"
                   f"0,max_err={err:.1e}")
+    # mixed-schedule serving path: co-batching by schedule hash must
+    # bit-match direct predict without retracing (fail-fast, raises)
+    bench_serving.smoke()
     print(f"smoke/wall_s,{(time.time()-t0)*1e6:.0f},ok")
     return 0
 
@@ -58,7 +62,8 @@ def main() -> None:
 
     from benchmarks import (bench_kernels, bench_latency_resources,
                             bench_quantization, bench_roofline,
-                            bench_static_nonstatic, bench_throughput)
+                            bench_serving, bench_static_nonstatic,
+                            bench_throughput)
     benches = {
         "latency_resources": bench_latency_resources,
         "static_nonstatic": bench_static_nonstatic,
@@ -66,6 +71,7 @@ def main() -> None:
         "roofline": bench_roofline,
         "quantization": bench_quantization,
         "throughput": bench_throughput,
+        "serving": bench_serving,
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

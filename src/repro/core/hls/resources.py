@@ -74,6 +74,26 @@ class ScheduleEstimate:
     bram_18k: int
     vmem_bytes: int
 
+    def latency_us(self, clock_mhz: float = 200.0) -> float:
+        return self.latency_cycles / clock_mhz
+
+    def throughput_eps(self, clock_mhz: float = 200.0) -> float:
+        return clock_mhz * 1e6 / max(self.ii_cycles, 1)
+
+    def report_row(self, clock_mhz: float = 200.0) -> dict:
+        """The analytical column of the serving layer's measured-vs-
+        analytical table, keyed exactly like the measured one."""
+        return {
+            "schedule_key": self.schedule.key(),
+            "latency_cycles": self.latency_cycles,
+            "latency_us": self.latency_us(clock_mhz),
+            "ii_cycles": self.ii_cycles,
+            "throughput_eps": self.throughput_eps(clock_mhz),
+            "dsp": self.dsp,
+            "bram_18k": self.bram_18k,
+            "vmem_bytes": self.vmem_bytes,
+        }
+
 
 def gate_mults(cell: str, input_size: int, hidden: int) -> int:
     """Multiplications of one recurrent step (kernel + recurrent matmul)."""

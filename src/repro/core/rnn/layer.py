@@ -55,12 +55,21 @@ def rnn_layer(
     mode: Optional[str] = None,
     impl: str = "xla",
     schedule: Optional[KernelSchedule] = None,
+    lengths: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Run the recurrent layer; returns the final hidden state [b, h].
 
     The execution schedule comes from (highest priority first) the
     ``schedule`` argument, the config's ``rnn.kernel_schedule()``, with the
     explicit ``mode`` argument overriding the schedule's mode either way.
+
+    ``lengths`` [b] enables the pad-and-mask ragged path: row i's state
+    freezes once t >= lengths[i], so a padded batch of variable-length
+    sequences returns each row's state at ITS final true step — bit-identical
+    per row to scanning that row unpadded (masked rows compute the same cell
+    ops; the freeze is a row-local select).  The masked scan runs on the XLA
+    cells for every impl (masking inside the Pallas kernels would change the
+    schedule being priced).
     """
     schedule = schedule or rnn.kernel_schedule()
     if mode is not None and mode != schedule.mode:
@@ -72,6 +81,25 @@ def rnn_layer(
     # physical effect in the Pallas kernels and the HLS estimators
     cell = _cell_fn(rnn.cell, fp)
     s0 = initial_state(rnn.cell, batch, rnn.hidden, xs.dtype)
+
+    if lengths is not None:
+        lengths = jnp.asarray(lengths)
+
+        def masked_step(state, inp):
+            x_t, t = inp
+            _, new = cell(x_t, state, W, U, b)
+            keep = (t < lengths)[:, None]
+            if rnn.cell == "lstm":
+                new = (jnp.where(keep, new[0], state[0]),
+                       jnp.where(keep, new[1], state[1]))
+            else:
+                new = jnp.where(keep, new, state)
+            return new, ()
+
+        ts = jnp.arange(xs.shape[1])
+        final, _ = jax.lax.scan(masked_step, s0,
+                                (jnp.moveaxis(xs, 1, 0), ts))
+        return final[0] if rnn.cell == "lstm" else final
 
     if impl == "pallas" and fp is None:
         from repro.kernels import ops as kops

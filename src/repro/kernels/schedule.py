@@ -32,6 +32,9 @@ from typing import Iterable, Tuple
 MODES = ("static", "nonstatic")
 BACKENDS = ("auto", "xla", "pallas_interpret", "pallas_tpu")
 
+#: queue key for requests that carry no schedule at all
+DEFAULT_SCHEDULE_KEY = "default"
+
 
 def _env_interpret() -> bool:
     return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
@@ -116,10 +119,32 @@ class KernelSchedule:
             return seq_len * self.reuse_factor
         return self.reuse_factor
 
+    # -- stable identity ----------------------------------------------------
+
+    def key(self) -> str:
+        """Stable, human-readable hash of the schedule — the co-batching key.
+
+        Two requests with equal keys compile to the SAME kernel (identical
+        jit trace), so the serving layer batches them together; the string is
+        stable across processes (unlike ``hash()``) and shows up verbatim in
+        latency reports and benchmark CSV rows.
+        """
+        return (f"{self.mode}-R{self.reuse_factor}"
+                f"-bb{self.block_batch}-{self.backend}")
+
     # -- sweeping -----------------------------------------------------------
 
     def replace(self, **kw) -> "KernelSchedule":
         return replace(self, **kw)
+
+    @classmethod
+    def from_key(cls, key: str) -> "KernelSchedule":
+        """Inverse of :meth:`key`; also accepts the fp-suffixed form
+        ``schedule_key`` produces (the ``-apW_I_rnd_sat`` tail is ignored).
+        Round-trips every valid schedule."""
+        mode, r, bb, backend = key.split("-")[:4]
+        return cls(reuse_factor=int(r[1:]), mode=mode,
+                   block_batch=int(bb[2:]), backend=backend)
 
     @classmethod
     def sweep(cls, reuse_factors: Iterable[int] = (1, 2, 4, 8),
@@ -129,3 +154,21 @@ class KernelSchedule:
         return tuple(cls(reuse_factor=r, mode=m, block_batch=block_batch,
                          backend=backend)
                      for m in modes for r in reuse_factors)
+
+
+def schedule_key(schedule: "KernelSchedule | None", fp=None) -> str:
+    """Stable co-batching key for a (schedule, fixed-point config) pair.
+
+    Requests whose key matches execute the same compiled kernel: the same
+    column-tile partitioning, mode, backend AND datapath precision.  ``fp``
+    is duck-typed (anything with ``total_bits`` / ``integer_bits``) so this
+    module keeps its no-repro-imports invariant; ``None`` fp means the float
+    datapath.
+    """
+    base = DEFAULT_SCHEDULE_KEY if schedule is None else schedule.key()
+    if fp is None:
+        return base
+    rounding = getattr(fp, "rounding", "rnd")
+    saturation = getattr(fp, "saturation", "sat")
+    return (f"{base}-ap{fp.total_bits}_{fp.integer_bits}"
+            f"_{rounding}_{saturation}")

@@ -42,16 +42,19 @@ def forward(
     mode: Optional[str] = None,
     impl: str = "xla",
     schedule=None,
+    lengths=None,
     return_logits: bool = False,
 ) -> jax.Array:
     """Returns class probabilities [b, n_outputs] (or pre-activation logits).
 
     ``schedule`` (a KernelSchedule) overrides the config-derived execution
-    schedule of the recurrent layer."""
+    schedule of the recurrent layer.  ``lengths`` [b] routes a padded batch
+    of variable-length sequences through the masked-scan ragged path (each
+    row's recurrence stops at its true length)."""
     rnn = cfg.rnn
     h = rnn_layer(rnn, x, params["rnn/kernel"], params["rnn/recurrent"],
                   params["rnn/bias"], fp=fp, mode=mode, impl=impl,
-                  schedule=schedule)
+                  schedule=schedule, lengths=lengths)
 
     def q(t):
         return t if fp is None else quantize(t, fp)

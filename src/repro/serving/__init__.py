@@ -1,3 +1,11 @@
-from repro.serving.engine import RNNServingEngine  # noqa: F401
+from repro.kernels.schedule import schedule_key  # noqa: F401
+from repro.serving.batcher import (  # noqa: F401
+    KeyStats,
+    MicroBatcher,
+    Request,
+)
+from repro.serving.engine import (  # noqa: F401
+    RNNServingEngine,
+    format_serve_report,
+)
 from repro.serving.lm_engine import LMServingEngine  # noqa: F401
-from repro.serving.batcher import MicroBatcher, Request  # noqa: F401

@@ -1,26 +1,41 @@
-"""RNN serving engine — the paper's deliverable as a service.
+"""RNN serving engine — the paper's deliverable as a multi-tenant service.
 
-Wraps a trained tagger with: execution mode (static scan / non-static
-unrolled / Pallas weights-resident kernel), optional fixed-point datapath,
-micro-batching, and a latency report that pairs measured wall-clock numbers
-with the analytical FPGA design point (core.hls) for the same configuration
-— the two columns the paper compares.
+Wraps a trained tagger with schedule-aware serving: every request optionally
+carries a :class:`KernelSchedule` (plus fixed-point config), and the engine
+
+  * co-batches requests by the stable ``schedule_key`` hash — requests that
+    compile to the same kernel share a batch, requests that differ never mix
+    (a multi-tenant FPGA farm serving several reuse-factor design points at
+    once);
+  * keeps ONE jit trace per schedule hash: flushed batches are padded to the
+    key's ``max_batch`` (zero rows — row-wise bit-identical on every
+    backend), so mixed-schedule traffic never retraces;
+  * shares batches across ragged (variable seq_len) jet streams, either by
+    length-bucketing sub-batches (bit-identical to direct ``predict``) or by
+    a pad-and-mask scan (single batch, XLA datapath);
+  * reports, per schedule key, measured wall-clock latency/throughput paired
+    with ``core.hls.estimate_schedule`` of the SAME schedule object — the
+    paper's measured-vs-analytical two-column comparison.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
-from typing import Dict, Optional
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import FixedPointConfig, ModelConfig
-from repro.core.hls import HLSDesign, RNNDesignPoint, estimate_design
+from repro.core.hls import (HLSDesign, RNNDesignPoint, estimate_design,
+                            estimate_schedule)
+from repro.kernels.schedule import KernelSchedule, schedule_key
 from repro.models import rnn_tagger
-from repro.serving.batcher import MicroBatcher
+from repro.serving.batcher import MicroBatcher, Request, _pad_stack
+
+RAGGED_POLICIES = ("bucket", "mask")
 
 
 @dataclass
@@ -32,48 +47,227 @@ class RNNServingEngine:
     impl: str = "xla"                     # xla | pallas
     fp: Optional[FixedPointConfig] = None
     max_batch: int = 256
-    schedule: Optional[object] = None     # KernelSchedule override
+    schedule: Optional[KernelSchedule] = None   # default-request schedule
+    ragged: str = "bucket"                # bucket (bit-exact) | mask (one
+                                          # padded batch, XLA datapath)
+    pad_batches: bool = True              # pad flushes to max_batch: one jit
+                                          # trace per schedule hash
+    _infer_cache: Dict[str, Callable] = field(default_factory=dict, repr=False)
+    _key_specs: Dict[str, Tuple[KernelSchedule, Optional[FixedPointConfig]]] \
+        = field(default_factory=dict, repr=False)
+    _traces: Dict[str, int] = field(default_factory=dict, repr=False)
 
     def __post_init__(self):
-        cfg, fp, mode, impl = self.cfg, self.fp, self.mode, self.impl
-        schedule = self.schedule
-
-        def infer(params, x):
-            return rnn_tagger.forward(cfg, params, x, fp=fp, mode=mode,
-                                      impl=impl, schedule=schedule)
-
-        self._infer = jax.jit(infer)
+        if self.ragged not in RAGGED_POLICIES:
+            raise ValueError(f"ragged {self.ragged!r} not in {RAGGED_POLICIES}")
         self.batcher = MicroBatcher(max_batch=self.max_batch)
 
-    # -- direct batched inference -------------------------------------------
-    def predict(self, x: np.ndarray) -> np.ndarray:
-        return np.asarray(self._infer(self.params, jnp.asarray(x)))
+    # -- schedule resolution -------------------------------------------------
 
-    def warmup(self):
-        r = self.cfg.rnn
-        self.predict(np.zeros((1, r.seq_len, r.input_size), np.float32))
+    @property
+    def resolved_schedule(self) -> KernelSchedule:
+        """The schedule executed for requests that don't carry one: the
+        engine's explicit schedule or the config-derived one, with the legacy
+        ``mode`` / ``impl`` fields folded in so the key names what runs."""
+        s = self.schedule if self.schedule is not None \
+            else self.cfg.rnn.kernel_schedule()
+        if self.mode is not None and s.mode != self.mode:
+            s = s.replace(mode=self.mode)
+        if self.impl == "xla" and s.backend != "xla":
+            s = s.replace(backend="xla")
+        return s
 
-    # -- measured throughput/latency ----------------------------------------
-    def benchmark(self, batch: int, iters: int = 20) -> Dict[str, float]:
-        r = self.cfg.rnn
-        x = np.random.RandomState(0).randn(
-            batch, r.seq_len, r.input_size).astype(np.float32)
-        self.predict(x[:1])                         # compile
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            self.predict(x)
-        dt = (time.perf_counter() - t0) / iters
-        return {"batch": batch, "latency_s": dt,
-                "throughput_eps": batch / dt}
-
-    # -- paired FPGA design point -------------------------------------------
     @property
     def resolved_mode(self) -> str:
-        if self.mode is not None:
-            return self.mode
-        if self.schedule is not None:
-            return self.schedule.mode
-        return self.cfg.rnn.mode
+        return self.resolved_schedule.mode
+
+    def resolve(self, schedule: Optional[KernelSchedule] = None,
+                fp: Optional[FixedPointConfig] = None
+                ) -> Tuple[KernelSchedule, Optional[FixedPointConfig]]:
+        """(schedule, fp) a request with these overrides actually executes."""
+        return (schedule if schedule is not None else self.resolved_schedule,
+                fp if fp is not None else self.fp)
+
+    def _ensure_key(self, sched: KernelSchedule,
+                    fp: Optional[FixedPointConfig]) -> str:
+        key = schedule_key(sched, fp)
+        if key not in self._infer_cache:
+            self._key_specs[key] = (sched, fp)
+            self._infer_cache[key] = self._make_infer(key, sched, fp)
+        return key
+
+    def _make_infer(self, key: str, sched: KernelSchedule,
+                    fp: Optional[FixedPointConfig]) -> Callable:
+        cfg = self.cfg
+        impl = "pallas" if sched.use_pallas else "xla"
+
+        def infer(params, x, lengths=None):
+            # Python side effect runs at TRACE time only: counts jit traces
+            # per schedule hash (the co-batching efficiency criterion)
+            self._traces[key] = self._traces.get(key, 0) + 1
+            return rnn_tagger.forward(cfg, params, x, fp=fp, impl=impl,
+                                      schedule=sched, lengths=lengths)
+
+        return jax.jit(infer)
+
+    def trace_count(self, key: str) -> int:
+        return self._traces.get(key, 0)
+
+    # -- direct batched inference -------------------------------------------
+
+    def _predict_key(self, key: str, x: np.ndarray,
+                     lengths: Optional[np.ndarray] = None) -> np.ndarray:
+        fn = self._infer_cache[key]
+        if lengths is None:
+            return np.asarray(fn(self.params, jnp.asarray(x)))
+        return np.asarray(fn(self.params, jnp.asarray(x),
+                             jnp.asarray(lengths, jnp.int32)))
+
+    def predict(self, x: np.ndarray,
+                schedule: Optional[KernelSchedule] = None,
+                fp: Optional[FixedPointConfig] = None) -> np.ndarray:
+        """[b, T, in] -> [b, n_outputs] under the request's schedule."""
+        key = self._ensure_key(*self.resolve(schedule, fp))
+        return self._predict_key(key, x)
+
+    def predict_ragged(self, xs: List[np.ndarray],
+                       schedule: Optional[KernelSchedule] = None,
+                       fp: Optional[FixedPointConfig] = None) -> List[np.ndarray]:
+        """Variable-length requests sharing one logical batch.  ``bucket``
+        groups by seq_len (bit-identical to per-length predict on every
+        backend); ``mask`` pads to the max length and freezes each row's
+        state past its true length (one batch, XLA-cell datapath)."""
+        key = self._ensure_key(*self.resolve(schedule, fp))
+        pad, lengths, _ = _pad_stack(list(xs))
+        if self.ragged == "mask":
+            out = self._predict_key(key, pad, lengths)
+            return [out[i] for i in range(len(xs))]
+        return self._bucket_predict(key, xs, lengths)
+
+    def _bucket_predict(self, key: str, xs: List[np.ndarray],
+                        lengths: np.ndarray) -> List[np.ndarray]:
+        out: List[Optional[np.ndarray]] = [None] * len(xs)
+        for t in sorted({int(n) for n in lengths}):
+            idx = [i for i, n in enumerate(lengths) if int(n) == t]
+            sub = np.stack([np.asarray(xs[i])[:t] for i in idx])
+            res = self._predict_padded(key, sub)
+            for j, i in enumerate(idx):
+                out[i] = res[j]
+        return out                           # type: ignore[return-value]
+
+    def warmup(self, schedule: Optional[KernelSchedule] = None,
+               fp: Optional[FixedPointConfig] = None):
+        r = self.cfg.rnn
+        self.predict(np.zeros((1, r.seq_len, r.input_size), np.float32),
+                     schedule=schedule, fp=fp)
+
+    # -- schedule-keyed serving ---------------------------------------------
+
+    def submit(self, x: np.ndarray,
+               schedule: Optional[KernelSchedule] = None,
+               fp: Optional[FixedPointConfig] = None,
+               now: Optional[float] = None) -> Request:
+        """Enqueue one request ([T, in] payload) on its schedule's queue."""
+        sched, fpr = self.resolve(schedule, fp)
+        key = self._ensure_key(sched, fpr)
+        return self.batcher.submit(x, now=now, key=key, schedule=sched,
+                                   fp=fpr)
+
+    def _pad_rows(self, x: np.ndarray, key: str) -> Tuple[np.ndarray, int]:
+        b = x.shape[0]
+        mb, _ = self.batcher.policy(key)
+        if not self.pad_batches or b >= mb:
+            return x, b
+        pad = np.zeros((mb - b,) + x.shape[1:], x.dtype)
+        return np.concatenate([x, pad], axis=0), b
+
+    def _predict_padded(self, key: str, x: np.ndarray,
+                        lengths: Optional[np.ndarray] = None) -> np.ndarray:
+        """Key-cached inference with the batch padded to the key's
+        max_batch: constant shapes, so mixed-schedule traffic costs at most
+        one jit trace per schedule hash.  Zero rows are row-wise inert on
+        every backend (verified by the conformance suite)."""
+        xp, b = self._pad_rows(np.asarray(x), key)
+        if lengths is not None and xp.shape[0] != len(lengths):
+            lp = np.zeros((xp.shape[0],), np.int32)
+            lp[:b] = lengths
+            lengths = lp
+        return self._predict_key(key, xp, lengths)[:b]
+
+    def _flush_fn(self, key: str) -> Callable:
+        """The infer function handed to the batcher for one queue; accepts
+        ``lengths`` so ragged flushes route through the engine's policy."""
+        def fn(x, lengths=None):
+            if lengths is None:
+                return self._predict_padded(key, x)
+            if self.ragged == "mask":
+                return self._predict_padded(key, x, lengths=lengths)
+            res = self._bucket_predict(
+                key, [np.asarray(x[i]) for i in range(x.shape[0])],
+                np.asarray(lengths))
+            return np.stack(res)
+        return fn
+
+    def flush(self, now: Optional[float] = None,
+              force: bool = False) -> List[Request]:
+        """Flush every ready queue (fair round-robin across schedule keys);
+        ``force`` also flushes below-threshold leftovers (end of stream)."""
+        return self.batcher.run_all(self._flush_fn, now=now, force=force)
+
+    def serve(self, payloads, schedules=None, fps=None,
+              now: Optional[float] = None) -> List[Request]:
+        """Convenience: submit a whole stream (parallel lists), then flush to
+        completion.  Returns the requests in submission order."""
+        n = len(payloads)
+        schedules = schedules if schedules is not None else [None] * n
+        fps = fps if fps is not None else [None] * n
+        reqs = [self.submit(x, schedule=s, fp=f, now=now)
+                for x, s, f in zip(payloads, schedules, fps)]
+        self.flush(now=now, force=True)
+        return reqs
+
+    # -- measured throughput/latency ----------------------------------------
+
+    def benchmark(self, batch: int, iters: int = 20,
+                  schedule: Optional[KernelSchedule] = None,
+                  fp: Optional[FixedPointConfig] = None) -> Dict[str, float]:
+        """Measured latency/throughput for one schedule key, paired with the
+        analytical estimate of the same schedule object."""
+        r = self.cfg.rnn
+        sched, fpr = self.resolve(schedule, fp)
+        key = self._ensure_key(sched, fpr)
+        x = np.random.RandomState(0).randn(
+            batch, r.seq_len, r.input_size).astype(np.float32)
+        self._predict_key(key, x)                   # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            self._predict_key(key, x)
+        dt = (time.perf_counter() - t0) / iters
+        est = estimate_schedule(sched, r, fpr)
+        return {"key": key, "batch": batch, "latency_s": dt,
+                "throughput_eps": batch / dt,
+                "latency_cycles": est.latency_cycles,
+                "ii_cycles": est.ii_cycles, "dsp": est.dsp}
+
+    # -- measured vs analytical, per schedule key ---------------------------
+
+    def serve_report(self, clock_mhz: float = 200.0) -> Dict[str, Dict]:
+        """Per schedule key: measured serving stats (from the batcher's
+        per-key counters) next to ``estimate_schedule`` of the SAME schedule
+        object the queue executed — the paper's two-column table."""
+        report: Dict[str, Dict] = {}
+        for key, (sched, fpr) in self._key_specs.items():
+            est = estimate_schedule(sched, self.cfg.rnn, fpr)
+            report[key] = {
+                "schedule": sched,
+                "fp": fpr,
+                "traces": self.trace_count(key),
+                "measured": self.batcher.key_stats(key).summary(),
+                "analytical": est.report_row(clock_mhz),
+            }
+        return report
+
+    # -- paired FPGA design point -------------------------------------------
 
     def fpga_design(self, reuse_kernel: int = 1, reuse_recurrent: int = 1,
                     strategy: str = "latency", part: str = "xcku115"
@@ -82,3 +276,18 @@ class RNNServingEngine:
             self.cfg, self.fp or FixedPointConfig(),
             reuse_kernel, reuse_recurrent, self.resolved_mode,
             strategy, part))
+
+
+def format_serve_report(report: Dict[str, Dict],
+                        clock_mhz: float = 200.0) -> str:
+    """Render serve_report() as the measured-vs-analytical table."""
+    lines = [f"{'schedule key':38s} {'served':>6s} {'meas p50':>10s} "
+             f"{'meas p99':>10s} {'est lat':>9s} {'est II':>8s} {'DSP':>6s}"]
+    for key, row in report.items():
+        m, a = row["measured"], row["analytical"]
+        lines.append(
+            f"{key:38s} {int(m['served']):6d} "
+            f"{m['latency_p50_s'] * 1e3:8.2f}ms "
+            f"{m['latency_p99_s'] * 1e3:8.2f}ms "
+            f"{a['latency_us']:7.2f}us {a['ii_cycles']:8d} {a['dsp']:6d}")
+    return "\n".join(lines)

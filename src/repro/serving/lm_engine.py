@@ -8,6 +8,7 @@ stalling running ones (vLLM-style, sized for fixed-shape XLA programs).
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -19,6 +20,7 @@ from repro.config import ModelConfig
 from repro.models import transformer as tf
 from repro.models.decode import cache_specs, decode_step
 from repro.models.init import init_params
+from repro.serving.batcher import KeyStats
 
 
 @dataclass
@@ -28,6 +30,7 @@ class Slot:
     pos: int = 0
     tokens: List[int] = field(default_factory=list)
     max_new: int = 16
+    arrival_s: float = 0.0
 
 
 class LMServingEngine:
@@ -48,9 +51,13 @@ class LMServingEngine:
 
         self._step = jax.jit(step, donate_argnums=(1,))
         self._next_req = 0
+        # per-engine serving counters, same shape as the RNN engine's
+        # per-key stats (the LM engine has one implicit "decode" key)
+        self._stats = KeyStats()
 
     # -- request management --------------------------------------------------
-    def add_request(self, prompt: List[int], max_new: int = 16) -> Optional[int]:
+    def add_request(self, prompt: List[int], max_new: int = 16,
+                    now: Optional[float] = None) -> Optional[int]:
         for s in self.slots:
             if not s.active:
                 s.active = True
@@ -59,6 +66,7 @@ class LMServingEngine:
                 s.pos = 0
                 s.tokens = list(prompt)
                 s.max_new = max_new
+                s.arrival_s = time.time() if now is None else now
                 s._prompt_len = len(prompt)
                 return s.req_id
         return None                     # queue full
@@ -70,7 +78,7 @@ class LMServingEngine:
         return int(jnp.argmax(logits_row))
 
     # -- one engine tick: every active slot decodes one token ----------------
-    def tick(self) -> Dict[int, List[int]]:
+    def tick(self, now: Optional[float] = None) -> Dict[int, List[int]]:
         if not any(s.active for s in self.slots):
             return {}
         tokens = np.zeros((self.max_batch, 1), np.int32)
@@ -96,12 +104,25 @@ class LMServingEngine:
             if done:
                 finished[s.req_id] = list(s.tokens)
                 s.active = False        # slot freed for the next request
+                # same clock domain as add_request: wall time by default,
+                # the caller's logical clock when both pass ``now``
+                t = time.time() if now is None else now
+                self._stats.record_one(t - s.arrival_s)
+        if finished:
+            self._stats.batches += 1
         return finished
 
-    def run_to_completion(self, max_ticks: int = 512) -> Dict[int, List[int]]:
+    def serve_report(self) -> Dict[str, Dict]:
+        """Measured serving stats in the RNN engine's report shape (no
+        analytical column — the HLS model covers the RNN family only)."""
+        return {"decode": {"measured": self._stats.summary(),
+                           "analytical": None}}
+
+    def run_to_completion(self, max_ticks: int = 512,
+                          now: Optional[float] = None) -> Dict[int, List[int]]:
         out: Dict[int, List[int]] = {}
         for _ in range(max_ticks):
-            out.update(self.tick())
+            out.update(self.tick(now=now))
             if not any(s.active for s in self.slots):
                 break
         return out

@@ -129,3 +129,45 @@ def assert_schedule_conformance(kernel: str, schedule: KernelSchedule, *,
         f"max_err={err:.3e} > {limit * scale:.3e} (dtype={dtype}, "
         f"shapes={shape_kw})")
     return err
+
+
+# ---------------------------------------------------------------------------
+# End-to-end serving conformance (engine output vs the lax.scan golden model)
+# ---------------------------------------------------------------------------
+
+
+def serving_golden(cfg: ModelConfig, params, x, fp=None, mode=None,
+                   lengths=None) -> np.ndarray:
+    """Golden served output: the full tagger forward pass on the XLA
+    ``lax.scan`` reference datapath (kernels/ref.py semantics) — what every
+    engine (mode x impl x schedule x fp) cell must reproduce."""
+    import jax.numpy as jnp
+
+    from repro.models import rnn_tagger
+
+    return np.asarray(rnn_tagger.forward(
+        cfg, params, jnp.asarray(x), fp=fp, mode=mode, impl="xla",
+        lengths=None if lengths is None else jnp.asarray(lengths)),
+        np.float32)
+
+
+def assert_serving_conformance(engine, x, *, schedule: Optional[KernelSchedule]
+                               = None, fp=None, tol: Optional[float] = None,
+                               dtype: str = "float32") -> float:
+    """One engine.predict cell against the golden model, with the same
+    tolerance discipline as :func:`assert_schedule_conformance`.
+
+    Returns the max abs error; raises AssertionError beyond tolerance.
+    """
+    got = np.asarray(engine.predict(x, schedule=schedule, fp=fp), np.float32)
+    sched, fpr = engine.resolve(schedule, fp)
+    want = serving_golden(engine.cfg, engine.params, x, fp=fpr,
+                          mode=sched.mode)
+    assert got.shape == want.shape, (sched, got.shape, want.shape)
+    err = float(np.max(np.abs(got - want))) if got.size else 0.0
+    limit = CONFORMANCE_TOL[dtype] if tol is None else tol
+    scale = max(1.0, float(np.max(np.abs(want)))) if want.size else 1.0
+    assert err <= limit * scale, (
+        f"engine diverged from golden model under {sched} fp={fpr}: "
+        f"max_err={err:.3e} > {limit * scale:.3e}")
+    return err

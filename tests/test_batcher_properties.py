@@ -1,0 +1,90 @@
+"""Property tests for the multi-queue schedule-keyed MicroBatcher.
+
+Runs under real hypothesis when installed, else under the deterministic
+``tests/_hypothesis_stub.py`` fallback (conftest installs it).  Invariants:
+no request is dropped or duplicated, FIFO order holds within a schedule key,
+``ready()`` is monotone in time, and a drain never exceeds the key's
+``max_batch``.
+"""
+
+import random
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import MicroBatcher
+
+KEYS = ("static-R1", "static-R4", "nonstatic-R2")
+
+
+def _random_stream(n, seed, max_batch, max_wait_s=0.05):
+    """A reproducible mixed-key submission stream."""
+    rnd = random.Random(seed)
+    mb = MicroBatcher(max_batch=max_batch, max_wait_s=max_wait_s)
+    t = 0.0
+    submitted = []
+    for _ in range(n):
+        t += rnd.random() * 0.01
+        submitted.append(
+            mb.submit(np.zeros(2, np.float32), now=t,
+                      key=KEYS[rnd.randrange(len(KEYS))]))
+    return mb, submitted, t
+
+
+@settings(max_examples=20)
+@given(n=st.integers(1, 60), max_batch=st.integers(1, 9),
+       seed=st.integers(0, 10_000))
+def test_no_request_dropped_or_duplicated(n, max_batch, seed):
+    mb, submitted, t = _random_stream(n, seed, max_batch)
+    drained = []
+    while mb.pending():
+        batch = mb.run(lambda x: x, now=t + 1.0, force=True)
+        assert batch, "pending queue must always be drainable with force"
+        drained.extend(batch)
+    assert sorted(r.req_id for r in drained) == \
+        sorted(r.req_id for r in submitted)
+    assert all(r.result is not None and r.done_s is not None for r in drained)
+
+
+@settings(max_examples=20)
+@given(n=st.integers(2, 60), max_batch=st.integers(1, 9),
+       seed=st.integers(0, 10_000))
+def test_fifo_order_within_schedule_key(n, max_batch, seed):
+    mb, submitted, t = _random_stream(n, seed, max_batch)
+    drained_by_key = {k: [] for k in KEYS}
+    while mb.pending():
+        for r in mb.run(lambda x: x, now=t + 1.0, force=True):
+            drained_by_key[r.key].append(r.req_id)
+    for k in KEYS:
+        expect = [r.req_id for r in submitted if r.key == k]
+        assert drained_by_key[k] == expect, k
+
+
+@settings(max_examples=20)
+@given(n=st.integers(1, 20), max_batch=st.integers(2, 30),
+       wait=st.floats(0.001, 0.5), seed=st.integers(0, 10_000))
+def test_ready_monotone_in_time(n, max_batch, wait, seed):
+    rnd = random.Random(seed)
+    mb = MicroBatcher(max_batch=max_batch, max_wait_s=wait)
+    t = 0.0
+    for _ in range(n):
+        t += rnd.random() * 0.01
+        mb.submit(np.zeros(1), now=t, key=KEYS[rnd.randrange(len(KEYS))])
+    states = [mb.ready(now=t + dt) for dt in np.linspace(0.0, 2 * wait, 12)]
+    assert all(b or not a for a, b in zip(states, states[1:])), \
+        f"ready() went True -> False without a drain: {states}"
+    assert states[-1], "past max_wait_s every non-empty queue must be ready"
+
+
+@settings(max_examples=20)
+@given(n=st.integers(1, 60), max_batch=st.integers(1, 9),
+       fast_batch=st.integers(1, 3), seed=st.integers(0, 10_000))
+def test_drain_never_exceeds_per_key_max_batch(n, max_batch, fast_batch, seed):
+    mb, submitted, t = _random_stream(n, seed, max_batch)
+    mb.set_policy(KEYS[0], max_batch=fast_batch)
+    while mb.pending():
+        batch = mb.run(lambda x: x, now=t + 1.0, force=True)
+        keys = {r.key for r in batch}
+        assert len(keys) == 1, "one flush never mixes schedule keys"
+        limit = fast_batch if keys.pop() == KEYS[0] else max_batch
+        assert len(batch) <= limit

@@ -25,6 +25,77 @@ def test_microbatcher_flushes_on_size_and_timeout():
     assert mb.ready(now=2.1)               # timeout trigger
 
 
+def test_microbatcher_ragged_payloads_padded_and_unpadded():
+    """Regression: ragged payloads used to crash np.stack; now they pad to
+    the per-batch max and results come back unpadded per request."""
+    mb = MicroBatcher(max_batch=3, max_wait_s=0.0)
+    payloads = [np.arange(8, dtype=np.float32).reshape(4, 2),
+                np.ones((2, 2), np.float32) * 7,
+                np.full((3, 2), -1.0, np.float32)]
+    for p in payloads:
+        mb.submit(p, now=0.0)
+    with pytest.warns(RuntimeWarning):     # plain fn: no lengths parameter
+        done = mb.run(lambda x: x, now=0.1)    # identity keeps the seq axis
+    assert len(done) == 3
+    for r, p in zip(done, payloads):
+        np.testing.assert_array_equal(r.result, p)   # unpadded round-trip
+
+
+def test_microbatcher_ragged_nonseq_outputs_not_truncated():
+    """Outputs whose leading dim merely coincides with the padded length
+    (e.g. class probabilities) must come back whole, and an infer function
+    without a ``lengths`` parameter gets a RuntimeWarning on ragged input."""
+    mb = MicroBatcher(max_batch=2, max_wait_s=0.0)
+    mb.submit(np.zeros((4, 2), np.float32), now=0.0)
+    mb.submit(np.zeros((2, 2), np.float32), now=0.0)
+    with pytest.warns(RuntimeWarning, match="lengths"):
+        done = mb.run(lambda x: np.ones((x.shape[0], 4), np.float32), now=0.1)
+    assert [r.result.shape for r in done] == [(4,), (4,)]
+
+
+def test_microbatcher_ragged_passes_lengths_when_accepted():
+    mb = MicroBatcher(max_batch=2, max_wait_s=0.0)
+    mb.submit(np.zeros((4, 2), np.float32), now=0.0)
+    mb.submit(np.zeros((2, 2), np.float32), now=0.0)
+    seen = {}
+
+    def infer(x, lengths=None):
+        seen["lengths"] = lengths
+        return np.ones((x.shape[0], 1), np.float32)
+
+    done = mb.run(infer, now=0.1)
+    assert len(done) == 2
+    np.testing.assert_array_equal(seen["lengths"], [4, 2])
+
+
+def test_microbatcher_multiqueue_keys_do_not_mix():
+    mb = MicroBatcher(max_batch=2, max_wait_s=10.0)
+    a = [mb.submit(np.zeros(2), now=0.0, key="a") for _ in range(3)]
+    b = [mb.submit(np.ones(2), now=0.0, key="b") for _ in range(2)]
+    assert mb.pending("a") == 3 and mb.pending("b") == 2
+    assert set(mb.ready_keys(now=0.0)) == {"a", "b"}
+    seen = {"a": [], "b": []}
+    while mb.pending():
+        batch = mb.run(lambda x: x + 1, now=0.1, force=True)
+        assert len(batch) <= 2
+        keys = {r.key for r in batch}
+        assert len(keys) == 1            # one flush never mixes keys
+        seen[keys.pop()].extend(r.req_id for r in batch)
+    assert seen["a"] == [r.req_id for r in a]       # FIFO within key
+    assert seen["b"] == [r.req_id for r in b]
+    assert mb.key_stats("a").served == 3
+    assert mb.key_stats("b").served == 2
+
+
+def test_microbatcher_per_key_policy():
+    mb = MicroBatcher(max_batch=8, max_wait_s=10.0)
+    mb.set_policy("fast", max_batch=1, max_wait_s=0.0)
+    mb.submit(np.zeros(2), now=0.0, key="fast")
+    mb.submit(np.zeros(2), now=0.0, key="slow")
+    assert mb.ready_keys(now=0.0) == ["fast"]       # slow waits for 8/10 s
+    assert len(mb.run(lambda x: x, now=0.0)) == 1
+
+
 def test_rnn_engine_static_nonstatic_same_predictions(rng):
     cfg = get_config("top-tagging-gru")
     m = build_model(cfg)

@@ -1,0 +1,256 @@
+"""End-to-end serving conformance: every engine (mode x impl x schedule R x
+fp) cell must reproduce the XLA ``lax.scan`` golden model, the schedule-keyed
+co-batcher must serve mixed-schedule traffic bit-identically to direct
+``predict`` with at most one jit trace per schedule hash, and ``serve_report``
+must pair each measured number with ``estimate_schedule`` of the SAME
+schedule object (paper deployment scenarios: batch-1 trigger + batched
+coprocessor)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import FixedPointConfig
+from repro.core.hls.resources import estimate_schedule
+from repro.kernels.schedule import MODES, KernelSchedule, schedule_key
+from repro.models import build_model
+from repro.registry import get_config
+from repro.serving import RNNServingEngine
+from repro.testing import assert_serving_conformance, serving_golden
+
+REUSE_FACTORS = (1, 4)
+BACKENDS = ("xla", "pallas_interpret")       # impl axis: golden vs kernels
+FPS = (None, FixedPointConfig(16, 6))
+
+
+def _params_for(arch):
+    cfg = get_config(arch)
+    return cfg, build_model(cfg).init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def gru_tagger():
+    return _params_for("top-tagging-gru")
+
+
+@pytest.fixture(scope="module")
+def lstm_tagger():
+    return _params_for("top-tagging-lstm")
+
+
+@pytest.fixture(scope="module")
+def gru_engine(gru_tagger):
+    cfg, params = gru_tagger
+    return RNNServingEngine(cfg, params, max_batch=8)
+
+
+def _sched(reuse, mode, backend):
+    return KernelSchedule(reuse_factor=reuse, mode=mode, block_batch=8,
+                          backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# The acceptance sweep: engine.predict vs golden for every
+# (mode x impl x R x fp) cell, batch-1 (trigger) + batched (coprocessor)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fp", FPS, ids=("float", "ap16_6"))
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("reuse", REUSE_FACTORS)
+@pytest.mark.parametrize("mode", MODES)
+def test_engine_conformance_cells(gru_engine, mode, reuse, backend, fp, rng):
+    s = _sched(reuse, mode, backend)
+    x1 = rng.randn(1, 20, 6).astype(np.float32)    # batch-1 trigger path
+    xb = rng.randn(5, 20, 6).astype(np.float32)    # batched coprocessor path
+    assert_serving_conformance(gru_engine, x1, schedule=s, fp=fp)
+    assert_serving_conformance(gru_engine, xb, schedule=s, fp=fp)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_engine_conformance_lstm(lstm_tagger, mode, rng):
+    cfg, params = lstm_tagger
+    eng = RNNServingEngine(cfg, params, max_batch=8)
+    x = rng.randn(4, 20, 6).astype(np.float32)
+    assert_serving_conformance(eng, x,
+                               schedule=_sched(4, mode, "pallas_interpret"))
+    assert_serving_conformance(eng, x, schedule=_sched(1, mode, "xla"),
+                               fp=FixedPointConfig(16, 6))
+
+
+def test_schedule_key_roundtrip():
+    """key()/schedule_key are stable and from_key inverts them, including
+    the fp-suffixed form the serving reports use."""
+    s = _sched(4, "nonstatic", "pallas_interpret")
+    assert KernelSchedule.from_key(s.key()) == s
+    fp = FixedPointConfig(16, 6)
+    assert schedule_key(s, fp).startswith(s.key())
+    assert KernelSchedule.from_key(schedule_key(s, fp)) == s
+    assert schedule_key(s, fp) != schedule_key(s, None)
+
+
+def test_xla_backend_engine_is_exact(gru_engine, rng):
+    """backend='xla' serving must equal the golden model bit-for-bit."""
+    x = rng.randn(3, 20, 6).astype(np.float32)
+    err = assert_serving_conformance(gru_engine, x,
+                                     schedule=_sched(1, "static", "xla"))
+    assert err == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Mixed-schedule co-batching (the PR's acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_schedule_stream_bitmatches_direct_predict(gru_tagger, rng):
+    """>= 3 distinct schedules interleaved in one stream: outputs bit-match
+    per-schedule direct predict, one jit trace per schedule hash, and
+    serve_report pairs measured latency with estimate_schedule of the SAME
+    object."""
+    cfg, params = gru_tagger
+    eng = RNNServingEngine(cfg, params, max_batch=4)
+    scheds = [
+        _sched(1, "static", "xla"),
+        _sched(2, "static", "pallas_interpret"),
+        _sched(4, "nonstatic", "pallas_interpret"),
+    ]
+    xs = {s: rng.randn(8, 20, 6).astype(np.float32) for s in scheds}
+    reqs = {s: [] for s in scheds}
+    for i in range(8):                       # interleave round-robin
+        for s in scheds:
+            reqs[s].append(eng.submit(xs[s][i], schedule=s))
+    done = eng.flush(force=True)
+    assert len(done) == 24
+    assert all(r.result is not None for r in done)
+
+    # direct predict on a FRESH engine (no shared traces/stats)
+    ref = RNNServingEngine(cfg, params, max_batch=4)
+    for s in scheds:
+        got = np.stack([r.result for r in reqs[s]])
+        want = ref.predict(xs[s], schedule=s)
+        assert np.array_equal(got, want), schedule_key(s)
+        # at most one jit trace per schedule hash across the whole stream
+        assert eng.trace_count(schedule_key(s)) == 1
+
+    report = eng.serve_report()
+    assert set(report) == {schedule_key(s) for s in scheds}
+    for s in scheds:
+        row = report[schedule_key(s)]
+        assert row["schedule"] is s          # the SAME object, not a copy
+        est = estimate_schedule(s, cfg.rnn)
+        assert row["analytical"]["latency_cycles"] == est.latency_cycles
+        assert row["analytical"]["ii_cycles"] == est.ii_cycles
+        assert row["measured"]["served"] == 8
+        assert np.isfinite(row["measured"]["latency_mean_s"])
+
+
+def test_mixed_fp_requests_get_distinct_keys(gru_tagger, rng):
+    """Same schedule, different fixed-point config -> different queue (a
+    different compiled datapath)."""
+    cfg, params = gru_tagger
+    eng = RNNServingEngine(cfg, params, max_batch=2)
+    s = _sched(1, "static", "xla")
+    fp = FixedPointConfig(16, 6)
+    r1 = eng.submit(rng.randn(20, 6).astype(np.float32), schedule=s)
+    r2 = eng.submit(rng.randn(20, 6).astype(np.float32), schedule=s, fp=fp)
+    assert r1.key != r2.key
+    eng.flush(force=True)
+    ref = RNNServingEngine(cfg, params, max_batch=2)
+    np.testing.assert_array_equal(
+        r1.result, ref.predict(np.asarray(r1.payload)[None], schedule=s)[0])
+    np.testing.assert_array_equal(
+        r2.result,
+        ref.predict(np.asarray(r2.payload)[None], schedule=s, fp=fp)[0])
+
+
+# ---------------------------------------------------------------------------
+# Ragged (variable seq_len) serving
+# ---------------------------------------------------------------------------
+
+
+def test_ragged_bucket_serving_bitmatches_direct(gru_tagger, rng):
+    """Length-bucketed ragged flushes are bit-identical to per-request
+    direct predict — on the Pallas backend too."""
+    cfg, params = gru_tagger
+    eng = RNNServingEngine(cfg, params, max_batch=8)
+    s = _sched(2, "static", "pallas_interpret")
+    lens = [20, 12, 20, 7, 12, 5]
+    reqs = [eng.submit(rng.randn(n, 6).astype(np.float32), schedule=s)
+            for n in lens]
+    eng.flush(force=True)
+    ref = RNNServingEngine(cfg, params, max_batch=8)
+    for r in reqs:
+        want = ref.predict(np.asarray(r.payload)[None], schedule=s)[0]
+        assert np.array_equal(r.result, want)
+
+
+def test_ragged_mask_serving_bitmatches_direct(gru_tagger, rng):
+    """Pad-and-mask shares ONE batch across lengths; on the XLA datapath the
+    frozen-state trick is bit-identical to scanning each row unpadded."""
+    cfg, params = gru_tagger
+    eng = RNNServingEngine(cfg, params, max_batch=8, ragged="mask")
+    lens = [20, 3, 11, 20, 6]
+    reqs = [eng.submit(rng.randn(n, 6).astype(np.float32)) for n in lens]
+    eng.flush(force=True)
+    ref = RNNServingEngine(cfg, params, max_batch=8)
+    for r in reqs:
+        want = ref.predict(np.asarray(r.payload)[None])[0]
+        assert np.array_equal(r.result, want)
+
+
+def test_predict_ragged_matches_golden_with_lengths(gru_tagger, rng):
+    """The masked forward itself: padded batch + lengths == per-row golden."""
+    cfg, params = gru_tagger
+    eng = RNNServingEngine(cfg, params, max_batch=8, ragged="mask")
+    xs = [rng.randn(n, 6).astype(np.float32) for n in (20, 9, 14)]
+    outs = eng.predict_ragged(xs)
+    for x, out in zip(xs, outs):
+        want = serving_golden(cfg, params, x[None])[0]
+        np.testing.assert_array_equal(out, want)
+
+
+# ---------------------------------------------------------------------------
+# Per-key latency accounting: finite, keyed, analytical monotone in R
+# ---------------------------------------------------------------------------
+
+
+def test_benchmark_keyed_finite_and_monotone_in_reuse(gru_tagger):
+    """benchmark() numbers are finite and keyed by schedule hash; the
+    analytical column obeys the paper's trade-off (latency up, DSP down as R
+    grows) — the same monotonicity assertions as the kernel conformance
+    suite, now through the serving surface."""
+    cfg, params = gru_tagger
+    eng = RNNServingEngine(cfg, params, max_batch=8)
+    rows = [eng.benchmark(4, iters=2, schedule=_sched(r, "static", "xla"))
+            for r in (1, 2, 4)]          # divisors of 3h = 60
+    keys = [b["key"] for b in rows]
+    assert len(set(keys)) == 3
+    for b in rows:
+        assert np.isfinite(b["latency_s"]) and b["latency_s"] > 0
+        assert np.isfinite(b["throughput_eps"])
+    lat = [b["latency_cycles"] for b in rows]
+    dsp = [b["dsp"] for b in rows]
+    assert all(a < b for a, b in zip(lat, lat[1:])), lat
+    assert all(a > b for a, b in zip(dsp, dsp[1:])), dsp
+
+
+def test_serve_report_analytical_monotone_in_reuse(gru_tagger, rng):
+    cfg, params = gru_tagger
+    eng = RNNServingEngine(cfg, params, max_batch=2)
+    scheds = [_sched(r, "static", "xla") for r in (1, 2, 4)]
+    for s in scheds:
+        for _ in range(2):
+            eng.submit(rng.randn(20, 6).astype(np.float32), schedule=s)
+    eng.flush(force=True)
+    report = eng.serve_report()
+    rows = [report[schedule_key(s)] for s in scheds]
+    for row in rows:
+        m = row["measured"]
+        assert m["served"] == 2 and m["batches"] == 1
+        assert all(np.isfinite(v) for v in m.values())
+        assert all(np.isfinite(v) for v in row["analytical"].values()
+                   if not isinstance(v, str))
+    lat = [r["analytical"]["latency_cycles"] for r in rows]
+    dsp = [r["analytical"]["dsp"] for r in rows]
+    assert all(a < b for a, b in zip(lat, lat[1:])), lat
+    assert all(a > b for a, b in zip(dsp, dsp[1:])), dsp
