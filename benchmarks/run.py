@@ -12,6 +12,12 @@
 ``--smoke`` is the CI fail-fast path: import every bench module (catching
 import-time API drift), then run a minimal KernelSchedule conformance sweep;
 exits non-zero on ANY failure instead of swallowing it.
+``--json [PATH]`` writes BENCH_rnn_kernels.json — the persistent
+hoisted-vs-in-loop perf-regression record (per-schedule wall clock + the
+analytical estimate of the same schedule object); wired into
+scripts/check.sh so the perf trajectory is tracked every run.  Exits
+non-zero if the hoisted acceptance speedup (>= 1.3x on the flavor-tagging
+fin~h LSTM) regresses.
 """
 
 import argparse
@@ -53,12 +59,24 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="import benches + minimal schedule sweep, fail fast")
+    ap.add_argument("--json", nargs="?", const="BENCH_rnn_kernels.json",
+                    default=None, metavar="PATH",
+                    help="write the hoisted-vs-in-loop perf record "
+                         "(BENCH_rnn_kernels.json) and exit")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (e.g. roofline,kernels)")
     args, _ = ap.parse_known_args()
 
     if args.smoke:
         sys.exit(smoke())
+
+    if args.json is not None:
+        from benchmarks import bench_kernels
+        doc = bench_kernels.write_json(args.json, full=args.full)
+        acc = doc["acceptance"]
+        print(f"json/acceptance,{acc['speedup'] * 1e6:.0f},"
+              f"speedup={acc['speedup']:.2f}x|passed={acc['passed']}")
+        sys.exit(0 if acc["passed"] else 1)
 
     from benchmarks import (bench_kernels, bench_latency_resources,
                             bench_quantization, bench_roofline,

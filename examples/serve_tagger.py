@@ -26,14 +26,17 @@ from repro.data import flavor_tagging_dataset
 from repro.kernels.schedule import KernelSchedule
 from repro.serving import RNNServingEngine, format_serve_report
 
-# three tenants on one engine: the trigger design point (fully parallel,
-# lowest latency), a resource-saving R=4 static design, and the
-# high-throughput non-static pipeline — paper Fig. 1 as live traffic
+# four tenants on one engine: the trigger design point (fully parallel,
+# lowest latency), a resource-saving R=4 static design, the non-static
+# block chain, and the hoisted pipelined NONSTATIC design (II = 1) —
+# paper Fig. 1 as live traffic
 TENANT_SCHEDULES = (
     KernelSchedule(reuse_factor=1, mode="static", backend="xla"),
     KernelSchedule(reuse_factor=4, mode="static", block_batch=8,
                    backend="pallas_interpret"),
     KernelSchedule(reuse_factor=2, mode="nonstatic", block_batch=8,
+                   backend="pallas_interpret"),
+    KernelSchedule(reuse_factor=4, mode="pipeline", ii=1, block_batch=8,
                    backend="pallas_interpret"),
 )
 

@@ -4,7 +4,9 @@
 #   1. pytest --collect-only  — catches JAX API drift at import time (the
 #      AxisType / TPUCompilerParams class of breakage) in seconds
 #   2. benchmarks/run.py --smoke — bench imports + minimal schedule sweep
-#   3. tier-1: pytest -x -q   — the full suite, first failure stops
+#   3. benchmarks/run.py --json — hoisted-vs-in-loop perf record
+#      (BENCH_rnn_kernels.json); fails if the acceptance speedup regresses
+#   4. tier-1: pytest -x -q   — the full suite, first failure stops
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -14,6 +16,9 @@ python -m pytest -q --collect-only >/dev/null
 
 echo "== benchmark smoke =="
 python benchmarks/run.py --smoke
+
+echo "== perf record (BENCH_rnn_kernels.json) =="
+python benchmarks/run.py --json
 
 echo "== tier-1 tests =="
 python -m pytest -x -q

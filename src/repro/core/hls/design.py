@@ -10,6 +10,9 @@ The model encodes hls4ml's documented scaling laws:
                       input width (18b) is exceeded, then doubles  (Figs 3)
   * FF/LUT          ~ W x mults / R (+ base)  — linear in precision (Figs 4-5)
   * GRU : LSTM      = 3 : 4 in everything matmul-driven           (Sec. 5.2)
+  * hoisted input   = kernel-GEMM mults leave the (replicated) sequential
+                      blocks and come back once as a shared pipelined front
+                      stage; pipeline mode II = the schedule's ii target
 
 Pipeline constants c_pipe and the (constant-in-R) max-latency offsets are
 calibrated per benchmark against Tables 2-4; benchmarks/bench_latency_
@@ -55,10 +58,16 @@ class RNNDesignPoint:
     fp: FixedPointConfig = field(default_factory=FixedPointConfig)
     reuse_kernel: int = 1
     reuse_recurrent: int = 1
-    mode: str = "static"               # static | nonstatic
+    mode: str = "static"               # static | nonstatic | pipeline
     strategy: str = "resource"         # latency | resource
     part: str = "xcku115"
     clock_mhz: float = 200.0
+    # hoisted input projection: the kernel (xW) GEMM runs as one shared
+    # fully-pipelined front stage instead of inside every sequential block
+    hoist_input: bool = False
+    hoist_reuse: int = 1               # reuse of the hoisted front GEMM
+    ii: int = 0                        # pipeline mode: target II in cycles
+                                       # (0 = one block's reuse passes)
 
 
 @dataclass(frozen=True)
@@ -109,11 +118,18 @@ def estimate_design(pt: RNNDesignPoint) -> HLSDesign:
     else:
         per_step = pt.reuse_kernel + c_pipe
     rnn_latency = seq * per_step
+    if pt.hoist_input:
+        # the hoisted xW GEMM is one extra pipelined front-stage pass
+        rnn_latency += max(pt.hoist_reuse, 1) + c_pipe
     latency_min = rnn_latency
     latency_max = rnn_latency + max_off
 
     if pt.mode == "static":
         ii = rnn_latency
+    elif pt.mode == "pipeline":
+        # hoisted blocks carry only the hU tiles: a new inference enters at
+        # the explicit II target (default: one block's reuse passes)
+        ii = max(pt.ii or pt.reuse_kernel, 1)
     else:
         # one block per timestep, state flows block->block: a new inference
         # enters once the first block frees up
@@ -124,7 +140,11 @@ def estimate_design(pt: RNNDesignPoint) -> HLSDesign:
     # --- resources ----------------------------------------------------------
     rk = 1 if pt.strategy == "latency" else pt.reuse_kernel
     rr = 1 if pt.strategy == "latency" else pt.reuse_recurrent
-    ops_parallel = mk / rk + mr / rr + mh / max(rk, 1)
+    # hoisting removes the kernel-GEMM mults from the (per-block, possibly
+    # seq_len-replicated) sequential datapath; they come back once below as
+    # a shared front stage
+    mk_block = 0.0 if pt.hoist_input else mk / rk
+    ops_parallel = mk_block + mr / rr + mh / max(rk, 1)
     if W >= 12:
         # multiplications map to DSP48s; packing doubles above 18b inputs
         dsp_one = ops_parallel * mults_per_dsp(W)
@@ -141,15 +161,30 @@ def estimate_design(pt: RNNDesignPoint) -> HLSDesign:
         + 2.0 * W * rnn.hidden                      # pipeline regs
     lut_one = 0.35 * W * ops_parallel + lut_mult + reuse_mux \
         + 25.0 * rnn.hidden * W                     # activations (LUT tables)
-    # BRAM: resource strategy keeps weights in BRAM
-    n_weights = mk + mr + mh
+    # BRAM: resource strategy keeps weights in BRAM (hoisted kernel weights
+    # live in the shared front stage, not in every replicated block)
+    n_weights = (0 if pt.hoist_input else mk) + mr + mh
     bram_one = (n_weights * W) / 18432.0 if pt.strategy == "resource" else 0.0
 
-    mult = seq if pt.mode == "nonstatic" else 1
+    mult = seq if pt.mode in ("nonstatic", "pipeline") else 1
     dsp = int(dsp_one * mult)
     ff = int(ff_one * mult)
     lut = int(lut_one * mult)
     bram = int(bram_one * mult)
+
+    if pt.hoist_input:
+        # shared hoisted front GEMM: mk mults at hoist_reuse, counted ONCE
+        # (never replicated across the seq_len blocks)
+        hr = max(pt.hoist_reuse, 1)
+        hoist_ops = mk / hr
+        if W >= 12:
+            dsp += int(hoist_ops * mults_per_dsp(W))
+        else:
+            lut += int(0.55 * W * hoist_ops)
+        ff += int(0.6 * W * hoist_ops)
+        lut += int(0.35 * W * hoist_ops)
+        if pt.strategy == "resource":
+            bram += int((mk * W) / 18432.0)
 
     part = FPGA_PARTS[pt.part]
     # paper Sec 5.2: Vivado synthesis reduces HLS LUT estimates by 20-65%
@@ -184,11 +219,15 @@ def design_point_for_schedule(cfg: ModelConfig, schedule: KernelSchedule,
     assert cfg.rnn is not None
     g = 4 if cfg.rnn.cell == "lstm" else 3
     r_eff = schedule.effective_reuse(g * cfg.rnn.hidden)
+    import math as _m
     return RNNDesignPoint(
         cfg, fp if fp is not None else FixedPointConfig(),
         reuse_kernel=r_eff,
         reuse_recurrent=r_eff,
-        mode=schedule.mode, **kw)
+        mode=schedule.mode,
+        hoist_input=schedule.hoist_input,
+        hoist_reuse=_m.gcd(schedule.hoist_reuse, g * cfg.rnn.hidden),
+        ii=schedule.ii, **kw)
 
 
 def estimate_design_for_schedule(cfg: ModelConfig, schedule: KernelSchedule,

@@ -9,6 +9,7 @@ numbers describe the weight tile that schedule actually keeps live.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 from repro.kernels.schedule import KernelSchedule
@@ -59,11 +60,23 @@ _C_PIPE = 4
 class ScheduleEstimate:
     """What one (cell, schedule) point costs, in paper units.
 
-    latency_cycles  end-to-end cycles for ONE inference — grows with R
-    ii_cycles       cycles before the next inference can enter
+    latency_cycles  end-to-end cycles for ONE inference — grows with R.
+                    The recurrence chain seq_len x R is irreducible (h_t
+                    depends on h_{t-1}); hoisting adds the front-stage GEMM
+                    cycles but halves the per-step working set, and
+                    pipeline mode keeps this chain while dropping II.
+    ii_cycles       cycles before the next inference can enter — the
+                    II-based throughput axis: seq_len x R (static), one
+                    block (nonstatic), or the schedule's explicit ``ii``
+                    target (pipeline: slimmed hoisted blocks free up after
+                    their hU tiles)
     dsp             parallel multipliers live at once (x seq_len blocks for
-                    non-static) — shrinks with R
-    bram_18k        weight storage (non-static replicates per block)
+                    non-static/pipeline) — shrinks with R, and with
+                    hoisting the replicated per-block mults drop from
+                    (fin+h)*G*h to h*G*h (the shared hoist GEMM is counted
+                    once)
+    bram_18k        weight storage (non-static replicates per block; the
+                    hoisted input weights are stored once)
     vmem_bytes      TPU analogue: live weight tile + scratch per kernel step
     """
 
@@ -95,10 +108,16 @@ class ScheduleEstimate:
         }
 
 
-def gate_mults(cell: str, input_size: int, hidden: int) -> int:
-    """Multiplications of one recurrent step (kernel + recurrent matmul)."""
+def gate_mults(cell: str, input_size: int, hidden: int, *,
+               hoisted: bool = False) -> int:
+    """Multiplications of one recurrent step (kernel + recurrent matmul).
+
+    ``hoisted=True`` counts only the recurrent (hU) half — the sequential
+    working set once the input projection leaves the scan.
+    """
     g = 4 if cell == "lstm" else 3
-    return (input_size + hidden) * g * hidden
+    fan_in = hidden if hoisted else input_size + hidden
+    return fan_in * g * hidden
 
 
 def estimate_schedule(schedule: KernelSchedule, rnn, fp=None
@@ -108,6 +127,13 @@ def estimate_schedule(schedule: KernelSchedule, rnn, fp=None
     ``rnn`` is an ``RNNConfig``; ``fp`` an optional ``FixedPointConfig``
     (defaults to the paper's ap_fixed<16,6>).  Monotone by construction:
     latency_cycles rises and dsp falls as reuse_factor grows.
+
+    II-based pricing of the hoisted/pipelined variants: the hoisted input
+    GEMM is a shared fully-pipelined front stage (its cycles add once to
+    latency; its multipliers/weights are NOT replicated per block), the
+    sequential blocks carry only hU, and pipeline mode's II is the
+    schedule's explicit ``ii`` target — exactly the structure the kernels
+    in ops.py execute.
     """
     total_bits = fp.total_bits if fp is not None else 16
     g = 4 if rnn.cell == "lstm" else 3
@@ -115,26 +141,50 @@ def estimate_schedule(schedule: KernelSchedule, rnn, fp=None
     # dim (ops.py), so the estimate must use the same effective R or it
     # would describe a schedule that never runs
     R = schedule.effective_reuse(g * rnn.hidden)
-    mults = gate_mults(rnn.cell, rnn.input_size, rnn.hidden)
+    hoist = schedule.hoist_input
+    mults_seq = gate_mults(rnn.cell, rnn.input_size, rnn.hidden,
+                           hoisted=hoist)
+    mults_in = rnn.input_size * g * rnn.hidden            # the hoisted GEMM
+    hr = math.gcd(schedule.hoist_reuse, g * rnn.hidden)   # its column tiles
 
     # latency/II in kernel sequential steps (exactly the Pallas grid length
-    # (B/bt, T, R_eff)), each step costing a pipeline constant
-    latency = rnn.seq_len * R + _C_PIPE
-    ii = (rnn.seq_len * R if schedule.mode == "static"
-          else R + _C_PIPE)
+    # (B/bt, T, R_eff)), each step costing a pipeline constant.  The
+    # recurrence chain seq_len x R is irreducible; the hoist stage adds its
+    # own pipelined pass (hr tiles) up front.
+    latency = rnn.seq_len * R + _C_PIPE + (hr + _C_PIPE if hoist else 0)
+    if schedule.mode == "static":
+        ii = rnn.seq_len * R
+    elif schedule.mode == "pipeline":
+        # hoisted blocks free up after their R hU-tiles, so the next
+        # inference enters at the schedule's ii target
+        ii = schedule.initiation_interval(rnn.seq_len)
+    else:
+        ii = R + _C_PIPE
 
-    # parallel multipliers per block = mults / R; non-static has seq_len
-    # blocks in silicon (Fig. 6 resource blowup)
-    blocks = rnn.seq_len if schedule.mode == "nonstatic" else 1
-    dsp = int(-(-mults // R) * mults_per_dsp(total_bits)) * blocks
-    weight_bits = mults * total_bits
+    # parallel multipliers per block = sequential mults / R; non-static and
+    # pipeline have seq_len blocks in silicon (Fig. 6 resource blowup).
+    # The hoist GEMM's multipliers are shared across blocks — added once.
+    blocks = rnn.seq_len if schedule.mode in ("nonstatic", "pipeline") else 1
+    pack = mults_per_dsp(total_bits)
+    dsp = int(-(-mults_seq // R) * pack) * blocks
+    weight_bits = mults_seq * total_bits
     bram = int(-(-weight_bits // 18432)) * blocks
+    if hoist:
+        dsp += int(-(-mults_in // hr) * pack)
+        bram += int(-(-(mults_in * total_bits) // 18432))
 
-    # TPU: live weight column tile + gate scratch + state, f32
+    # TPU: live weight column tile + gate scratch + state, f32; hoisting
+    # swaps the (fin+h) x gw tile for h x gw plus the streamed zx tile.
+    # The pipeline kernel unrolls its R passes in-block with the full U
+    # resident (the replicated-resources design it executes).
     gw = (g * rnn.hidden) // R
     bt = schedule.block_batch
-    vmem = 4 * ((rnn.input_size + rnn.hidden) * gw        # weight tile
-                + bt * g * rnn.hidden                     # z scratch
+    fan_in = rnn.hidden if hoist else rnn.input_size + rnn.hidden
+    weight_vmem = (rnn.hidden * g * rnn.hidden
+                   if schedule.mode == "pipeline" else fan_in * gw)
+    vmem = 4 * (weight_vmem
+                + bt * g * rnn.hidden                     # z/zh scratch
+                + (bt * g * rnn.hidden if hoist else 0)   # zx stream tile
                 + 2 * bt * rnn.hidden)                    # h, c state
     return ScheduleEstimate(schedule=schedule, latency_cycles=latency,
                             ii_cycles=ii, dsp=dsp, bram_18k=bram,

@@ -70,18 +70,21 @@ def tiled_matmul(x: jax.Array, w: jax.Array, reuse: int = 1) -> jax.Array:
 
 def lstm_cell(x_t: jax.Array, state: Tuple[jax.Array, jax.Array],
               W: jax.Array, U: jax.Array, b: jax.Array, *, reuse: int = 1,
-              matmul=None):
+              matmul=None, zx=None):
     """One LSTM step.  x_t: [b, in]; state = (h, c): [b, h] each.
 
     ``matmul`` swaps the gate matmul implementation (the non-static Pallas
     path injects its column-serialized kernel here, so the gate equations
     live in exactly one place); default is ``tiled_matmul`` at ``reuse``.
+    ``zx`` injects a PRECOMPUTED input projection x_t @ W (no bias) — the
+    hoisted-input schedule: only the hU product remains in the step, and the
+    association (xW + hU) + b is unchanged, so hoisted == in-loop bitwise.
     """
     mm = matmul if matmul is not None else (
         lambda a, w: tiled_matmul(a, w, reuse))
     h_prev, c_prev = state
     hdim = h_prev.shape[-1]
-    z = mm(x_t, W) + mm(h_prev, U) + b
+    z = (zx if zx is not None else mm(x_t, W)) + mm(h_prev, U) + b
     i, f, g, o = (z[..., :hdim], z[..., hdim:2 * hdim],
                   z[..., 2 * hdim:3 * hdim], z[..., 3 * hdim:])
     i = jax.nn.sigmoid(i)
@@ -95,16 +98,17 @@ def lstm_cell(x_t: jax.Array, state: Tuple[jax.Array, jax.Array],
 
 def gru_cell(x_t: jax.Array, state: jax.Array,
              W: jax.Array, U: jax.Array, b: jax.Array, *, reuse: int = 1,
-             matmul=None):
+             matmul=None, zx=None):
     """One GRU step (reset_after).  x_t: [b, in]; state h: [b, h];
-    b: [2, 3h] = (input bias; recurrent bias).  ``matmul`` as in lstm_cell.
+    b: [2, 3h] = (input bias; recurrent bias).  ``matmul`` and ``zx``
+    (precomputed x_t @ W, no bias) as in lstm_cell.
     """
     mm = matmul if matmul is not None else (
         lambda a, w: tiled_matmul(a, w, reuse))
     h_prev = state
     hdim = h_prev.shape[-1]
     b_in, b_rec = b[0], b[1]
-    zx = mm(x_t, W) + b_in                           # [b, 3h]
+    zx = (zx if zx is not None else mm(x_t, W)) + b_in   # [b, 3h]
     zh = mm(h_prev, U) + b_rec
     zxz, zxr, zxh = jnp.split(zx, 3, axis=-1)
     zhz, zhr, zhh = jnp.split(zh, 3, axis=-1)

@@ -14,6 +14,15 @@ nonstatic  — one block per timestep, state flows block->block (Fig. 1 right).
              multi-device version (`core.rnn.pipeline`) maps timesteps to
              devices along a mesh axis with collective_permute — a new
              inference enters the pipe every stage latency: II = 1 block.
+
+pipeline   — non-static with the input projection HOISTED out of the blocks
+             (schedule.hoist_input, forced): xW for all T runs as one
+             batched matmul up front, each unrolled block carries only hU.
+             With ``schedule.hoist_input`` the float XLA paths (static scan
+             and unrolled) also precompute zx = xs @ W once — the same
+             restructuring the Pallas kernels execute.  Quantized (fp)
+             paths never hoist: splitting z = q(xW + hU + b) would move the
+             quantization points of the hls4ml datapath being emulated.
 """
 
 from __future__ import annotations
@@ -107,15 +116,37 @@ def rnn_layer(
             return kops.lstm_scan(xs, W, U, b, schedule=schedule)
         return kops.gru_scan(xs, W, U, b, schedule=schedule)
 
+    # hoisted input projection on the float XLA path: one batched
+    # [b, T, fin] @ [fin, G*h] matmul up front, cells consume zx slices —
+    # same dtype and association (xW + hU) + b as the in-loop cells'
+    # per-step x_t @ W, so the carry dtype and numerics are unchanged.
+    # Quantized paths keep the in-loop order (hoisting would move the q()
+    # points).
+    zx_all = None
+    if schedule.hoist_input and fp is None:
+        zx_all = jnp.einsum("btf,fg->btg", xs, W)
+
     if mode == "static":
+        if zx_all is not None:
+            # the cell ignores x_t when zx is injected: stream zx alone
+            def step_hoisted(state, zx_t):
+                _, new_state = cell(zx_t, state, W, U, b, zx=zx_t)
+                return new_state, ()
+            final, _ = jax.lax.scan(step_hoisted, s0,
+                                    jnp.moveaxis(zx_all, 1, 0))
+            return final[0] if rnn.cell == "lstm" else final
+
         def step(state, x_t):
             h_t, new_state = cell(x_t, state, W, U, b)
             return new_state, ()
         final, _ = jax.lax.scan(step, s0, jnp.moveaxis(xs, 1, 0))
         return final[0] if rnn.cell == "lstm" else final
 
-    # nonstatic: fully unrolled — one "block" per timestep
+    # nonstatic / pipeline: fully unrolled — one "block" per timestep
     state = s0
     for t in range(xs.shape[1]):
-        _, state = cell(xs[:, t], state, W, U, b)
+        if zx_all is not None:
+            _, state = cell(zx_all[:, t], state, W, U, b, zx=zx_all[:, t])
+        else:
+            _, state = cell(xs[:, t], state, W, U, b)
     return state[0] if rnn.cell == "lstm" else state

@@ -33,8 +33,17 @@ def pipelined_rnn(
     W: jax.Array, U: jax.Array, b: jax.Array,
     mesh: Mesh,
     axis: str = "model",
+    hoist_input: bool = False,
 ) -> jax.Array:
-    """Returns final hidden state [B, hidden]; T must divide the axis size."""
+    """Returns final hidden state [B, hidden]; T must divide the axis size.
+
+    ``hoist_input`` is the multi-device face of the hoisted-projection
+    schedule (KernelSchedule.hoist_input / pipeline mode): zx = xs @ W for
+    ALL timesteps is one batched matmul BEFORE the stage pipeline, so each
+    stage's blocks carry only the hU recurrence — the per-stage (and thus
+    per-beat) latency drops, which is exactly what shrinks the pipeline's
+    initiation interval.
+    """
     B, T, F = xs.shape
     n_stages = mesh.shape[axis]
     assert T % n_stages == 0, f"T={T} % stages={n_stages}"
@@ -43,8 +52,16 @@ def pipelined_rnn(
     cell = lstm_cell if rnn.cell == "lstm" else gru_cell
     n_state = 2 if rnn.cell == "lstm" else 1
 
+    if hoist_input:
+        # the hoist stage: stream slices of zx (not xs) through the pipe;
+        # cells consume the precomputed projection via their zx= injection
+        xs = jnp.einsum("btf,fg->btg", xs, W,
+                        preferred_element_type=jnp.float32).astype(xs.dtype)
+        F = xs.shape[-1]
+
     def stage_fn(xs_local, W_, U_, b_):
-        # xs_local: [B, spp, F] — this device's timestep slice
+        # xs_local: [B, spp, F] — this device's timestep slice (zx when
+        # hoisted: F = G*H and the x-side matmul is skipped in-cell)
         k = jax.lax.axis_index(axis)
         perm = [(i, i + 1) for i in range(n_stages - 1)]
 
@@ -52,7 +69,8 @@ def pipelined_rnn(
             # x_blk: [1, spp, F]; state tuple of [1, H]
             def step(s, x_t):
                 st = (s[0], s[1]) if n_state == 2 else s[0]
-                _, ns = cell(x_t, st, W_, U_, b_)
+                _, ns = cell(x_t, st, W_, U_, b_,
+                             **({"zx": x_t} if hoist_input else {}))
                 ns = ns if n_state == 2 else (ns,)
                 return (ns[0],) + ((ns[1],) if n_state == 2 else ()), None
             s0 = tuple(state[i] for i in range(n_state))

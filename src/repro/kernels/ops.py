@@ -13,10 +13,27 @@ A schedule carries (reuse_factor, mode, block_batch, backend) and selects:
                             column tiles; non-static mode unrolls one block
                             per timestep, each block built from the
                             column-serialized ``col_matmul`` kernel (paper
-                            Fig. 1 right).
+                            Fig. 1 right); pipeline mode is non-static with
+                            the input projection hoisted (NONSTATIC in paper
+                            terms: slimmed blocks, II = schedule.ii).
+
+Hoisted input projection (``schedule.hoist_input``): of the gate matmul
+z = x W + h U + b only the hU half carries a sequential dependency — xW for
+all T timesteps is embarrassingly parallel, so the hoist stage computes it
+as ONE batched [B*T, fin] @ [fin, G*h] matmul outside the scan (full MXU
+utilization; R-tiled through ``col_matmul`` only when ``hoist_reuse`` > 1)
+and the sequential kernel consumes the precomputed zx.  The hoisted and
+in-loop paths are bit-identical: the pre-activation keeps the association
+(xW + hU) + b, and the conformance suite enforces the bit-match.
 
 The same schedule object drives ``core.hls.resources.estimate_schedule`` so
 software latency/resource numbers describe exactly what executes here.
+
+TPU lane alignment (ROADMAP open item): on ``backend="pallas_tpu"`` the
+per-reuse column tile is a lane-dimension block — Mosaic requires its width
+to be a multiple of 128 (and the batch tile a multiple of 8 sublanes).  The
+dispatch validates this at schedule-application time and raises a clear
+ValueError instead of miscompiling on hardware.
 
 CPU containers run interpret=True; on a real TPU either set
 REPRO_PALLAS_INTERPRET=0 or use backend="pallas_tpu".
@@ -30,16 +47,52 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+import math
+
 from repro.config import FixedPointConfig
 from repro.kernels import ref
 from repro.kernels.fixed_point import fixed_point_pallas
-from repro.kernels.gru_scan import gru_scan_pallas
+from repro.kernels.gru_scan import (gru_scan_hoisted_pallas, gru_scan_pallas,
+                                    gru_scan_pipeline_pallas)
 from repro.kernels.hadamard import hadamard_pallas
-from repro.kernels.lstm_scan import lstm_scan_pallas
+from repro.kernels.lstm_scan import (lstm_scan_hoisted_pallas,
+                                     lstm_scan_pallas,
+                                     lstm_scan_pipeline_pallas)
 from repro.kernels.reuse_matmul import col_matmul_pallas, reuse_matmul_pallas
 from repro.kernels.rglru_scan import rglru_scan_pallas
 from repro.kernels.schedule import KernelSchedule
 from repro.kernels.schedule import _env_interpret as _interpret
+
+#: Mosaic tiling floors for f32 blocks — last dim lanes, second-to-last
+#: sublanes; a column tile off these boundaries miscompiles on hardware
+TPU_LANES = 128
+TPU_SUBLANES = 8
+
+
+def check_tpu_alignment(schedule: KernelSchedule, *, tile_width: int,
+                        block_batch: int, kernel: str) -> None:
+    """Validate Mosaic lane alignment for a real-hardware schedule.
+
+    ROADMAP open item: on ``backend="pallas_tpu"`` the per-reuse column tile
+    of width ``tile_width`` is a lane-dim block and the batch tile spans
+    sublanes.  Interpret/XLA backends have no such constraint, so the check
+    only fires for the hardware backend — raising at schedule-application
+    time with an actionable message instead of miscompiling.
+    """
+    if schedule.backend != "pallas_tpu":
+        return
+    if tile_width % TPU_LANES != 0:
+        raise ValueError(
+            f"{kernel}: pallas_tpu column tile width {tile_width} is not a "
+            f"multiple of {TPU_LANES} lanes (schedule {schedule.key()}). "
+            f"Pick a reuse factor so the per-reuse tile width is "
+            f"128-aligned, or pad the gate dimension, or use "
+            f"backend='pallas_interpret' off-hardware.")
+    if block_batch % TPU_SUBLANES != 0:
+        raise ValueError(
+            f"{kernel}: pallas_tpu batch tile {block_batch} is not a "
+            f"multiple of {TPU_SUBLANES} sublanes (schedule "
+            f"{schedule.key()}). Use a block_batch that is 8-aligned.")
 
 
 def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
@@ -63,7 +116,7 @@ def _resolve(schedule: Optional[KernelSchedule],
 
 
 # ---------------------------------------------------------------------------
-# Non-static building block: per-timestep column-serialized gate matmul
+# Hoisted input-projection stage + per-timestep unrolled blocks
 # ---------------------------------------------------------------------------
 
 
@@ -79,11 +132,68 @@ def _gate_mm(x: jax.Array, w: jax.Array, reuse: int,
     return out[:M]
 
 
-def _cell_nonstatic(cell: str, xs, W, U, b,
-                    schedule: KernelSchedule) -> jax.Array:
+def _hoist_stage(xs: jax.Array, W: jax.Array,
+                 schedule: KernelSchedule) -> jax.Array:
+    """The hoisted input projection: ONE batched [B*T, fin] @ [fin, G*h]
+    matmul outside the sequential scan (f32 accumulate, no bias) — the
+    embarrassingly parallel half of the gate pre-activation, previously
+    recomputed inside every sequential grid cell.
+
+    Fully parallel (one full-MXU pass) unless the schedule asks for R-tiling
+    via ``hoist_reuse``, in which case it runs as sequential column tiles
+    through the same ``col_matmul`` kernel the non-static blocks use.
+    """
+    B, T, fin = xs.shape
+    flat = xs.reshape(B * T, fin)
+    hr = math.gcd(schedule.hoist_reuse, W.shape[-1])
+    if hr > 1:
+        check_tpu_alignment(schedule, tile_width=W.shape[-1] // hr,
+                            block_batch=min(128, max(8, flat.shape[0])),
+                            kernel="hoist_stage")
+        zx = _gate_mm(flat, W, hr, schedule.interpret)
+    else:
+        zx = jnp.dot(flat, W, preferred_element_type=jnp.float32)
+    return zx.reshape(B, T, W.shape[-1])
+
+
+def _cell_pipeline(cell: str, xs, W, U, b,
+                   schedule: KernelSchedule) -> jax.Array:
+    """The fused pipelined-NONSTATIC executor: hoist stage + ONE Pallas
+    kernel whose grid carries only (batch, time) and whose block unrolls
+    the R reuse passes of the hU product in-silicon (Fig. 1 right) — the
+    schedule estimate_schedule prices with blocks = seq_len and
+    II = schedule.ii."""
+    B, T, _ = xs.shape
+    H = U.shape[0]
+    g = 4 if cell == "lstm" else 3
+    re = schedule.effective_reuse(g * H)
+    bt = min(schedule.block_batch, max(8, B))
+    check_tpu_alignment(schedule, tile_width=g * H // re, block_batch=bt,
+                        kernel=f"{cell}_scan")
+    xs_p = _pad_axis(xs, 0, bt)
+    zx = _hoist_stage(xs_p, W, schedule)
+    if cell == "lstm":
+        out = lstm_scan_pipeline_pallas(zx, U, b, block_batch=bt, reuse=re,
+                                        interpret=schedule.interpret,
+                                        out_dtype=xs.dtype)
+    else:
+        out = gru_scan_pipeline_pallas(zx + b[0], U, b[1], block_batch=bt,
+                                       reuse=re,
+                                       interpret=schedule.interpret,
+                                       out_dtype=xs.dtype)
+    return out[:B]
+
+
+def _cell_unrolled(cell: str, xs, W, U, b,
+                   schedule: KernelSchedule) -> jax.Array:
     """One block per timestep (Fig. 1 right): the cell equations come from
     core.rnn.cells with the gate matmul swapped for the column-serialized
-    Pallas kernel — the math lives in exactly one place."""
+    Pallas kernel — the math lives in exactly one place.
+
+    With ``schedule.hoist_input`` the xW projections for ALL timesteps come
+    from the hoist stage and each block computes only its hU tiles — the
+    same restructuring the fused pipeline kernel executes in one call.
+    """
     from repro.core.rnn.cells import gru_cell, initial_state, lstm_cell
 
     B, T, _ = xs.shape
@@ -91,15 +201,29 @@ def _cell_nonstatic(cell: str, xs, W, U, b,
     g = 4 if cell == "lstm" else 3
     re = schedule.effective_reuse(g * H)
     itp = schedule.interpret
+    check_tpu_alignment(schedule, tile_width=g * H // re,
+                        block_batch=min(128, max(8, B)),
+                        kernel=f"{cell}_scan")
 
     def mm(a, w):
         return _gate_mm(a, w, re, itp)
+
+    zx_all = None
+    if schedule.hoist_input:
+        flat = xs.reshape(B * T, -1)
+        hr = math.gcd(schedule.hoist_reuse, g * H)
+        check_tpu_alignment(schedule, tile_width=g * H // hr,
+                            block_batch=min(128, max(8, flat.shape[0])),
+                            kernel="hoist_stage")
+        # same col-serialized kernel as the in-loop blocks -> bit-identical
+        zx_all = _gate_mm(flat, W, max(hr, 1), itp).reshape(B, T, g * H)
 
     state = initial_state(cell, B, H, jnp.float32)
     bf = b.astype(jnp.float32)
     step = lstm_cell if cell == "lstm" else gru_cell
     for t in range(T):
-        _, state = step(xs[:, t], state, W, U, bf, matmul=mm)
+        _, state = step(xs[:, t], state, W, U, bf, matmul=mm,
+                        zx=None if zx_all is None else zx_all[:, t])
     h = state[0] if cell == "lstm" else state
     return h.astype(xs.dtype)
 
@@ -116,14 +240,24 @@ def lstm_scan(xs, W, U, b, *, schedule: Optional[KernelSchedule] = None,
     schedule = _resolve(schedule, block_batch)
     if not schedule.use_pallas:
         return ref.lstm_scan_ref(xs, W, U, b)
+    if schedule.mode == "pipeline":
+        return _cell_pipeline("lstm", xs, W, U, b, schedule)
     if schedule.mode == "nonstatic":
-        return _cell_nonstatic("lstm", xs, W, U, b, schedule)
+        return _cell_unrolled("lstm", xs, W, U, b, schedule)
     B = xs.shape[0]
     bt = min(schedule.block_batch, max(8, B))
+    reuse = schedule.effective_reuse(4 * U.shape[0])
+    check_tpu_alignment(schedule, tile_width=4 * U.shape[0] // reuse,
+                        block_batch=bt, kernel="lstm_scan")
     xs_p = _pad_axis(xs, 0, bt)
-    out = lstm_scan_pallas(xs_p, W, U, b, block_batch=bt,
-                           reuse=schedule.effective_reuse(4 * U.shape[0]),
-                           interpret=schedule.interpret)
+    if schedule.hoist_input:
+        zx = _hoist_stage(xs_p, W, schedule)
+        out = lstm_scan_hoisted_pallas(zx, U, b, block_batch=bt, reuse=reuse,
+                                       interpret=schedule.interpret,
+                                       out_dtype=xs.dtype)
+    else:
+        out = lstm_scan_pallas(xs_p, W, U, b, block_batch=bt, reuse=reuse,
+                               interpret=schedule.interpret)
     return out[:B]
 
 
@@ -133,14 +267,28 @@ def gru_scan(xs, W, U, b, *, schedule: Optional[KernelSchedule] = None,
     schedule = _resolve(schedule, block_batch)
     if not schedule.use_pallas:
         return ref.gru_scan_ref(xs, W, U, b)
+    if schedule.mode == "pipeline":
+        return _cell_pipeline("gru", xs, W, U, b, schedule)
     if schedule.mode == "nonstatic":
-        return _cell_nonstatic("gru", xs, W, U, b, schedule)
+        return _cell_unrolled("gru", xs, W, U, b, schedule)
     B = xs.shape[0]
     bt = min(schedule.block_batch, max(8, B))
+    reuse = schedule.effective_reuse(3 * U.shape[0])
+    check_tpu_alignment(schedule, tile_width=3 * U.shape[0] // reuse,
+                        block_batch=bt, kernel="gru_scan")
     xs_p = _pad_axis(xs, 0, bt)
-    out = gru_scan_pallas(xs_p, W, U, b, block_batch=bt,
-                          reuse=schedule.effective_reuse(3 * U.shape[0]),
-                          interpret=schedule.interpret)
+    if schedule.hoist_input:
+        # GRU keeps input- and recurrent-side pre-activations separate, so
+        # the input bias folds into the hoisted zx (same add order as the
+        # in-loop kernel's dot + b_in)
+        zx = _hoist_stage(xs_p, W, schedule) + b[0]
+        out = gru_scan_hoisted_pallas(zx, U, b[1], block_batch=bt,
+                                      reuse=reuse,
+                                      interpret=schedule.interpret,
+                                      out_dtype=xs.dtype)
+    else:
+        out = gru_scan_pallas(xs_p, W, U, b, block_batch=bt, reuse=reuse,
+                              interpret=schedule.interpret)
     return out[:B]
 
 
@@ -176,12 +324,18 @@ def rglru_scan(a, bx, *, schedule: Optional[KernelSchedule] = None,
 
     Reuse for this matmul-free kernel serializes the width tiles: per
     sequential step one W/R-wide tile of VPU lanes is live.
+
+    ``hoist_input`` is accepted as a no-op: the RG-LRU kernel consumes a
+    PRECOMPUTED gated input bx (the caller's dense gates are the hoist
+    stage), i.e. the kernel is already in hoisted form — only the
+    elementwise a_t * h recurrence is sequential.  Pipeline mode unrolls
+    one block per timestep like nonstatic (slim elementwise blocks).
     """
     schedule = _resolve(schedule, block_batch, default_bb=8)
     B, T, W = a.shape
     if not schedule.use_pallas:
         return ref.rglru_scan_ref(a, bx)
-    if schedule.mode == "nonstatic":
+    if schedule.mode in ("nonstatic", "pipeline"):
         h = jnp.zeros((B, W), jnp.float32)
         hs = []
         for t in range(T):                 # one block per timestep
@@ -191,6 +345,8 @@ def rglru_scan(a, bx, *, schedule: Optional[KernelSchedule] = None,
     reuse = schedule.reuse_factor
     bb = min(schedule.block_batch, max(1, B))
     bw = min(block_width, -(-W // reuse))  # ceil: R sequential width tiles
+    check_tpu_alignment(schedule, tile_width=bw, block_batch=bb,
+                        kernel="rglru_scan")
     a_p = _pad_axis(_pad_axis(a, 0, bb), 2, bw)
     b_p = _pad_axis(_pad_axis(bx, 0, bb), 2, bw)
     out = rglru_scan_pallas(a_p, b_p, block_batch=bb, block_width=bw,
@@ -209,6 +365,9 @@ def reuse_matmul(x, w, *, reuse: int = 1, block_m: int = 128,
             return ref.reuse_matmul_ref(x, w)
         reuse = schedule.effective_reuse(x.shape[1])
         interpret = schedule.interpret
+        check_tpu_alignment(schedule, tile_width=x.shape[1] // reuse,
+                            block_batch=min(block_m, max(8, x.shape[0])),
+                            kernel="reuse_matmul")
     else:
         interpret = _interpret()
     M, K = x.shape

@@ -5,6 +5,14 @@ a_t = exp(log_a_t) precomputed by the caller (gates are dense matmuls that
 XLA already fuses well; the kernel owns the sequential elementwise
 recurrence, which is the part XLA serializes poorly at long T).
 
+This kernel is ALREADY in hoisted form in the sense of
+``KernelSchedule.hoist_input``: its entire input side (the gated input bx
+and the decay a) is precomputed by the caller — the dense gate matmuls are
+the hoist stage — and only the elementwise a_t * h recurrence is
+sequential.  The scheduling layer (ops.py) therefore accepts
+``hoist_input`` as a no-op for rglru and runs pipeline mode as the unrolled
+per-timestep elementwise chain.
+
 Grid: (B/bt, W/wt, T) — batch and width tiles parallel, time sequential and
 INNERMOST (fastest-varying) so the state scratch persists across t for each
 (batch, width) tile.  State scratch: [bt, wt] f32.

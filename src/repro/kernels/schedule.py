@@ -29,7 +29,7 @@ import os
 from dataclasses import dataclass, replace
 from typing import Iterable, Tuple
 
-MODES = ("static", "nonstatic")
+MODES = ("static", "nonstatic", "pipeline")
 BACKENDS = ("auto", "xla", "pallas_interpret", "pallas_tpu")
 
 #: queue key for requests that carry no schedule at all
@@ -51,17 +51,42 @@ class KernelSchedule:
                   sequence (paper Fig. 1 left, II = seq_len x R).
                   "nonstatic" — one block per timestep, state flows
                   block-to-block (Fig. 1 right, II = one block latency).
+                  "pipeline" — NONSTATIC with the input projection hoisted
+                  out of every block (implies ``hoist_input``): the
+                  per-timestep blocks carry only the hU recurrence, so the
+                  cross-inference initiation interval can shrink to ``ii``
+                  sequential steps (paper Table 5's II 315 -> 1, with the
+                  xW GEMM as a separate fully-pipelined front stage).
     block_batch   batch tile per kernel invocation (TPU sublane analogue of
                   the paper's "independent inferences in flight").
     backend       "auto" (Pallas; interpret controlled by
                   REPRO_PALLAS_INTERPRET), "pallas_interpret",
                   "pallas_tpu", or "xla" (the lax.scan golden reference).
+    hoist_input   compute the input projection xW for ALL timesteps as ONE
+                  batched [B*T, fin] @ [fin, G*h] matmul outside the
+                  sequential scan (only hU carries the recurrence): the
+                  sequential working set drops from (fin+h) x G*h/R to
+                  h x G*h/R and the per-step FLOPs roughly halve for
+                  fin ~ h.  Bit-identical to the in-loop path (same
+                  association order; conformance-enforced).
+    ii            pipeline mode only: target initiation interval in
+                  sequential steps before the NEXT inference enters the
+                  block chain (0 = auto = reuse_factor, one block's column
+                  tiles).  Per-inference latency keeps the irreducible
+                  seq_len x R recurrence chain; ii is the throughput axis.
+    hoist_reuse   reuse factor of the hoisted input GEMM itself (1 = fully
+                  parallel, full MXU utilization; >1 runs it as R-tiled
+                  sequential column passes — trades the front stage's
+                  resources the same way reuse_factor trades the scan's).
     """
 
     reuse_factor: int = 1
     mode: str = "static"
     block_batch: int = 128
     backend: str = "auto"
+    hoist_input: bool = False
+    ii: int = 0
+    hoist_reuse: int = 1
 
     def __post_init__(self):
         if self.reuse_factor < 1:
@@ -72,6 +97,25 @@ class KernelSchedule:
             raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
         if self.block_batch < 1:
             raise ValueError(f"block_batch must be >= 1: {self.block_batch}")
+        if self.ii < 0:
+            raise ValueError(f"ii must be >= 0: {self.ii}")
+        if self.hoist_reuse < 1:
+            raise ValueError(f"hoist_reuse must be >= 1: {self.hoist_reuse}")
+        if self.mode == "pipeline":
+            # pipelining the block chain REQUIRES the hoist: only once the
+            # xW GEMM leaves the blocks is a block slim enough to free up
+            # after its hU tiles, letting the next inference enter at ii
+            object.__setattr__(self, "hoist_input", True)
+        elif self.ii:
+            # ii is a pipeline-mode knob; normalize it away on other modes
+            # (instead of raising) so replace(mode=...) — the engine's and
+            # rnn_layer's mode-override path — stays total, and the
+            # normalized schedule keys/hashes equal the ii-free one
+            object.__setattr__(self, "ii", 0)
+        if self.hoist_reuse > 1 and not self.hoist_input:
+            raise ValueError(
+                "hoist_reuse > 1 without hoist_input: there is no hoisted "
+                "input GEMM to tile")
 
     # -- backend resolution -------------------------------------------------
 
@@ -102,9 +146,11 @@ class KernelSchedule:
     def sequential_steps(self, seq_len: int) -> int:
         """Sequential kernel grid length — the software latency axis.
 
-        Static: one block serializes time x reuse.  Non-static: the chain of
-        seq_len blocks still costs seq_len x R end-to-end for one inference
-        (each block serializes its R column tiles).
+        Static: one block serializes time x reuse.  Non-static/pipeline: the
+        chain of seq_len blocks still costs seq_len x R end-to-end for one
+        inference (each block serializes its R column tiles).  Hoisting does
+        NOT change the step count — it shrinks each step's working set and
+        FLOPs (the xW half leaves the recurrence).
         """
         return seq_len * self.reuse_factor
 
@@ -113,10 +159,14 @@ class KernelSchedule:
 
         Static re-uses the single block for the whole sequence; non-static
         frees its first block after one block latency (II 315 -> 1 in
-        Table 5 terms, scaled by R).
+        Table 5 terms, scaled by R); pipeline reaches the explicit ``ii``
+        target (default one block's R tiles) because the hoisted blocks
+        carry only the hU tiles.
         """
         if self.mode == "static":
             return seq_len * self.reuse_factor
+        if self.mode == "pipeline":
+            return max(self.ii or self.reuse_factor, 1)
         return self.reuse_factor
 
     # -- stable identity ----------------------------------------------------
@@ -128,9 +178,20 @@ class KernelSchedule:
         jit trace), so the serving layer batches them together; the string is
         stable across processes (unlike ``hash()``) and shows up verbatim in
         latency reports and benchmark CSV rows.
+
+        Non-default axes append as suffix tokens (``-hoist``, ``-hrN``,
+        ``-iiN``) so default schedules keep their PR 2-era keys and old
+        parsers that read only the first four tokens stay correct.
         """
-        return (f"{self.mode}-R{self.reuse_factor}"
+        base = (f"{self.mode}-R{self.reuse_factor}"
                 f"-bb{self.block_batch}-{self.backend}")
+        if self.hoist_input:
+            base += "-hoist"
+        if self.hoist_reuse != 1:
+            base += f"-hr{self.hoist_reuse}"
+        if self.ii:
+            base += f"-ii{self.ii}"
+        return base
 
     # -- sweeping -----------------------------------------------------------
 
@@ -141,10 +202,34 @@ class KernelSchedule:
     def from_key(cls, key: str) -> "KernelSchedule":
         """Inverse of :meth:`key`; also accepts the fp-suffixed form
         ``schedule_key`` produces (the ``-apW_I_rnd_sat`` tail is ignored).
-        Round-trips every valid schedule."""
-        mode, r, bb, backend = key.split("-")[:4]
-        return cls(reuse_factor=int(r[1:]), mode=mode,
-                   block_batch=int(bb[2:]), backend=backend)
+        Round-trips every valid schedule.
+
+        Forward/backward compatible by construction: the first four tokens
+        are positional and REQUIRED (a malformed core raises ValueError);
+        every later token is an optional axis — known ones (``hoist``,
+        ``hrN``, ``iiN``) parse, unknown ones (axes from a future PR, the
+        fp tail) are ignored, so PR 2-era keys still parse after new axes
+        land and vice versa.
+        """
+        parts = key.split("-")
+        if len(parts) < 4:
+            raise ValueError(f"not a schedule key: {key!r}")
+        mode, r, bb, backend = parts[:4]
+        if not (r.startswith("R") and r[1:].isdigit()
+                and bb.startswith("bb") and bb[2:].isdigit()):
+            raise ValueError(f"not a schedule key: {key!r}")
+        kw = dict(reuse_factor=int(r[1:]), mode=mode,
+                  block_batch=int(bb[2:]), backend=backend)
+        for tok in parts[4:]:
+            if tok == "hoist":
+                kw["hoist_input"] = True
+            elif tok.startswith("hr") and tok[2:].isdigit():
+                kw["hoist_reuse"] = int(tok[2:])
+            elif tok.startswith("ii") and tok[2:].isdigit():
+                kw["ii"] = int(tok[2:])
+            # anything else: an axis this build does not know (or the
+            # schedule_key fp tail) — ignore, do not crash the parser
+        return cls(**kw)
 
     @classmethod
     def sweep(cls, reuse_factors: Iterable[int] = (1, 2, 4, 8),

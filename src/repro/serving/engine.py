@@ -42,8 +42,11 @@ RAGGED_POLICIES = ("bucket", "mask")
 class RNNServingEngine:
     cfg: ModelConfig
     params: Dict
-    mode: Optional[str] = None            # static | nonstatic | None: from
-                                          # the schedule / config
+    mode: Optional[str] = None            # static | nonstatic | pipeline |
+                                          # None: from the schedule / config
+                                          # (pipeline implies the hoisted
+                                          # input projection; its queue key
+                                          # carries the -hoist/-ii tokens)
     impl: str = "xla"                     # xla | pallas
     fp: Optional[FixedPointConfig] = None
     max_batch: int = 256

@@ -89,6 +89,42 @@ def test_schedule_key_roundtrip():
     assert schedule_key(s, fp) != schedule_key(s, None)
 
 
+def test_hoisted_pipeline_serving_roundtrip(gru_tagger, rng):
+    """The new schedule axes (hoist_input / pipeline / ii) ride the serving
+    path end to end: distinct co-batching keys, from_key round-trip of the
+    fp-suffixed keys, submit/flush bit-matches direct predict, and
+    serve_report prices the SAME schedule object."""
+    cfg, params = gru_tagger
+    eng = RNNServingEngine(cfg, params, max_batch=4)
+    scheds = [
+        _sched(2, "static", "pallas_interpret").replace(hoist_input=True),
+        _sched(4, "pipeline", "pallas_interpret"),
+        _sched(4, "pipeline", "pallas_interpret").replace(ii=1),
+    ]
+    fp = FixedPointConfig(16, 6)
+    keys = {schedule_key(s, None) for s in scheds}
+    assert len(keys) == len(scheds)        # new axes separate the queues
+    for s in scheds:
+        assert KernelSchedule.from_key(schedule_key(s, fp)) == s
+        assert_serving_conformance(eng, rng.randn(3, 20, 6)
+                                   .astype(np.float32), schedule=s)
+    x = rng.randn(6, 20, 6).astype(np.float32)
+    reqs = eng.serve([x[i] for i in range(6)],
+                     schedules=[scheds[i % 3] for i in range(6)])
+    for i, r in enumerate(reqs):
+        direct = eng.predict(x[i:i + 1], schedule=scheds[i % 3])
+        np.testing.assert_array_equal(np.asarray(r.result), direct[0])
+    report = eng.serve_report()
+    for s in scheds:
+        row = report[schedule_key(s, None)]
+        assert row["schedule"] == s
+        est = estimate_schedule(s, cfg.rnn)
+        assert row["analytical"]["ii_cycles"] == est.ii_cycles
+    # the ii=1 pipeline queue must report the lowest analytical II
+    iis = {k: r["analytical"]["ii_cycles"] for k, r in report.items()}
+    assert iis[schedule_key(scheds[2], None)] == 1
+
+
 def test_xla_backend_engine_is_exact(gru_engine, rng):
     """backend='xla' serving must equal the golden model bit-for-bit."""
     x = rng.randn(3, 20, 6).astype(np.float32)

@@ -154,5 +154,12 @@ def test_pipelined_rnn_on_mesh():
             err = float(jnp.abs(o1 - o2).max())
             print("pipe err", arch, err)
             assert err < 1e-5
+            # hoisted stage pipeline: zx precomputed before the stage pipe,
+            # per-stage blocks carry only hU — same result
+            oh = jax.jit(lambda *a: pipelined_rnn(
+                r, *a, mesh, hoist_input=True))(xs, W, U, b)
+            errh = float(jnp.abs(oh - o2).max())
+            print("pipe hoist err", arch, errh)
+            assert errh < 1e-5
     """)
-    assert out.count("pipe err") == 2
+    assert out.count("pipe err") == 2 and out.count("pipe hoist err") == 2
