@@ -1,0 +1,148 @@
+"""Auto-scheduler benchmarks: the chosen Pareto frontier as a persistent
+record, plus the predicted-vs-measured sanity loop.
+
+``frontier_record`` (appended to BENCH_rnn_kernels.json by ``run.py
+--json``) captures, for the flavor-tagging LSTM:
+
+  * the analytical Pareto frontier (latency_cycles x dsp x bram) the
+    explorer reduced the legal space to;
+  * per DesignTarget: the selected schedule, its predicted latency, and its
+    measured steady-state wall-clock;
+  * a rank-correlation check — Spearman rho of predicted latency ordering
+    vs measured wall-clock ordering along the static in-loop reuse chain
+    (the paper's Fig. 1 axis; interpret-mode wall clock scales with the
+    sequential grid length, which is exactly what the estimate prices).
+    A non-positive rho means the analytical model no longer sorts real
+    schedules correctly and the record FAILS.
+
+``smoke`` is the check.sh fail-fast stage: tiny space, asserts a non-empty
+frontier and an analytically monotone latency-vs-R curve (no kernels run).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.autotune import (DesignTarget, SpaceSpec, explore, measure_points,
+                            select)
+from repro.registry import get_config
+
+CFG_NAME = "flavor-tagging-lstm"
+
+_SPEC = SpaceSpec(reuse_factors=(1, 2, 4, 8), iis=(0, 1),
+                  block_batches=(32,), backends=("pallas_interpret",))
+_SPEC_FULL = SpaceSpec(reuse_factors=(1, 2, 4, 8, 16), iis=(0, 1, 2),
+                       block_batches=(32,), backends=("pallas_interpret",))
+
+#: the paper's three deployment postures as DesignTargets
+TARGETS = (
+    ("trigger", DesignTarget(max_latency_us=2.0, objective="latency")),
+    ("resource-saver", DesignTarget(max_dsp=8000, objective="resources")),
+    ("throughput", DesignTarget(min_throughput_eps=1e6,
+                                objective="throughput")),
+)
+
+
+def _spearman(a, b) -> float:
+    """Rank correlation without scipy (ties broken by position)."""
+    a, b = np.asarray(a, float), np.asarray(b, float)
+    ra = np.argsort(np.argsort(a)).astype(float)
+    rb = np.argsort(np.argsort(b)).astype(float)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = float(np.sqrt((ra ** 2).sum() * (rb ** 2).sum()))
+    return float((ra * rb).sum() / denom) if denom else 1.0
+
+
+def frontier_record(full: bool = False) -> dict:
+    """The autotune section of BENCH_rnn_kernels.json."""
+    cfg = get_config(CFG_NAME)
+    spec = _SPEC_FULL if full else _SPEC
+    ex = explore(cfg, spec=spec)
+    assert ex.frontier, "explorer returned an empty frontier"
+
+    # the static in-loop reuse chain — the rank-check population — plus
+    # every per-target selection, measured in one pass
+    chain = sorted((p for p in ex.points
+                    if p.schedule.mode == "static"
+                    and not p.schedule.hoist_input),
+                   key=lambda p: p.schedule.reuse_factor)
+    picks = {name: select(cfg, t, spec) for name, t in TARGETS}
+    to_measure = {p.key: p for p in chain}
+    to_measure.update((p.key, p) for p in picks.values())
+    walls = measure_points(cfg, list(to_measure.values()), batch=16, iters=3)
+
+    pred = [p.latency_cycles for p in chain]
+    meas = [walls[p.key] for p in chain]
+    rho = _spearman(pred, meas)
+    rank_check = {
+        "population": "static in-loop chain",
+        "points": len(chain),
+        "predicted_latency_cycles": pred,
+        "measured_wall_us": [w * 1e6 for w in meas],
+        "spearman": rho,
+        "passed": rho > 0.0,
+    }
+
+    targets_out = []
+    for name, t in TARGETS:
+        p = picks[name]
+        targets_out.append({
+            "name": name,
+            "target": t.describe(),
+            "selected_key": p.key,
+            "predicted_latency_us": p.latency_us(t.clock_mhz),
+            "predicted_ii_cycles": p.ii_cycles,
+            "predicted_dsp": p.dsp,
+            "measured_wall_us": walls[p.key] * 1e6,
+        })
+        emit(f"autotune/target/{name}", walls[p.key] * 1e6,
+             f"key={p.key}|pred_lat_us={p.latency_us(t.clock_mhz):.3f}"
+             f"|dsp={p.dsp}")
+    emit("autotune/rank_check", rho * 1e6,
+         f"spearman={rho:.3f}|points={len(chain)}|passed={rank_check['passed']}")
+
+    return {
+        "config": CFG_NAME,
+        "space_points": len(ex.points),
+        "frontier": [p.report_row() for p in ex.frontier],
+        "targets": targets_out,
+        "rank_check": rank_check,
+    }
+
+
+def run(full: bool = False):
+    frontier_record(full=full)
+
+
+def smoke() -> None:
+    """Fail-fast explorer regression check (analytical only, no kernels):
+    non-empty frontier over a tiny space + monotone latency-vs-R."""
+    cfg = get_config("top-tagging-lstm")
+    spec = SpaceSpec(reuse_factors=(1, 2, 4), backends=("pallas_interpret",))
+    ex = explore(cfg, spec=spec)
+    assert ex.frontier, "autotune smoke: empty frontier"
+    for f in ex.frontier:
+        bad = [p.key for p in ex.points if p.dominates(f)]
+        assert not bad, f"autotune smoke: {f.key} dominated by {bad}"
+    chain = sorted((p for p in ex.points
+                    if p.schedule.mode == "static"
+                    and not p.schedule.hoist_input),
+                   key=lambda p: p.schedule.reuse_factor)
+    lats = [p.latency_cycles for p in chain]
+    assert lats == sorted(lats) and len(set(lats)) == len(lats), \
+        f"autotune smoke: latency not strictly monotone in R: {lats}"
+    dsps = [p.dsp for p in chain]
+    assert dsps == sorted(dsps, reverse=True), \
+        f"autotune smoke: dsp not monotone-decreasing in R: {dsps}"
+    # a target must resolve end to end
+    pt = select(cfg, DesignTarget(max_dsp=max(dsps) - 1), spec)
+    assert pt.dsp < max(dsps)
+    emit("autotune/smoke", 0.0,
+         f"frontier={len(ex.frontier)}|space={len(ex.points)}"
+         f"|selected={pt.key}")
+
+
+if __name__ == "__main__":
+    run()

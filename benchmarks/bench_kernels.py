@@ -194,6 +194,10 @@ def write_json(path: str = "BENCH_rnn_kernels.json",
                 "passed": best["speedup_vs_inloop"] >= 1.3,
             }
     doc["acceptance"] = acceptance
+    # the chosen Pareto frontier + predicted-vs-measured rank check
+    # (per-target selected schedule) rides the same persistent record
+    from benchmarks import bench_autotune
+    doc["autotune"] = bench_autotune.frontier_record(full=full)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
         f.write("\n")

@@ -33,10 +33,10 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 def smoke() -> int:
     """Fast import + conformance check; returns a process exit code."""
     t0 = time.time()
-    from benchmarks import (bench_kernels, bench_latency_resources,  # noqa: F401
-                            bench_quantization, bench_roofline,
-                            bench_serving, bench_static_nonstatic,
-                            bench_throughput)
+    from benchmarks import (bench_autotune, bench_kernels,  # noqa: F401
+                            bench_latency_resources, bench_quantization,
+                            bench_roofline, bench_serving,
+                            bench_static_nonstatic, bench_throughput)
     print("smoke/imports,0,ok")
 
     from repro.kernels.schedule import KernelSchedule
@@ -61,8 +61,12 @@ def main() -> None:
                     help="import benches + minimal schedule sweep, fail fast")
     ap.add_argument("--json", nargs="?", const="BENCH_rnn_kernels.json",
                     default=None, metavar="PATH",
-                    help="write the hoisted-vs-in-loop perf record "
-                         "(BENCH_rnn_kernels.json) and exit")
+                    help="write the hoisted-vs-in-loop perf record + the "
+                         "autotune frontier (BENCH_rnn_kernels.json) and "
+                         "exit")
+    ap.add_argument("--autotune-smoke", action="store_true",
+                    help="explorer fail-fast: tiny space, non-empty "
+                         "frontier, monotone latency-vs-R (analytical only)")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (e.g. roofline,kernels)")
     args, _ = ap.parse_known_args()
@@ -70,18 +74,26 @@ def main() -> None:
     if args.smoke:
         sys.exit(smoke())
 
+    if args.autotune_smoke:
+        from benchmarks import bench_autotune
+        bench_autotune.smoke()
+        sys.exit(0)
+
     if args.json is not None:
         from benchmarks import bench_kernels
         doc = bench_kernels.write_json(args.json, full=args.full)
         acc = doc["acceptance"]
+        rank = doc["autotune"]["rank_check"]
         print(f"json/acceptance,{acc['speedup'] * 1e6:.0f},"
               f"speedup={acc['speedup']:.2f}x|passed={acc['passed']}")
-        sys.exit(0 if acc["passed"] else 1)
+        print(f"json/autotune_rank,{rank['spearman'] * 1e6:.0f},"
+              f"spearman={rank['spearman']:.3f}|passed={rank['passed']}")
+        sys.exit(0 if acc["passed"] and rank["passed"] else 1)
 
-    from benchmarks import (bench_kernels, bench_latency_resources,
-                            bench_quantization, bench_roofline,
-                            bench_serving, bench_static_nonstatic,
-                            bench_throughput)
+    from benchmarks import (bench_autotune, bench_kernels,
+                            bench_latency_resources, bench_quantization,
+                            bench_roofline, bench_serving,
+                            bench_static_nonstatic, bench_throughput)
     benches = {
         "latency_resources": bench_latency_resources,
         "static_nonstatic": bench_static_nonstatic,
@@ -90,6 +102,7 @@ def main() -> None:
         "quantization": bench_quantization,
         "throughput": bench_throughput,
         "serving": bench_serving,
+        "autotune": bench_autotune,
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

@@ -1,11 +1,15 @@
 """End-to-end SERVING driver (the paper's deployment scenarios): train the
-flavor tagger, then serve a MIXED stream of requests — every request carries
-its own KernelSchedule, i.e. its own point on the latency-resource curve —
-through the schedule-keyed micro-batcher.  Requests co-batch by schedule
-hash (one compiled kernel per key, one jit trace each), ragged sequence
-lengths share batches, and the final report pairs each key's measured
-latency with ``estimate_schedule`` of the same schedule object: the paper's
-measured-vs-analytical two-column table, per tenant.
+flavor tagger, then serve a MIXED stream of requests — every tenant states a
+DESIGN TARGET (latency / resource / throughput budget) instead of a
+hard-coded KernelSchedule, and the auto-scheduler resolves each target to a
+point on the latency-resource curve: the explorer enumerates the legal
+schedule space, prices it analytically, reduces it to a Pareto frontier,
+and picks the objective-optimal feasible point.  Requests then co-batch by
+the selected schedule's hash (one compiled kernel per key, one jit trace
+each) and the final report pairs each key's measured latency with
+``estimate_schedule`` of the same schedule object: the paper's
+measured-vs-analytical two-column table, per tenant — with the schedules
+chosen by the machine, not the operator.
 
 Run:  PYTHONPATH=src python examples/serve_tagger.py [--requests 512]
 """
@@ -22,23 +26,23 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 import numpy as np
 
 from benchmarks.common import train_tagger
+from repro.autotune import DesignTarget, SpaceSpec
 from repro.data import flavor_tagging_dataset
-from repro.kernels.schedule import KernelSchedule
 from repro.serving import RNNServingEngine, format_serve_report
 
-# four tenants on one engine: the trigger design point (fully parallel,
-# lowest latency), a resource-saving R=4 static design, the non-static
-# block chain, and the hoisted pipelined NONSTATIC design (II = 1) —
-# paper Fig. 1 as live traffic
-TENANT_SCHEDULES = (
-    KernelSchedule(reuse_factor=1, mode="static", backend="xla"),
-    KernelSchedule(reuse_factor=4, mode="static", block_batch=8,
-                   backend="pallas_interpret"),
-    KernelSchedule(reuse_factor=2, mode="nonstatic", block_batch=8,
-                   backend="pallas_interpret"),
-    KernelSchedule(reuse_factor=4, mode="pipeline", ii=1, block_batch=8,
-                   backend="pallas_interpret"),
+# three tenants on one engine, each stating WHAT it needs — the trigger
+# latency budget, the resource-capped co-tenant, and the throughput-driven
+# coprocessor farm — paper Fig. 1 as live traffic, auto-scheduled
+TENANT_TARGETS = (
+    ("trigger", DesignTarget(max_latency_us=1.0, objective="latency")),
+    ("saver", DesignTarget(max_dsp=12000, objective="resources")),
+    ("farm", DesignTarget(min_throughput_eps=1e6, objective="throughput")),
 )
+
+# the slice of schedule space this deployment may execute (interpret-mode
+# Pallas kernels in the CPU container; pallas_tpu on hardware)
+SPACE = SpaceSpec(reuse_factors=(1, 2, 4), iis=(0, 1), block_batches=(8,),
+                  backends=("pallas_interpret",))
 
 
 def main():
@@ -51,19 +55,23 @@ def main():
     x, _ = flavor_tagging_dataset(args.requests, seed=5)
 
     eng = RNNServingEngine(cfg, params, max_batch=args.max_batch)
-    for s in TENANT_SCHEDULES:          # compile each tenant's kernel once
-        eng.warmup(schedule=s)
+    for name, target in TENANT_TARGETS:   # resolve + compile each tenant once
+        pt = eng.schedule_for_target(target, spec=SPACE)
+        print(f"tenant {name:8s} {target.describe()}")
+        print(f"  -> {pt.key}  pred {pt.latency_us():.2f}us, "
+              f"II {pt.ii_cycles}, dsp {pt.dsp}, bram {pt.bram_18k}")
+        eng.warmup(schedule=pt.schedule, fp=pt.fp)
 
     rng = np.random.RandomState(7)
     t0 = time.perf_counter()
     for i in range(args.requests):
-        s = TENANT_SCHEDULES[rng.randint(len(TENANT_SCHEDULES))]
-        eng.submit(x[i], schedule=s)
-        eng.flush()                     # flush whichever queues are ready
-    leftovers = eng.flush(force=True)   # end of stream
+        _, target = TENANT_TARGETS[rng.randint(len(TENANT_TARGETS))]
+        eng.submit(x[i], target=target)   # target -> memoized schedule queue
+        eng.flush()                       # flush whichever queues are ready
+    leftovers = eng.flush(force=True)     # end of stream
     wall = time.perf_counter() - t0
 
-    print(f"served {args.requests} mixed-schedule requests in {wall:.2f}s "
+    print(f"served {args.requests} mixed-target requests in {wall:.2f}s "
           f"({args.requests / wall:.0f} ev/s), "
           f"{len(leftovers)} flushed at end of stream")
     print(format_serve_report(eng.serve_report()))

@@ -4,9 +4,12 @@
 #   1. pytest --collect-only  — catches JAX API drift at import time (the
 #      AxisType / TPUCompilerParams class of breakage) in seconds
 #   2. benchmarks/run.py --smoke — bench imports + minimal schedule sweep
-#   3. benchmarks/run.py --json — hoisted-vs-in-loop perf record
-#      (BENCH_rnn_kernels.json); fails if the acceptance speedup regresses
-#   4. tier-1: pytest -x -q   — the full suite, first failure stops
+#   3. benchmarks/run.py --autotune-smoke — explorer fail-fast: tiny space,
+#      non-empty Pareto frontier, monotone latency-vs-R (analytical only)
+#   4. benchmarks/run.py --json — hoisted-vs-in-loop perf record + autotune
+#      frontier (BENCH_rnn_kernels.json); fails if the acceptance speedup
+#      regresses or predicted/measured schedule ordering decorrelates
+#   5. tier-1: pytest -x -q   — the full suite, first failure stops
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -16,6 +19,9 @@ python -m pytest -q --collect-only >/dev/null
 
 echo "== benchmark smoke =="
 python benchmarks/run.py --smoke
+
+echo "== autotune smoke =="
+python benchmarks/run.py --autotune-smoke
 
 echo "== perf record (BENCH_rnn_kernels.json) =="
 python benchmarks/run.py --json

@@ -1,0 +1,24 @@
+"""Auto-scheduler: Pareto design-space exploration over KernelSchedule.
+
+``explore(cfg, target)`` prices the legal schedule space and reduces it to
+a Pareto frontier; ``select(cfg, target)`` returns the single point a
+serving engine should run — the paper's hand-enumerated latency/resource
+tables, turned into a solver.
+"""
+
+from repro.autotune.explorer import (  # noqa: F401
+    Exploration,
+    InfeasibleTargetError,
+    explore,
+    is_feasible,
+    measure_points,
+    pareto,
+    select,
+    violation,
+)
+from repro.autotune.space import (  # noqa: F401
+    SpaceSpec,
+    divisors,
+    enumerate_space,
+)
+from repro.autotune.target import OBJECTIVES, DesignTarget  # noqa: F401

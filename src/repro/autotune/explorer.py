@@ -1,0 +1,238 @@
+"""Pareto design-space explorer over KernelSchedule — the component that
+*chooses* a point on the paper's latency/resource curve.
+
+The paper's tables are hand-enumerated sweeps; this module closes the loop:
+
+  1. ``enumerate_space`` yields every legal schedule (space.py);
+  2. every point is priced analytically through the unified
+     ``core.hls.price_point`` bridge — the SAME object the kernels execute;
+  3. the space reduces to a Pareto frontier over (latency_cycles, dsp,
+     bram_18k) — no returned point is dominated by any legal point;
+  4. a :class:`~repro.autotune.target.DesignTarget` filters the space to the
+     feasible region and ``select`` picks the objective-optimal point —
+     optionally re-ranked by measured wall-clock of the top-k candidates
+     (the bench harness's steady-state timing, ``measure_points``).
+
+An infeasible target raises :class:`InfeasibleTargetError` naming the
+nearest-to-feasible point (smallest summed relative constraint violation), so
+the error message tells the designer exactly how far their budget is from
+the achievable curve.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.config import ModelConfig
+from repro.core.hls.design_point import DesignPoint, price_point
+from repro.autotune.space import SpaceSpec, enumerate_space
+from repro.autotune.target import DesignTarget
+
+
+# ---------------------------------------------------------------------------
+# Feasibility
+# ---------------------------------------------------------------------------
+
+
+def violation(point: DesignPoint, target: DesignTarget) -> float:
+    """Summed relative constraint violation; 0.0 iff feasible.
+
+    Each violated constraint contributes its fractional excess (e.g. a point
+    at 12 µs against a 10 µs budget adds 0.2), so "nearest to feasible" is
+    scale-free across latency/DSP/BRAM/throughput axes.
+    """
+    v = 0.0
+    c = target.clock_mhz
+    if target.max_latency_us is not None:
+        v += max(0.0, point.latency_us(c) / target.max_latency_us - 1.0)
+    if target.min_throughput_eps is not None:
+        v += max(0.0,
+                 target.min_throughput_eps / point.throughput_eps(c) - 1.0)
+    if target.max_dsp is not None:
+        v += max(0.0, point.dsp / target.max_dsp - 1.0)
+    if target.max_bram_18k is not None:
+        v += max(0.0, point.bram_18k / target.max_bram_18k - 1.0)
+    if target.part is not None and not point.design.fits:
+        v += 1.0
+    return v
+
+
+def is_feasible(point: DesignPoint, target: DesignTarget) -> bool:
+    return violation(point, target) == 0.0
+
+
+class InfeasibleTargetError(ValueError):
+    """No enumerated schedule meets the target; carries the nearest point."""
+
+    def __init__(self, target: DesignTarget, nearest: DesignPoint,
+                 n_points: int):
+        self.target = target
+        self.nearest = nearest
+        c = target.clock_mhz
+        super().__init__(
+            f"no schedule among {n_points} legal points meets target "
+            f"{target.describe()}; nearest-to-feasible point is "
+            f"{nearest.key} (latency {nearest.latency_us(c):.2f}us, "
+            f"dsp {nearest.dsp}, bram {nearest.bram_18k}, "
+            f"throughput {nearest.throughput_eps(c):.0f}ev/s, "
+            f"violation {violation(nearest, target):.1%}) — relax the "
+            f"budget at least that far or widen the space spec")
+
+
+# ---------------------------------------------------------------------------
+# Pareto reduction
+# ---------------------------------------------------------------------------
+
+
+def pareto(points: Sequence[DesignPoint]) -> Tuple[DesignPoint, ...]:
+    """Non-dominated subset under DesignPoint.dominates, sorted by latency
+    (ties by DSP then BRAM then key, for determinism).
+
+    Sort-then-scan: after sorting by (latency, dsp, bram), any dominator of
+    a point precedes it, so one pass keeping the running non-dominated set
+    is O(n·k) with k = frontier size.
+    """
+    ordered = sorted(points, key=lambda p: (p.latency_cycles, p.dsp,
+                                            p.bram_18k, p.key))
+    front: List[DesignPoint] = []
+    for p in ordered:
+        if not any(q.dominates(p) for q in front):
+            front.append(p)
+    return tuple(front)
+
+
+# ---------------------------------------------------------------------------
+# Exploration
+# ---------------------------------------------------------------------------
+
+
+_OBJECTIVE_RANK = {
+    "latency": lambda p: (p.latency_cycles, p.dsp, p.bram_18k, p.key),
+    "resources": lambda p: (p.dsp, p.bram_18k, p.latency_cycles, p.key),
+    "throughput": lambda p: (p.ii_cycles, p.latency_cycles, p.dsp, p.key),
+}
+
+
+@dataclass(frozen=True)
+class Exploration:
+    """Everything ``explore`` learned about one (config, target) pair."""
+
+    cfg: ModelConfig
+    target: Optional[DesignTarget]
+    points: Tuple[DesignPoint, ...]      # every legal priced point
+    frontier: Tuple[DesignPoint, ...]    # Pareto over (latency, dsp, bram)
+    feasible: Tuple[DesignPoint, ...]    # target-feasible, objective-ranked
+
+    @property
+    def best(self) -> Optional[DesignPoint]:
+        return self.feasible[0] if self.feasible else None
+
+    def frontier_table(self) -> List[dict]:
+        return [p.report_row() for p in self.frontier]
+
+
+def explore(cfg: ModelConfig, target: Optional[DesignTarget] = None,
+            spec: Optional[SpaceSpec] = None) -> Exploration:
+    """Enumerate, price, and Pareto-reduce the legal schedule space.
+
+    The fixed-point axis comes from the target (``target.fp``); pricing and
+    the eventual serving queue both use that config, so the explored curve
+    is the one the engine will execute.
+    """
+    schedules = enumerate_space(cfg, spec)
+    fp = target.fp if target is not None else None
+    clock = target.clock_mhz if target is not None else 200.0
+    part = (target.part if target is not None and target.part is not None
+            else "xcku115")
+    points = tuple(price_point(cfg, s, fp, clock_mhz=clock, part=part)
+                   for s in schedules)
+    front = pareto(points)
+    if target is None:
+        feas = tuple(sorted(points, key=_OBJECTIVE_RANK["latency"]))
+    else:
+        feas = tuple(sorted((p for p in points if is_feasible(p, target)),
+                            key=_OBJECTIVE_RANK[target.objective]))
+    return Exploration(cfg=cfg, target=target, points=points,
+                       frontier=front, feasible=feas)
+
+
+def select(cfg: ModelConfig, target: DesignTarget,
+           spec: Optional[SpaceSpec] = None, *,
+           measure_top_k: int = 0,
+           measure_batch: int = 32) -> DesignPoint:
+    """The auto-scheduler entry point: target -> the schedule to serve.
+
+    Raises :class:`InfeasibleTargetError` (naming the nearest-to-feasible
+    point) when nothing in the space meets the target, and a plain
+    ``ValueError`` when the spec pruned the space to nothing (there is no
+    nearest point to name).  With ``measure_top_k > 0`` the top-k feasible
+    candidates (by predicted objective) are re-ranked by measured
+    steady-state wall-clock — analytic pricing proposes, measurement
+    disposes.  Measurement carries no resource information, so the
+    ``"resources"`` objective keeps the analytic ranking (its optimum is a
+    DSP count, not a wall-clock).
+    """
+    ex = explore(cfg, target, spec)
+    if not ex.points:
+        raise ValueError(
+            f"enumerated schedule space is empty for target "
+            f"{target.describe()}: the space spec pruned every point "
+            f"(e.g. pallas_tpu lane alignment, or reuse factors that do "
+            f"not divide the gate dimension) — widen the SpaceSpec")
+    if not ex.feasible:
+        nearest = min(ex.points, key=lambda p: (violation(p, target),
+                                                p.latency_cycles, p.key))
+        raise InfeasibleTargetError(target, nearest, len(ex.points))
+    if measure_top_k <= 0 or target.objective == "resources":
+        return ex.feasible[0]
+    top = list(ex.feasible[:measure_top_k])
+    walls = measure_points(cfg, top, batch=measure_batch)
+    return min(top, key=lambda p: (walls[p.key], p.dsp, p.key))
+
+
+# ---------------------------------------------------------------------------
+# Measured refinement (the bench harness's steady-state timing)
+# ---------------------------------------------------------------------------
+
+
+def measure_points(cfg: ModelConfig, points: Sequence[DesignPoint], *,
+                   batch: int = 32, iters: int = 3,
+                   seed: int = 0) -> Dict[str, float]:
+    """Steady-state seconds/call of the scan kernel under each point's
+    schedule (min over iters, first call compiles) — keyed by point.key.
+
+    Measures the float kernel datapath (the quantizer wraps it uniformly,
+    so fixed-point configs do not reorder schedules).
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.hls.resources import gate_count
+    from repro.kernels import ops
+
+    rnn = cfg.rnn
+    assert rnn is not None
+    g = gate_count(rnn.cell)
+    rng = np.random.RandomState(seed)
+    xs = jnp.asarray(rng.randn(batch, rnn.seq_len, rnn.input_size)
+                     .astype(np.float32))
+    W = jnp.asarray(rng.randn(rnn.input_size, g * rnn.hidden)
+                    .astype(np.float32) * .3)
+    U = jnp.asarray(rng.randn(rnn.hidden, g * rnn.hidden)
+                    .astype(np.float32) * .3)
+    bshape = (g * rnn.hidden,) if rnn.cell == "lstm" else (2, g * rnn.hidden)
+    b = jnp.asarray(rng.randn(*bshape).astype(np.float32) * .1)
+    op = ops.SCHEDULED_KERNELS["lstm" if rnn.cell == "lstm" else "gru"][0]
+
+    walls: Dict[str, float] = {}
+    for p in points:
+        op(xs, W, U, b, schedule=p.schedule).block_until_ready()  # compile
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            op(xs, W, U, b, schedule=p.schedule).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        walls[p.key] = best
+    return walls

@@ -1,0 +1,138 @@
+"""Legal KernelSchedule space enumeration — the paper's hand-built sweep
+grid, generated and pruned mechanically.
+
+The axes are exactly ``KernelSchedule``'s: reuse factor x mode x hoist x
+hoist_reuse x ii x block_batch x backend.  Legality pruning applies the same
+rules the kernels enforce at dispatch:
+
+  * reuse factors must divide the gate dimension ``G x hidden`` (the kernels
+    clamp non-divisors via ``effective_reuse`` — enumerating them would only
+    alias already-enumerated points under a different name);
+  * ``hoist_reuse > 1`` requires the hoist; pipeline mode implies it
+    (``KernelSchedule.__post_init__``); ``ii`` is a pipeline-only axis;
+  * ``backend="pallas_tpu"`` points must pass ``ops.check_tpu_alignment``
+    (128-lane column tiles, 8-sublane batch tiles) — misaligned points are
+    pruned, not clamped, because they would raise at dispatch;
+  * duplicates (same ``schedule.key()``) collapse to one point.
+
+The result is deterministic (sorted by key) so Pareto frontiers and selected
+schedules are reproducible across runs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional, Tuple
+
+from repro.config import ModelConfig
+from repro.core.hls.resources import gate_count
+from repro.kernels.schedule import MODES, KernelSchedule
+
+
+def divisors(n: int) -> Tuple[int, ...]:
+    """All divisors of n, ascending — the legal reuse factors of a gate
+    dimension (hls4ml restricts R the same way)."""
+    small, large = [], []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            small.append(d)
+            if d != n // d:
+                large.append(n // d)
+        d += 1
+    return tuple(small + large[::-1])
+
+
+@dataclass(frozen=True)
+class SpaceSpec:
+    """Which slice of the schedule space to enumerate.
+
+    ``reuse_factors=None`` means every divisor of the gate dimension — the
+    full hls4ml-legal R axis.  The defaults describe the container-friendly
+    slice (interpret backend, one block_batch); hardware sweeps pass
+    ``backends=("pallas_tpu",)`` and get alignment-pruned automatically.
+    """
+
+    reuse_factors: Optional[Tuple[int, ...]] = None
+    modes: Tuple[str, ...] = MODES
+    hoist: Tuple[bool, ...] = (False, True)
+    hoist_reuses: Tuple[int, ...] = (1,)
+    iis: Tuple[int, ...] = (0,)
+    block_batches: Tuple[int, ...] = (8,)
+    backends: Tuple[str, ...] = ("pallas_interpret",)
+    max_points: int = 4096
+
+    def __post_init__(self):
+        for m in self.modes:
+            if m not in MODES:
+                raise ValueError(f"mode {m!r} not in {MODES}")
+
+
+def _tpu_aligned(schedule: KernelSchedule, gate_dim: int) -> bool:
+    """True when a pallas_tpu schedule passes the Mosaic alignment rules
+    (non-TPU backends are unconstrained)."""
+    if schedule.backend != "pallas_tpu":
+        return True
+    import math
+
+    from repro.kernels.ops import check_tpu_alignment
+    try:
+        r = schedule.effective_reuse(gate_dim)
+        check_tpu_alignment(schedule, tile_width=gate_dim // r,
+                            block_batch=schedule.block_batch, kernel="space")
+        if schedule.hoist_reuse > 1:
+            hr = math.gcd(schedule.hoist_reuse, gate_dim)
+            check_tpu_alignment(schedule, tile_width=gate_dim // hr,
+                                block_batch=schedule.block_batch,
+                                kernel="space")
+    except ValueError:
+        return False
+    return True
+
+
+def _raw_points(gate_dim: int, spec: SpaceSpec) -> Iterator[KernelSchedule]:
+    rfs = spec.reuse_factors if spec.reuse_factors is not None \
+        else divisors(gate_dim)
+    for backend in spec.backends:
+        for bb in spec.block_batches:
+            for r in rfs:
+                if gate_dim % r != 0:
+                    continue            # aliases the gcd point — prune
+                for mode in spec.modes:
+                    base = dict(reuse_factor=r, mode=mode, block_batch=bb,
+                                backend=backend)
+                    if mode == "pipeline":
+                        # hoist is implied; ii and hoist_reuse are live axes
+                        for ii in spec.iis:
+                            for hr in spec.hoist_reuses:
+                                if hr > 1 and gate_dim % hr != 0:
+                                    continue
+                                yield KernelSchedule(ii=ii, hoist_reuse=hr,
+                                                     **base)
+                        continue
+                    for hoist in spec.hoist:
+                        if not hoist:
+                            yield KernelSchedule(**base)
+                            continue
+                        for hr in spec.hoist_reuses:
+                            if hr > 1 and gate_dim % hr != 0:
+                                continue
+                            yield KernelSchedule(hoist_input=True,
+                                                 hoist_reuse=hr, **base)
+
+
+def enumerate_space(cfg: ModelConfig,
+                    spec: Optional[SpaceSpec] = None
+                    ) -> Tuple[KernelSchedule, ...]:
+    """The legal, deduplicated, deterministic schedule space for one model."""
+    assert cfg.rnn is not None, "the schedule space is an RNN-family concept"
+    spec = spec or SpaceSpec()
+    gate_dim = gate_count(cfg.rnn.cell) * cfg.rnn.hidden
+    seen = {}
+    for s in _raw_points(gate_dim, spec):
+        if not _tpu_aligned(s, gate_dim):
+            continue
+        seen.setdefault(s.key(), s)
+        if len(seen) >= spec.max_points:
+            break
+    return tuple(seen[k] for k in sorted(seen))

@@ -6,8 +6,15 @@ from repro.core.hls.design import (  # noqa: F401
     estimate_design_for_schedule,
     schedule_estimate_for,
 )
+from repro.core.hls.design_point import (  # noqa: F401
+    PARETO_AXES,
+    DesignPoint,
+    price_point,
+)
 from repro.core.hls.resources import (  # noqa: F401
     FPGA_PARTS,
     ScheduleEstimate,
     estimate_schedule,
+    gate_count,
+    resolved_axes,
 )

@@ -30,7 +30,9 @@ from repro.core.hls.resources import (
     FPGAPart,
     ScheduleEstimate,
     estimate_schedule,
+    gate_count,
     mults_per_dsp,
+    resolved_axes,
 )
 from repro.kernels.schedule import KernelSchedule
 
@@ -89,7 +91,7 @@ class HLSDesign:
 
 def _rnn_mults(rnn: RNNConfig) -> Tuple[int, int, int]:
     """(kernel mults, recurrent mults, head mults) per timestep/inference."""
-    g = 4 if rnn.cell == "lstm" else 3
+    g = gate_count(rnn.cell)
     mk = rnn.input_size * g * rnn.hidden
     mr = rnn.hidden * g * rnn.hidden
     mh = 0
@@ -213,20 +215,19 @@ def design_point_for_schedule(cfg: ModelConfig, schedule: KernelSchedule,
     FPGA design, so sweeping schedules sweeps the paper's Fig. 1 curve.
 
     The reuse factor is clamped to the divisor the kernel actually executes
-    (effective_reuse), keeping the priced design and the executed schedule
-    in lockstep for non-divisor R requests.
+    (``resolved_axes`` — the SAME resolution ``estimate_schedule`` applies),
+    keeping the priced design and the executed schedule in lockstep for
+    non-divisor R requests.
     """
     assert cfg.rnn is not None
-    g = 4 if cfg.rnn.cell == "lstm" else 3
-    r_eff = schedule.effective_reuse(g * cfg.rnn.hidden)
-    import math as _m
+    r_eff, hr_eff = resolved_axes(schedule, cfg.rnn)
     return RNNDesignPoint(
         cfg, fp if fp is not None else FixedPointConfig(),
         reuse_kernel=r_eff,
         reuse_recurrent=r_eff,
         mode=schedule.mode,
         hoist_input=schedule.hoist_input,
-        hoist_reuse=_m.gcd(schedule.hoist_reuse, g * cfg.rnn.hidden),
+        hoist_reuse=hr_eff,
         ii=schedule.ii, **kw)
 
 

@@ -37,6 +37,27 @@ FPGA_PARTS = {
 }
 
 
+def gate_count(cell: str) -> int:
+    """Gates per recurrent cell: LSTM i|f|c|o = 4, GRU r|z|n = 3 — the
+    paper's 4:3 LSTM:GRU resource ratio (Sec. 5.2).  The single source of
+    truth for the pricing bridge (resources.py, design.py, autotune)."""
+    return 4 if cell == "lstm" else 3
+
+
+def resolved_axes(schedule: KernelSchedule, rnn) -> "tuple[int, int]":
+    """(effective reuse, effective hoist reuse) the kernels actually execute.
+
+    The kernels clamp both reuse axes to divisors of the gate dimension
+    (ops.py via ``effective_reuse`` / gcd), so every consumer of a schedule's
+    price — ``estimate_schedule``, the table-calibrated design bridge, the
+    autotune explorer — must resolve the same divisors or it would price a
+    schedule that never runs.  This helper is that shared resolution.
+    """
+    gate_dim = gate_count(rnn.cell) * rnn.hidden
+    return (schedule.effective_reuse(gate_dim),
+            math.gcd(schedule.hoist_reuse, gate_dim))
+
+
 def mults_per_dsp(total_bits: int) -> float:
     """DSP48E2 is a 27x18 multiplier: below 18 bits one mult per DSP; the
     paper observes DSP usage flat until the precision exceeds the DSP input
@@ -115,7 +136,7 @@ def gate_mults(cell: str, input_size: int, hidden: int, *,
     ``hoisted=True`` counts only the recurrent (hU) half — the sequential
     working set once the input projection leaves the scan.
     """
-    g = 4 if cell == "lstm" else 3
+    g = gate_count(cell)
     fan_in = hidden if hoisted else input_size + hidden
     return fan_in * g * hidden
 
@@ -136,16 +157,15 @@ def estimate_schedule(schedule: KernelSchedule, rnn, fp=None
     in ops.py execute.
     """
     total_bits = fp.total_bits if fp is not None else 16
-    g = 4 if rnn.cell == "lstm" else 3
+    g = gate_count(rnn.cell)
     # price what EXECUTES: the kernels clamp reuse to a divisor of the gate
     # dim (ops.py), so the estimate must use the same effective R or it
     # would describe a schedule that never runs
-    R = schedule.effective_reuse(g * rnn.hidden)
+    R, hr = resolved_axes(schedule, rnn)
     hoist = schedule.hoist_input
     mults_seq = gate_mults(rnn.cell, rnn.input_size, rnn.hidden,
                            hoisted=hoist)
     mults_in = rnn.input_size * g * rnn.hidden            # the hoisted GEMM
-    hr = math.gcd(schedule.hoist_reuse, g * rnn.hidden)   # its column tiles
 
     # latency/II in kernel sequential steps (exactly the Pallas grid length
     # (B/bt, T, R_eff)), each step costing a pipeline constant.  The

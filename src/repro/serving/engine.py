@@ -15,7 +15,12 @@ carries a :class:`KernelSchedule` (plus fixed-point config), and the engine
     a pad-and-mask scan (single batch, XLA datapath);
   * reports, per schedule key, measured wall-clock latency/throughput paired
     with ``core.hls.estimate_schedule`` of the SAME schedule object — the
-    paper's measured-vs-analytical two-column comparison.
+    paper's measured-vs-analytical two-column comparison;
+  * resolves :class:`~repro.autotune.DesignTarget`\\ s to schedules through
+    the Pareto explorer (``auto_schedule`` / ``submit(target=...)``): a
+    queue can be opened with a latency/resource budget instead of an
+    explicit ``KernelSchedule``, and the static/nonstatic/pipeline mode is
+    auto-picked from ``estimate_schedule`` pricing.
 """
 
 from __future__ import annotations
@@ -28,10 +33,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.autotune import DesignTarget, SpaceSpec
+from repro.autotune import select as autotune_select
 from repro.config import FixedPointConfig, ModelConfig
-from repro.core.hls import (HLSDesign, RNNDesignPoint, estimate_design,
-                            estimate_schedule)
-from repro.kernels.schedule import KernelSchedule, schedule_key
+from repro.core.hls import (DesignPoint, HLSDesign, RNNDesignPoint,
+                            estimate_design, estimate_schedule)
+from repro.kernels.schedule import (DEFAULT_SCHEDULE_KEY, KernelSchedule,
+                                    schedule_key)
 from repro.models import rnn_tagger
 from repro.serving.batcher import MicroBatcher, Request, _pad_stack
 
@@ -59,6 +67,8 @@ class RNNServingEngine:
     _key_specs: Dict[str, Tuple[KernelSchedule, Optional[FixedPointConfig]]] \
         = field(default_factory=dict, repr=False)
     _traces: Dict[str, int] = field(default_factory=dict, repr=False)
+    _target_points: Dict[Tuple, DesignPoint] \
+        = field(default_factory=dict, repr=False)
 
     def __post_init__(self):
         if self.ragged not in RAGGED_POLICIES:
@@ -91,6 +101,67 @@ class RNNServingEngine:
         return (schedule if schedule is not None else self.resolved_schedule,
                 fp if fp is not None else self.fp)
 
+    # -- target-driven auto-scheduling ---------------------------------------
+
+    def _default_spec(self, target: DesignTarget) -> SpaceSpec:
+        """The slice of schedule space this engine can execute: its backend
+        family, a kernel-friendly block_batch, the full legal R/mode/hoist
+        axes.  Callers needing other axes pass an explicit spec."""
+        backend = "xla" if self.impl == "xla" else "pallas_interpret"
+        return SpaceSpec(backends=(backend,),
+                         block_batches=(min(8, self.max_batch),))
+
+    def schedule_for_target(self, target: DesignTarget, *,
+                            spec: Optional[SpaceSpec] = None,
+                            measure_top_k: int = 0) -> DesignPoint:
+        """Resolve a DesignTarget to the priced point this engine will run.
+
+        Memoized per (target, spec, measure_top_k) — all frozen/hashable —
+        so a stream of requests carrying the same target resolves the
+        explorer once and then co-batches on the selected schedule's key
+        like any explicit-schedule stream, while the same target under a
+        DIFFERENT space spec resolves independently (never served from the
+        other spec's cache).  Raises ``InfeasibleTargetError`` (with the
+        nearest-to-feasible point named) when the budget cannot be met.
+        """
+        memo = (target, spec, measure_top_k)
+        pt = self._target_points.get(memo)
+        if pt is None:
+            import dataclasses
+            eff = target
+            if eff.fp is None and self.fp is not None:
+                # price with the fp the engine will actually serve with
+                eff = dataclasses.replace(eff, fp=self.fp)
+            pt = autotune_select(self.cfg, eff,
+                                 spec or self._default_spec(target),
+                                 measure_top_k=measure_top_k)
+            self._target_points[memo] = pt
+        return pt
+
+    def auto_schedule(self, target: DesignTarget, *,
+                      spec: Optional[SpaceSpec] = None,
+                      measure_top_k: int = 0,
+                      warmup: bool = True) -> DesignPoint:
+        """Make a DesignTarget this engine's default design point.
+
+        The selected schedule becomes the engine default — subsequent
+        ``predict`` / ``submit`` calls without an explicit schedule execute
+        it (and the default queue reports it) — closing the ROADMAP
+        "scheduler-over-schedules" item: the per-queue static / nonstatic /
+        pipeline choice comes from ``estimate_schedule`` via the explorer
+        instead of the caller.
+        """
+        pt = self.schedule_for_target(target, spec=spec,
+                                      measure_top_k=measure_top_k)
+        self.schedule = pt.schedule
+        self.mode = None                 # the schedule is now authoritative
+        self.impl = "pallas" if pt.schedule.use_pallas else "xla"
+        if target.fp is not None:
+            self.fp = pt.fp
+        if warmup:
+            self.warmup()
+        return pt
+
     def _ensure_key(self, sched: KernelSchedule,
                     fp: Optional[FixedPointConfig]) -> str:
         key = schedule_key(sched, fp)
@@ -118,9 +189,18 @@ class RNNServingEngine:
 
     # -- direct batched inference -------------------------------------------
 
+    def _resolve_default_key(self, key: str) -> str:
+        """Requests on the bare DEFAULT_SCHEDULE_KEY queue (submitted via
+        the batcher with no schedule) execute the engine's RESOLVED
+        schedule: route them to its compiled key instead of KeyErroring on
+        a queue that never had a kernel."""
+        if key == DEFAULT_SCHEDULE_KEY:
+            return self._ensure_key(*self.resolve())
+        return key
+
     def _predict_key(self, key: str, x: np.ndarray,
                      lengths: Optional[np.ndarray] = None) -> np.ndarray:
-        fn = self._infer_cache[key]
+        fn = self._infer_cache[self._resolve_default_key(key)]
         if lengths is None:
             return np.asarray(fn(self.params, jnp.asarray(x)))
         return np.asarray(fn(self.params, jnp.asarray(x),
@@ -128,8 +208,13 @@ class RNNServingEngine:
 
     def predict(self, x: np.ndarray,
                 schedule: Optional[KernelSchedule] = None,
-                fp: Optional[FixedPointConfig] = None) -> np.ndarray:
-        """[b, T, in] -> [b, n_outputs] under the request's schedule."""
+                fp: Optional[FixedPointConfig] = None,
+                target: Optional[DesignTarget] = None) -> np.ndarray:
+        """[b, T, in] -> [b, n_outputs] under the request's schedule (or the
+        schedule auto-picked for its ``target``)."""
+        if target is not None and schedule is None:
+            pt = self.schedule_for_target(target)
+            schedule, fp = pt.schedule, fp if fp is not None else pt.fp
         key = self._ensure_key(*self.resolve(schedule, fp))
         return self._predict_key(key, x)
 
@@ -169,8 +254,18 @@ class RNNServingEngine:
     def submit(self, x: np.ndarray,
                schedule: Optional[KernelSchedule] = None,
                fp: Optional[FixedPointConfig] = None,
+               target: Optional[DesignTarget] = None,
                now: Optional[float] = None) -> Request:
-        """Enqueue one request ([T, in] payload) on its schedule's queue."""
+        """Enqueue one request ([T, in] payload) on its schedule's queue.
+
+        A request may carry a ``target`` instead of a schedule: the engine
+        resolves it through the explorer (memoized), so a stream of
+        same-target requests lands on one auto-picked queue — per-queue
+        mode selection without any caller-side schedule plumbing.
+        """
+        if target is not None and schedule is None:
+            pt = self.schedule_for_target(target)
+            schedule, fp = pt.schedule, fp if fp is not None else pt.fp
         sched, fpr = self.resolve(schedule, fp)
         key = self._ensure_key(sched, fpr)
         return self.batcher.submit(x, now=now, key=key, schedule=sched,
@@ -257,17 +352,30 @@ class RNNServingEngine:
     def serve_report(self, clock_mhz: float = 200.0) -> Dict[str, Dict]:
         """Per schedule key: measured serving stats (from the batcher's
         per-key counters) next to ``estimate_schedule`` of the SAME schedule
-        object the queue executed — the paper's two-column table."""
+        object the queue executed — the paper's two-column table.
+
+        Requests served on the bare DEFAULT_SCHEDULE_KEY queue report the
+        engine's RESOLVED schedule (the kernel they actually executed) with
+        its estimate, not an estimate-less row."""
+        specs = dict(self._key_specs)
+        resolved_from: Dict[str, str] = {}
+        if (DEFAULT_SCHEDULE_KEY in self.batcher.stats
+                and DEFAULT_SCHEDULE_KEY not in specs):
+            sched, fpr = self.resolve()
+            specs[DEFAULT_SCHEDULE_KEY] = (sched, fpr)
+            resolved_from[DEFAULT_SCHEDULE_KEY] = schedule_key(sched, fpr)
         report: Dict[str, Dict] = {}
-        for key, (sched, fpr) in self._key_specs.items():
+        for key, (sched, fpr) in specs.items():
             est = estimate_schedule(sched, self.cfg.rnn, fpr)
             report[key] = {
                 "schedule": sched,
                 "fp": fpr,
-                "traces": self.trace_count(key),
+                "traces": self.trace_count(resolved_from.get(key, key)),
                 "measured": self.batcher.key_stats(key).summary(),
                 "analytical": est.report_row(clock_mhz),
             }
+            if key in resolved_from:
+                report[key]["resolved_key"] = resolved_from[key]
         return report
 
     # -- paired FPGA design point -------------------------------------------

@@ -1,9 +1,22 @@
-"""LM serving engine: prefill + decode with slot-based continuous batching.
+"""LM serving engine: prefill + decode with slot-based continuous batching,
+folded onto the SAME schedule-key abstraction as the RNN engine.
 
 The decode step is the paper's static-mode schedule at LLM scale (state
 resident, II = 1 token); the slot manager implements continuous batching —
 finished sequences free their slot, new requests join mid-flight without
 stalling running ones (vLLM-style, sized for fixed-shape XLA programs).
+
+Schedule keys (ROADMAP item, closed): requests may carry a
+``KernelSchedule`` and are routed by the stable ``schedule_key`` hash into
+per-key decoders — each key owns its slot pool, its KV cache, ONE jit trace
+of the decode step, and its ``KeyStats`` counters, exactly mirroring the RNN
+engine's keyed jit-cache path.  Requests whose keys differ never share a
+decode batch (they would retrace); requests with no schedule ride the
+``DEFAULT_SCHEDULE_KEY`` decoder, which preserves the original single-pool
+behavior bit-for-bit.  The transformer decode kernels do not yet consume the
+schedule object (they are not reuse-tiled), so today distinct keys buy
+isolation + per-key reporting; when decode kernels grow schedules the keyed
+trace is already the dispatch point.
 """
 
 from __future__ import annotations
@@ -17,9 +30,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
-from repro.models import transformer as tf
+from repro.kernels.schedule import (DEFAULT_SCHEDULE_KEY, KernelSchedule,
+                                    schedule_key)
 from repro.models.decode import cache_specs, decode_step
-from repro.models.init import init_params
 from repro.serving.batcher import KeyStats
 
 
@@ -33,43 +46,113 @@ class Slot:
     arrival_s: float = 0.0
 
 
-class LMServingEngine:
-    def __init__(self, cfg: ModelConfig, params: Dict, *,
-                 max_batch: int = 4, max_seq: int = 256,
-                 cache_dtype: str = "float32"):
-        self.cfg = cfg
-        self.params = params
+class _KeyedDecoder:
+    """One schedule key's continuous-batching state: slot pool + KV cache +
+    the key's single jit trace of the decode step + serving counters."""
+
+    def __init__(self, cfg: ModelConfig, key: str,
+                 schedule: Optional[KernelSchedule], *, max_batch: int,
+                 max_seq: int, cache_dtype: str):
+        self.key = key
+        self.schedule = schedule
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.slots = [Slot() for _ in range(max_batch)]
         specs = cache_specs(cfg, max_batch, max_seq, cache_dtype)
         self.cache = {k: jnp.zeros(s.shape, jnp.dtype(s.dtype))
                       for k, s in specs.items()}
+        self.stats = KeyStats()
+        self.traces = 0
 
         def step(params, cache, tokens, pos):
+            # Python side effect runs at TRACE time only: one trace per key
+            # is the keyed-cache efficiency criterion (RNN engine parity)
+            self.traces += 1
             return decode_step(cfg, params, cache, tokens, pos)
 
         self._step = jax.jit(step, donate_argnums=(1,))
+
+    @property
+    def any_active(self) -> bool:
+        return any(s.active for s in self.slots)
+
+    def free_slot(self) -> Optional[Slot]:
+        for s in self.slots:
+            if not s.active:
+                return s
+        return None
+
+
+class LMServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Dict, *,
+                 max_batch: int = 4, max_seq: int = 256,
+                 cache_dtype: str = "float32",
+                 schedule: Optional[KernelSchedule] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.cache_dtype = cache_dtype
+        self.schedule = schedule            # default-request schedule
+        self._decoders: Dict[str, _KeyedDecoder] = {}
         self._next_req = 0
-        # per-engine serving counters, same shape as the RNN engine's
-        # per-key stats (the LM engine has one implicit "decode" key)
-        self._stats = KeyStats()
+        # eagerly build the default decoder: same allocation behavior as the
+        # pre-keyed engine for schedule-less traffic
+        self._decoder_for(self.schedule)
+
+    # -- keyed decoders ------------------------------------------------------
+
+    def _key_for(self, schedule: Optional[KernelSchedule]) -> str:
+        schedule = schedule if schedule is not None else self.schedule
+        return (DEFAULT_SCHEDULE_KEY if schedule is None
+                else schedule_key(schedule))
+
+    def _decoder_for(self, schedule: Optional[KernelSchedule]
+                     ) -> _KeyedDecoder:
+        sched = schedule if schedule is not None else self.schedule
+        key = self._key_for(sched)
+        dec = self._decoders.get(key)
+        if dec is None:
+            dec = _KeyedDecoder(self.cfg, key, sched,
+                                max_batch=self.max_batch,
+                                max_seq=self.max_seq,
+                                cache_dtype=self.cache_dtype)
+            self._decoders[key] = dec
+        return dec
+
+    def keys(self) -> List[str]:
+        return list(self._decoders)
+
+    def trace_count(self, key: str) -> int:
+        dec = self._decoders.get(key)
+        return 0 if dec is None else dec.traces
+
+    @property
+    def slots(self) -> List[Slot]:
+        """Default-key slot pool (single-tenant compatibility view)."""
+        return self._decoder_for(None).slots
 
     # -- request management --------------------------------------------------
     def add_request(self, prompt: List[int], max_new: int = 16,
-                    now: Optional[float] = None) -> Optional[int]:
-        for s in self.slots:
-            if not s.active:
-                s.active = True
-                s.req_id = self._next_req
-                self._next_req += 1
-                s.pos = 0
-                s.tokens = list(prompt)
-                s.max_new = max_new
-                s.arrival_s = time.time() if now is None else now
-                s._prompt_len = len(prompt)
-                return s.req_id
-        return None                     # queue full
+                    now: Optional[float] = None,
+                    schedule: Optional[KernelSchedule] = None
+                    ) -> Optional[int]:
+        """Claim a slot on the request's schedule-key decoder; None when that
+        key's pool is full (keys never borrow each other's slots — they
+        could not share a decode batch anyway)."""
+        dec = self._decoder_for(schedule)
+        s = dec.free_slot()
+        if s is None:
+            return None                 # this key's queue is full
+        s.active = True
+        s.req_id = self._next_req
+        self._next_req += 1
+        s.pos = 0
+        s.tokens = list(prompt)
+        s.max_new = max_new
+        s.arrival_s = time.time() if now is None else now
+        s._prompt_len = len(prompt)
+        return s.req_id
 
     def _advance_prompt_or_sample(self, s: Slot, logits_row) -> int:
         """Teacher-force remaining prompt tokens, then greedy-sample."""
@@ -78,21 +161,20 @@ class LMServingEngine:
         return int(jnp.argmax(logits_row))
 
     # -- one engine tick: every active slot decodes one token ----------------
-    def tick(self, now: Optional[float] = None) -> Dict[int, List[int]]:
-        if not any(s.active for s in self.slots):
-            return {}
-        tokens = np.zeros((self.max_batch, 1), np.int32)
-        pos = np.zeros((self.max_batch,), np.int32)
-        for i, s in enumerate(self.slots):
+    def _tick_decoder(self, dec: _KeyedDecoder,
+                      now: Optional[float]) -> Dict[int, List[int]]:
+        tokens = np.zeros((dec.max_batch, 1), np.int32)
+        pos = np.zeros((dec.max_batch,), np.int32)
+        for i, s in enumerate(dec.slots):
             if s.active:
                 tokens[i, 0] = s.tokens[s.pos]
                 pos[i] = s.pos
-        logits, self.cache = self._step(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos))
+        logits, dec.cache = dec._step(
+            self.params, dec.cache, jnp.asarray(tokens), jnp.asarray(pos))
         logits = np.asarray(logits[:, 0])
 
         finished: Dict[int, List[int]] = {}
-        for i, s in enumerate(self.slots):
+        for i, s in enumerate(dec.slots):
             if not s.active:
                 continue
             nxt = self._advance_prompt_or_sample(s, logits[i])
@@ -100,29 +182,44 @@ class LMServingEngine:
                 s.tokens.append(nxt)
             s.pos += 1
             done = (len(s.tokens) - s._prompt_len >= s.max_new
-                    or s.pos >= self.max_seq - 1)
+                    or s.pos >= dec.max_seq - 1)
             if done:
                 finished[s.req_id] = list(s.tokens)
                 s.active = False        # slot freed for the next request
                 # same clock domain as add_request: wall time by default,
                 # the caller's logical clock when both pass ``now``
                 t = time.time() if now is None else now
-                self._stats.record_one(t - s.arrival_s)
+                dec.stats.record_one(t - s.arrival_s)
         if finished:
-            self._stats.batches += 1
+            dec.stats.batches += 1
+        return finished
+
+    def tick(self, now: Optional[float] = None) -> Dict[int, List[int]]:
+        """One decode step on every key with active slots (keys never mix
+        in a batch); returns all requests finished this tick."""
+        finished: Dict[int, List[int]] = {}
+        for dec in self._decoders.values():
+            if dec.any_active:
+                finished.update(self._tick_decoder(dec, now))
         return finished
 
     def serve_report(self) -> Dict[str, Dict]:
-        """Measured serving stats in the RNN engine's report shape (no
-        analytical column — the HLS model covers the RNN family only)."""
-        return {"decode": {"measured": self._stats.summary(),
-                           "analytical": None}}
+        """Measured serving stats per schedule key, in the RNN engine's
+        report shape (no analytical column — the HLS model covers the RNN
+        family only; the schedule object is still named so mixed-key decode
+        traffic reads like mixed-key scan traffic)."""
+        return {key: {"schedule": dec.schedule,
+                      "fp": None,
+                      "traces": dec.traces,
+                      "measured": dec.stats.summary(),
+                      "analytical": None}
+                for key, dec in self._decoders.items()}
 
     def run_to_completion(self, max_ticks: int = 512,
                           now: Optional[float] = None) -> Dict[int, List[int]]:
         out: Dict[int, List[int]] = {}
         for _ in range(max_ticks):
             out.update(self.tick(now=now))
-            if not any(s.active for s in self.slots):
+            if not any(d.any_active for d in self._decoders.values()):
                 break
         return out
