@@ -1,0 +1,230 @@
+"""Decode-path benchmark: scheduled, weight-resident decode vs the einsum
+baseline (the PR-4 decode path), plus the batch-1 RNN latency fast path.
+
+``decode_record`` produces the persistent tokens/s record appended to
+BENCH_rnn_kernels.json by ``run.py --json``: per-token wall-clock and
+tokens/s of the jitted LM decode step under each schedule variant, against
+the unscheduled einsum step on the SAME params/cache — with a bit-match
+check on the logits so a speedup can never come from computing something
+else.  The acceptance criterion (>= 1.3x tokens/s at R > 1) reads off the
+best scheduled Pallas variant.
+
+Where the speedup comes from (all schedule-driven, all bit-identical):
+q|k|v and MLP gate|up fused into single [B, d] @ [d, G*h] matmuls, the
+layer loop unrolled over pre-sliced weight-resident layouts instead of a
+``lax.scan`` dynamic-slicing stacked arrays per token, and the packed
+layout derived ONCE per (params, schedule key) outside the per-token
+program (kernels' weight-residency cache).
+
+``smoke`` is the fail-fast CI stage: tiny-model scheduled-vs-einsum
+bit-match + single-step RNN decode conformance + batch-1 fast path
+bit-match; raises on any mismatch.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.hls.resources import estimate_lm_decode
+from repro.kernels.schedule import KernelSchedule
+from repro.registry import get_config
+from repro.testing import tiny_config
+
+
+#: the bench config: a dense decoder large enough that the per-token step is
+#: matmul-dominated (the regime the fusion/residency restructure targets) yet
+#: CPU-container friendly
+def _bench_cfg():
+    cfg = tiny_config(get_config("stablelm-3b"))
+    return cfg.replace(d_model=256, n_layers=4, vocab_size=4096, d_ff=512,
+                       n_heads=8, n_kv_heads=8, head_dim=32)
+
+
+def _setup(cfg, B: int, S: int):
+    from repro.models import build_model
+    from repro.models.decode import cache_specs
+
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    specs = cache_specs(cfg, B, S, "float32")
+    cache = {k: jnp.zeros(s.shape, jnp.dtype(s.dtype))
+             for k, s in specs.items()}
+    toks = jnp.zeros((B, 1), jnp.int32)
+    pos = jnp.full((B,), S // 2, jnp.int32)   # steady-state cache occupancy
+    return params, cache, toks, pos
+
+
+def _time_step(fn, *args, iters: int = 20) -> float:
+    """Steady-state seconds per decode step (min over iters; first call
+    compiles).  The cache is NOT donated here so every call sees identical
+    inputs."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def decode_record(full: bool = False) -> Dict:
+    """The decode-path perf record: scheduled vs einsum, tokens/s."""
+    from repro.models.decode import decode_step, pack_decode_params
+
+    cfg = _bench_cfg()
+    B, S = 4, 128
+    iters = 20 if full else 10
+    params, cache, toks, pos = _setup(cfg, B, S)
+
+    base = jax.jit(lambda p, c, t, q: decode_step(cfg, p, c, t, q))
+    base_s = _time_step(base, params, cache, toks, pos, iters=iters)
+    logits0 = np.asarray(base(params, cache, toks, pos)[0])
+
+    record = {
+        "bench": "lm_decode_step",
+        "config": {"d_model": cfg.d_model, "n_layers": cfg.n_layers,
+                   "d_ff": cfg.d_ff, "vocab": cfg.vocab_size,
+                   "batch": B, "cache_len": S},
+        "baseline": {"label": "einsum", "step_us": base_s * 1e6,
+                     "us_per_token": base_s * 1e6 / B,
+                     "tokens_per_s": B / base_s},
+        "entries": [],
+    }
+
+    reuses = (1, 2, 4, 8) if full else (1, 2, 4)
+    variants = [(f"sched-R{r}-pallas",
+                 KernelSchedule(reuse_factor=r, block_batch=8,
+                                backend="pallas_interpret"))
+                for r in reuses]
+    variants.append(("sched-R4-xla",
+                     KernelSchedule(reuse_factor=4, block_batch=8,
+                                    backend="xla")))
+
+    best = None
+    for label, sched in variants:
+        packed = pack_decode_params(cfg, params, sched)
+        fn = jax.jit(lambda p, pk, c, t, q, _s=sched: decode_step(
+            cfg, p, c, t, q, schedule=_s, packed=pk))
+        # a speedup must never come from computing something else
+        logits1 = np.asarray(fn(params, packed, cache, toks, pos)[0])
+        bitmatch = bool((logits0 == logits1).all())
+        secs = _time_step(fn, params, packed, cache, toks, pos, iters=iters)
+        est = estimate_lm_decode(sched, cfg)
+        entry = {
+            "label": label,
+            "schedule_key": sched.key(),
+            "reuse_factor": sched.reuse_factor,
+            "backend": sched.backend,
+            "step_us": secs * 1e6,
+            "us_per_token": secs * 1e6 / B,
+            "tokens_per_s": B / secs,
+            "speedup_vs_einsum": base_s / secs,
+            "bitmatch": bitmatch,
+            "analytical": {
+                "latency_cycles": est.latency_cycles,
+                "ii_cycles": est.ii_cycles,
+                "dsp": est.dsp,
+                "bram_18k": est.bram_18k,
+            },
+        }
+        record["entries"].append(entry)
+        scheduled_r_gt1 = (sched.reuse_factor > 1
+                           and sched.backend != "xla")
+        if scheduled_r_gt1 and bitmatch and (
+                best is None or entry["speedup_vs_einsum"]
+                > best["speedup_vs_einsum"]):
+            best = entry
+
+    record["acceptance"] = {
+        "criterion": ">= 1.3x tokens/s, scheduled weight-resident decode "
+                     "at R > 1 vs the einsum decode, bit-matched",
+        "schedule_key": None if best is None else best["schedule_key"],
+        "speedup": 0.0 if best is None else best["speedup_vs_einsum"],
+        "passed": best is not None and best["speedup_vs_einsum"] >= 1.3,
+    }
+    return record
+
+
+# ---------------------------------------------------------------------------
+# Fail-fast CI stage
+# ---------------------------------------------------------------------------
+
+
+def smoke() -> None:
+    """Decode smoke: scheduled-vs-einsum bit-match on the tiny model, RNN
+    single-step conformance, batch-1 fast path bit-match.  Raises on any
+    divergence."""
+    from repro.core.rnn.cells import initial_state
+    from repro.kernels.decode_step import rnn_decode_step
+    from repro.models import build_model, rnn_tagger
+    from repro.models.decode import cache_specs, decode_step, \
+        pack_decode_params
+    from repro.models.init import init_params
+    from repro.serving.engine import RNNServingEngine
+
+    # scheduled LM decode bit-match (tiny model, one step, R=2)
+    cfg = tiny_config(get_config("stablelm-3b"))
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    specs = cache_specs(cfg, 2, 16, "float32")
+    cache = {k: jnp.zeros(s.shape, jnp.dtype(s.dtype))
+             for k, s in specs.items()}
+    toks = jnp.asarray([[3], [5]], jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    sched = KernelSchedule(reuse_factor=2, block_batch=8,
+                           backend="pallas_interpret")
+    l0, _ = decode_step(cfg, params, dict(cache), toks, pos)
+    l1, _ = decode_step(cfg, params, dict(cache), toks, pos, schedule=sched,
+                        packed=pack_decode_params(cfg, params, sched))
+    assert bool((np.asarray(l0) == np.asarray(l1)).all()), \
+        "scheduled LM decode diverged from the einsum path"
+    emit("decode/smoke/lm_bitmatch", 0.0, "ok")
+
+    # RNN single-step decode conformance (both cells, R=4)
+    rng = np.random.RandomState(0)
+    for cell, g in (("lstm", 4), ("gru", 3)):
+        H, F = 8, 4
+        W = jnp.asarray(rng.randn(F, g * H).astype(np.float32) * .3)
+        U = jnp.asarray(rng.randn(H, g * H).astype(np.float32) * .3)
+        bshape = (g * H,) if cell == "lstm" else (2, g * H)
+        b = jnp.asarray(rng.randn(*bshape).astype(np.float32) * .1)
+        x = jnp.asarray(rng.randn(3, F).astype(np.float32))
+        st = initial_state(cell, 3, H)
+        h1, _ = rnn_decode_step(cell, x, st, W, U, b, schedule=sched)
+        h0, _ = rnn_decode_step(cell, x, st, W, U, b)
+        assert bool((np.asarray(h1) == np.asarray(h0)).all()), \
+            f"{cell} decode step diverged under {sched.key()}"
+        emit(f"decode/smoke/rnn_{cell}_bitmatch", 0.0, "ok")
+
+    # batch-1 fast path bit-match vs batched predict
+    tcfg = get_config("top-tagging-lstm")
+    tparams = init_params(jax.random.PRNGKey(0),
+                          rnn_tagger.param_specs(tcfg))
+    eng = RNNServingEngine(tcfg, tparams, impl="pallas", max_batch=8)
+    xr = rng.randn(tcfg.rnn.seq_len, tcfg.rnn.input_size).astype(np.float32)
+    one = eng.predict_one(xr, schedule=sched)
+    assert bool((one == eng.predict(xr[None], schedule=sched)[0]).all()), \
+        "predict_one diverged from batched predict"
+    emit("decode/smoke/fast_path_bitmatch", 0.0, "ok")
+
+
+def run(full: bool = False):
+    rec = decode_record(full=full)
+    b = rec["baseline"]
+    emit("decode/einsum", b["step_us"], f"tokens_per_s={b['tokens_per_s']:.0f}")
+    for e in rec["entries"]:
+        emit(f"decode/{e['label']}", e["step_us"],
+             f"tokens_per_s={e['tokens_per_s']:.0f}"
+             f"|speedup={e['speedup_vs_einsum']:.2f}x"
+             f"|bitmatch={e['bitmatch']}|ii={e['analytical']['ii_cycles']}")
+    a = rec["acceptance"]
+    emit("decode/acceptance", a["speedup"] * 1e6,
+         f"schedule={a['schedule_key']}|passed={a['passed']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -198,6 +198,10 @@ def write_json(path: str = "BENCH_rnn_kernels.json",
     # (per-target selected schedule) rides the same persistent record
     from benchmarks import bench_autotune
     doc["autotune"] = bench_autotune.frontier_record(full=full)
+    # the decode path: scheduled weight-resident decode vs the einsum
+    # baseline, tokens/s + per-token wall clock (acceptance >= 1.3x at R>1)
+    from benchmarks import bench_decode
+    doc["decode"] = bench_decode.decode_record(full=full)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
         f.write("\n")

@@ -33,10 +33,11 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 def smoke() -> int:
     """Fast import + conformance check; returns a process exit code."""
     t0 = time.time()
-    from benchmarks import (bench_autotune, bench_kernels,  # noqa: F401
-                            bench_latency_resources, bench_quantization,
-                            bench_roofline, bench_serving,
-                            bench_static_nonstatic, bench_throughput)
+    from benchmarks import (bench_autotune, bench_decode,  # noqa: F401
+                            bench_kernels, bench_latency_resources,
+                            bench_quantization, bench_roofline,
+                            bench_serving, bench_static_nonstatic,
+                            bench_throughput)
     print("smoke/imports,0,ok")
 
     from repro.kernels.schedule import KernelSchedule
@@ -67,6 +68,9 @@ def main() -> None:
     ap.add_argument("--autotune-smoke", action="store_true",
                     help="explorer fail-fast: tiny space, non-empty "
                          "frontier, monotone latency-vs-R (analytical only)")
+    ap.add_argument("--decode-smoke", action="store_true",
+                    help="decode fail-fast: scheduled-vs-einsum bit-match, "
+                         "RNN single-step conformance, batch-1 fast path")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (e.g. roofline,kernels)")
     args, _ = ap.parse_known_args()
@@ -79,18 +83,27 @@ def main() -> None:
         bench_autotune.smoke()
         sys.exit(0)
 
+    if args.decode_smoke:
+        from benchmarks import bench_decode
+        bench_decode.smoke()
+        sys.exit(0)
+
     if args.json is not None:
         from benchmarks import bench_kernels
         doc = bench_kernels.write_json(args.json, full=args.full)
         acc = doc["acceptance"]
         rank = doc["autotune"]["rank_check"]
+        dec = doc["decode"]["acceptance"]
         print(f"json/acceptance,{acc['speedup'] * 1e6:.0f},"
               f"speedup={acc['speedup']:.2f}x|passed={acc['passed']}")
         print(f"json/autotune_rank,{rank['spearman'] * 1e6:.0f},"
               f"spearman={rank['spearman']:.3f}|passed={rank['passed']}")
-        sys.exit(0 if acc["passed"] and rank["passed"] else 1)
+        print(f"json/decode_acceptance,{dec['speedup'] * 1e6:.0f},"
+              f"speedup={dec['speedup']:.2f}x|passed={dec['passed']}")
+        sys.exit(0 if acc["passed"] and rank["passed"] and dec["passed"]
+                 else 1)
 
-    from benchmarks import (bench_autotune, bench_kernels,
+    from benchmarks import (bench_autotune, bench_decode, bench_kernels,
                             bench_latency_resources, bench_quantization,
                             bench_roofline, bench_serving,
                             bench_static_nonstatic, bench_throughput)
@@ -103,6 +116,7 @@ def main() -> None:
         "throughput": bench_throughput,
         "serving": bench_serving,
         "autotune": bench_autotune,
+        "decode": bench_decode,
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

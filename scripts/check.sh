@@ -6,10 +6,14 @@
 #   2. benchmarks/run.py --smoke — bench imports + minimal schedule sweep
 #   3. benchmarks/run.py --autotune-smoke — explorer fail-fast: tiny space,
 #      non-empty Pareto frontier, monotone latency-vs-R (analytical only)
-#   4. benchmarks/run.py --json — hoisted-vs-in-loop perf record + autotune
-#      frontier (BENCH_rnn_kernels.json); fails if the acceptance speedup
-#      regresses or predicted/measured schedule ordering decorrelates
-#   5. tier-1: pytest -x -q   — the full suite, first failure stops
+#   4. benchmarks/run.py --decode-smoke — decode fail-fast: scheduled decode
+#      bit-matches the einsum path, RNN single-step conformance, batch-1
+#      fast path bit-matches batched predict
+#   5. benchmarks/run.py --json — hoisted-vs-in-loop perf record + autotune
+#      frontier + decode tokens/s record (BENCH_rnn_kernels.json); fails if
+#      any acceptance speedup regresses or predicted/measured schedule
+#      ordering decorrelates
+#   6. tier-1: pytest -x -q   — the full suite, first failure stops
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -22,6 +26,9 @@ python benchmarks/run.py --smoke
 
 echo "== autotune smoke =="
 python benchmarks/run.py --autotune-smoke
+
+echo "== decode smoke =="
+python benchmarks/run.py --decode-smoke
 
 echo "== perf record (BENCH_rnn_kernels.json) =="
 python benchmarks/run.py --json

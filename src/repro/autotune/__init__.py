@@ -10,15 +10,19 @@ from repro.autotune.explorer import (  # noqa: F401
     Exploration,
     InfeasibleTargetError,
     explore,
+    explore_decode,
     is_feasible,
     measure_points,
     pareto,
     select,
+    select_decode,
     violation,
 )
 from repro.autotune.space import (  # noqa: F401
     SpaceSpec,
+    decode_legal,
     divisors,
+    enumerate_decode_space,
     enumerate_space,
 )
 from repro.autotune.target import OBJECTIVES, DesignTarget  # noqa: F401

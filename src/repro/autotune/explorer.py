@@ -26,8 +26,10 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.config import ModelConfig
-from repro.core.hls.design_point import DesignPoint, price_point
-from repro.autotune.space import SpaceSpec, enumerate_space
+from repro.core.hls.design_point import (DesignPoint, price_decode_point,
+                                         price_point)
+from repro.autotune.space import (SpaceSpec, enumerate_decode_space,
+                                  enumerate_space)
 from repro.autotune.target import DesignTarget
 
 
@@ -133,6 +135,28 @@ class Exploration:
         return [p.report_row() for p in self.frontier]
 
 
+def _finish(cfg: ModelConfig, target: Optional[DesignTarget],
+            points: Tuple[DesignPoint, ...]) -> Exploration:
+    """Pareto-reduce priced points and rank the target-feasible region —
+    shared by the scan-path and decode-path explorations."""
+    front = pareto(points)
+    if target is None:
+        feas = tuple(sorted(points, key=_OBJECTIVE_RANK["latency"]))
+    else:
+        feas = tuple(sorted((p for p in points if is_feasible(p, target)),
+                            key=_OBJECTIVE_RANK[target.objective]))
+    return Exploration(cfg=cfg, target=target, points=points,
+                       frontier=front, feasible=feas)
+
+
+def _pricing_axes(target: Optional[DesignTarget]):
+    fp = target.fp if target is not None else None
+    clock = target.clock_mhz if target is not None else 200.0
+    part = (target.part if target is not None and target.part is not None
+            else "xcku115")
+    return fp, clock, part
+
+
 def explore(cfg: ModelConfig, target: Optional[DesignTarget] = None,
             spec: Optional[SpaceSpec] = None) -> Exploration:
     """Enumerate, price, and Pareto-reduce the legal schedule space.
@@ -142,20 +166,25 @@ def explore(cfg: ModelConfig, target: Optional[DesignTarget] = None,
     is the one the engine will execute.
     """
     schedules = enumerate_space(cfg, spec)
-    fp = target.fp if target is not None else None
-    clock = target.clock_mhz if target is not None else 200.0
-    part = (target.part if target is not None and target.part is not None
-            else "xcku115")
+    fp, clock, part = _pricing_axes(target)
     points = tuple(price_point(cfg, s, fp, clock_mhz=clock, part=part)
                    for s in schedules)
-    front = pareto(points)
-    if target is None:
-        feas = tuple(sorted(points, key=_OBJECTIVE_RANK["latency"]))
-    else:
-        feas = tuple(sorted((p for p in points if is_feasible(p, target)),
-                            key=_OBJECTIVE_RANK[target.objective]))
-    return Exploration(cfg=cfg, target=target, points=points,
-                       frontier=front, feasible=feas)
+    return _finish(cfg, target, points)
+
+
+def explore_decode(cfg: ModelConfig, target: Optional[DesignTarget] = None,
+                   spec: Optional[SpaceSpec] = None) -> Exploration:
+    """The decode-path exploration: the DECODE-LEGAL slice of the space
+    (static, un-hoisted — see ``space.decode_legal``), every point priced
+    with the single-step estimate (``price_decode_point``: II ~ R, full
+    weight resident) instead of the whole-sequence scan estimate.  The
+    same DesignTarget constraints and objectives apply — a latency budget
+    now reads "per state update" rather than "per sequence"."""
+    schedules = enumerate_decode_space(cfg, spec)
+    fp, clock, part = _pricing_axes(target)
+    points = tuple(price_decode_point(cfg, s, fp, clock_mhz=clock, part=part)
+                   for s in schedules)
+    return _finish(cfg, target, points)
 
 
 def select(cfg: ModelConfig, target: DesignTarget,
@@ -175,6 +204,15 @@ def select(cfg: ModelConfig, target: DesignTarget,
     DSP count, not a wall-clock).
     """
     ex = explore(cfg, target, spec)
+    _check_selectable(ex, target)
+    if measure_top_k <= 0 or target.objective == "resources":
+        return ex.feasible[0]
+    top = list(ex.feasible[:measure_top_k])
+    walls = measure_points(cfg, top, batch=measure_batch)
+    return min(top, key=lambda p: (walls[p.key], p.dsp, p.key))
+
+
+def _check_selectable(ex: Exploration, target: DesignTarget) -> None:
     if not ex.points:
         raise ValueError(
             f"enumerated schedule space is empty for target "
@@ -185,11 +223,20 @@ def select(cfg: ModelConfig, target: DesignTarget,
         nearest = min(ex.points, key=lambda p: (violation(p, target),
                                                 p.latency_cycles, p.key))
         raise InfeasibleTargetError(target, nearest, len(ex.points))
-    if measure_top_k <= 0 or target.objective == "resources":
-        return ex.feasible[0]
-    top = list(ex.feasible[:measure_top_k])
-    walls = measure_points(cfg, top, batch=measure_batch)
-    return min(top, key=lambda p: (walls[p.key], p.dsp, p.key))
+
+
+def select_decode(cfg: ModelConfig, target: DesignTarget,
+                  spec: Optional[SpaceSpec] = None) -> DesignPoint:
+    """Target -> the schedule the single-step decode path should run.
+
+    Decode counterpart of :func:`select`: same constraint/objective
+    machinery over the decode-legal space priced per state update.
+    Analytic-only — the decode wall clock is tracked by the benchmark
+    record (BENCH_rnn_kernels.json), not re-measured here.
+    """
+    ex = explore_decode(cfg, target, spec)
+    _check_selectable(ex, target)
+    return ex.feasible[0]
 
 
 # ---------------------------------------------------------------------------

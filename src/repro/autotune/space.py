@@ -136,3 +136,31 @@ def enumerate_space(cfg: ModelConfig,
         if len(seen) >= spec.max_points:
             break
     return tuple(seen[k] for k in sorted(seen))
+
+
+# ---------------------------------------------------------------------------
+# Decode-legal slice (the single-step kernels of kernels/decode_step.py)
+# ---------------------------------------------------------------------------
+
+
+def decode_legal(schedule: KernelSchedule) -> bool:
+    """True when the single-step decode kernels can execute ``schedule``.
+
+    A decode step has no time axis, so the scan-only degrees of freedom are
+    illegal: mode must be ``"static"`` (ONE weights-resident block serves
+    the step; non-static/pipeline describe per-timestep block chains that
+    do not exist here), and the hoist axes (``hoist_input``,
+    ``hoist_reuse``) and pipeline ``ii`` must be off — there is no input
+    projection to hoist out of a single step.  The reuse factor and
+    backend axes carry over unchanged.
+    """
+    return (schedule.mode == "static" and not schedule.hoist_input
+            and schedule.hoist_reuse == 1 and schedule.ii == 0)
+
+
+def enumerate_decode_space(cfg: ModelConfig,
+                           spec: Optional[SpaceSpec] = None
+                           ) -> Tuple[KernelSchedule, ...]:
+    """The decode-legal slice of the schedule space (deduped, sorted) —
+    what ``autotune.select_decode`` and the decode estimators price."""
+    return tuple(s for s in enumerate_space(cfg, spec) if decode_legal(s))

@@ -9,11 +9,14 @@ from repro.core.hls.design import (  # noqa: F401
 from repro.core.hls.design_point import (  # noqa: F401
     PARETO_AXES,
     DesignPoint,
+    price_decode_point,
     price_point,
 )
 from repro.core.hls.resources import (  # noqa: F401
     FPGA_PARTS,
     ScheduleEstimate,
+    estimate_decode_step,
+    estimate_lm_decode,
     estimate_schedule,
     gate_count,
     resolved_axes,

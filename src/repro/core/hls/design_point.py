@@ -112,3 +112,29 @@ def price_point(cfg: ModelConfig, schedule: KernelSchedule,
         design=estimate_design_for_schedule(cfg, schedule, fp, part=part,
                                             clock_mhz=clock_mhz),
         clock_mhz=clock_mhz)
+
+
+def price_decode_point(cfg: ModelConfig, schedule: KernelSchedule,
+                       fp: Optional[FixedPointConfig] = None, *,
+                       clock_mhz: float = 200.0,
+                       part: str = "xcku115") -> DesignPoint:
+    """Price one decode-legal point for the SINGLE-STEP path.
+
+    ``estimate`` is :func:`~repro.core.hls.resources.estimate_decode_step`
+    — one state update, II ~ R, full weight resident — the structure the
+    ``kernels/decode_step.py`` kernels execute.  ``design`` keeps the
+    table-calibrated full-model fit (the Vivado tables are calibrated on
+    whole-sequence designs; a part that fits the scan fits its single-step
+    engine), so part-fit feasibility stays meaningful while the Pareto
+    axes price the decode step itself.
+    """
+    from repro.core.hls.resources import estimate_decode_step
+
+    assert cfg.rnn is not None, "design points apply to the RNN tagger family"
+    return DesignPoint(
+        schedule=schedule,
+        fp=fp,
+        estimate=estimate_decode_step(schedule, cfg.rnn, fp),
+        design=estimate_design_for_schedule(cfg, schedule, fp, part=part,
+                                            clock_mhz=clock_mhz),
+        clock_mhz=clock_mhz)

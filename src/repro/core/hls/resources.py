@@ -209,3 +209,89 @@ def estimate_schedule(schedule: KernelSchedule, rnn, fp=None
     return ScheduleEstimate(schedule=schedule, latency_cycles=latency,
                             ii_cycles=ii, dsp=dsp, bram_18k=bram,
                             vmem_bytes=vmem)
+
+
+# ---------------------------------------------------------------------------
+# Single-step decode estimates (the paper's single-event, II ~ R regime)
+# ---------------------------------------------------------------------------
+
+
+def estimate_decode_step(schedule: KernelSchedule, rnn, fp=None
+                         ) -> ScheduleEstimate:
+    """What one scheduled RNN decode step costs — the single-event engine.
+
+    The decode kernels (kernels/decode_step.py) run the gate matmuls
+    ``[B, d] @ [d, G*h]`` (d = input + hidden) as R column-tile passes
+    unrolled in-block with the FULL weight matrix resident, so:
+
+      latency_cycles  one step = the R sequential tile passes + pipe depth
+                      (no seq_len factor — the state update IS the step)
+      ii_cycles       ~ R: the block frees after its own tile passes, the
+                      next event enters immediately (paper II 1-in-R)
+      dsp             live multipliers per pass = d x G*h / R (x DSP pack)
+      bram_18k        the resident weight store — R tiles storage, not 1/R:
+                      residency trades multipliers, not memory
+      vmem_bytes      full weight + gate scratch + state (TPU analogue)
+    """
+    total_bits = fp.total_bits if fp is not None else 16
+    g = gate_count(rnn.cell)
+    gate_dim = g * rnn.hidden
+    R = schedule.effective_reuse(gate_dim)
+    d_in = rnn.input_size + rnn.hidden
+    mults = d_in * gate_dim
+    pack = mults_per_dsp(total_bits)
+    bt = schedule.block_batch
+    return ScheduleEstimate(
+        schedule=schedule,
+        latency_cycles=R + _C_PIPE,
+        ii_cycles=R,
+        dsp=int(-(-mults // R) * pack),
+        bram_18k=int(-(-(mults * total_bits) // 18432)),
+        vmem_bytes=4 * (mults + bt * gate_dim + bt * d_in
+                        + 2 * bt * rnn.hidden))
+
+
+def estimate_lm_decode(schedule: KernelSchedule, cfg, fp=None
+                       ) -> ScheduleEstimate:
+    """Per-token estimate of the scheduled dense-decoder step (the LM
+    serving engine's decode path) from the SAME schedule object the keyed
+    decoder executes.
+
+    The scheduled step is a chain of fused matmuls per layer — q|k|v
+    (gate-fused), attention out, MLP in (gate-fused), MLP down — each run
+    as R in-block column-tile passes over resident weights.  Latency sums
+    the chain (each matmul: its effective R passes + pipe depth); II is the
+    widest matmul's R (the paper's single-token initiation interval); DSP
+    counts every layer's live multipliers (all layers resident, like the
+    non-static scan pricing); BRAM/VMEM hold the full resident weights.
+    """
+    total_bits = fp.total_bits if fp is not None else 16
+    d, f = cfg.d_model, cfg.d_ff
+    hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    glu = cfg.mlp_type in ("swiglu", "geglu")
+    # (d_in, d_out) of each fused matmul in the per-layer chain
+    chain = [(d, (hq + 2 * hk) * hd),            # q|k|v gate-fused
+             (hq * hd, d),                       # attention out
+             (d, 2 * f if glu else f),           # MLP in (gate|up fused)
+             (f, d)]                             # MLP down
+    pack = mults_per_dsp(total_bits)
+    latency = dsp = bram = vmem_w = 0
+    ii = 1
+    for d_in, d_out in chain:
+        R = schedule.effective_reuse(d_out)
+        mults = d_in * d_out
+        latency += R + _C_PIPE
+        ii = max(ii, R)
+        dsp += int(-(-mults // R) * pack)
+        bram += int(-(-(mults * total_bits) // 18432))
+        vmem_w += mults
+    L = cfg.n_layers
+    bt = schedule.block_batch
+    return ScheduleEstimate(
+        schedule=schedule,
+        latency_cycles=L * latency,
+        ii_cycles=ii,
+        dsp=L * dsp,
+        bram_18k=L * bram,
+        vmem_bytes=4 * (L * vmem_w + bt * max(o for _, o in chain)
+                        + 2 * bt * d))

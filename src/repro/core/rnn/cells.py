@@ -128,17 +128,21 @@ def _q(x, fp: Optional[FixedPointConfig]):
     return x if fp is None else quantize(x, fp)
 
 
-def lstm_cell_quantized(x_t, state, W, U, b, fp: FixedPointConfig):
+def lstm_cell_quantized(x_t, state, W, U, b, fp: FixedPointConfig, *,
+                        matmul=None):
     """LSTM step with every intermediate on the ap_fixed grid.
 
     Matches hls4ml's datapath: quantized inputs/weights, quantized
     accumulator outputs, LUT-indexed activations (quantized in/out),
-    quantized Hadamard products.
+    quantized Hadamard products.  ``matmul`` injects the gate matmul
+    implementation (the scheduled decode kernel) as in :func:`lstm_cell`;
+    it must be value-equal to ``@`` for the datapath to stay bit-accurate.
     """
+    mm = matmul if matmul is not None else (lambda a, w: a @ w)
     h_prev, c_prev = state
     hdim = h_prev.shape[-1]
     x_t = _q(x_t, fp)
-    z = _q(x_t @ W + h_prev @ U + b, fp)
+    z = _q(mm(x_t, W) + mm(h_prev, U) + b, fp)
     i, f, g, o = (z[..., :hdim], z[..., hdim:2 * hdim],
                   z[..., 2 * hdim:3 * hdim], z[..., 3 * hdim:])
     i = _q(jax.nn.sigmoid(i), fp)
@@ -150,11 +154,13 @@ def lstm_cell_quantized(x_t, state, W, U, b, fp: FixedPointConfig):
     return h_t, (h_t, c_t)
 
 
-def gru_cell_quantized(x_t, state, W, U, b, fp: FixedPointConfig):
+def gru_cell_quantized(x_t, state, W, U, b, fp: FixedPointConfig, *,
+                       matmul=None):
+    mm = matmul if matmul is not None else (lambda a, w: a @ w)
     h_prev = state
     x_t = _q(x_t, fp)
-    zx = _q(x_t @ W + b[0], fp)
-    zh = _q(h_prev @ U + b[1], fp)
+    zx = _q(mm(x_t, W) + b[0], fp)
+    zh = _q(mm(h_prev, U) + b[1], fp)
     zxz, zxr, zxh = jnp.split(zx, 3, axis=-1)
     zhz, zhr, zhh = jnp.split(zh, 3, axis=-1)
     z = _q(jax.nn.sigmoid(zxz + zhz), fp)

@@ -41,8 +41,9 @@ REPRO_PALLAS_INTERPRET=0 or use backend="pallas_tpu".
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from functools import partial
-from typing import Optional
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -113,6 +114,109 @@ def _resolve(schedule: Optional[KernelSchedule],
     if block_batch is not None:
         return schedule.replace(block_batch=block_batch)
     return schedule
+
+
+# ---------------------------------------------------------------------------
+# Weight residency: pack each weight ONCE per (weights identity, schedule key)
+# ---------------------------------------------------------------------------
+
+
+class WeightResidency:
+    """Host-side cache of packed/padded weight layouts.
+
+    The kernels' weight transformations (compute-dtype cast, gate fusion,
+    R-tile layout) are pure functions of the weight arrays and the schedule
+    key, yet before this cache they re-ran inside every call's compiled
+    program.  ``get`` runs the pack function ONCE per (source identity,
+    schedule key) and returns the resident result on every later call — the
+    software analogue of the paper's weights-stay-on-chip static mode.
+
+    Safety: only IMMUTABLE sources are cacheable — every source must be a
+    ``jax.Array`` (in-place mutation is impossible, so an identity hit
+    implies value equality); numpy or other mutable buffers pack uncached,
+    exactly like the pre-cache behavior.  An entry stores a strong
+    reference to every source array, so CPython cannot recycle an ``id``
+    while the entry lives, and a hit additionally verifies each source
+    ``is`` the remembered object.  Tracers never reach the cache — callers
+    bypass it in-trace, where packing stays a traced (and XLA-CSE'd)
+    computation.  Eviction is LRU, bounded BOTH by entry count and by the
+    packed payload's total bytes (LM-scale packs would otherwise pin many
+    model-sized copies in a count-only cache).
+    """
+
+    def __init__(self, max_entries: int = 128,
+                 max_bytes: int = 512 * 1024 * 1024):
+        self.max_entries = max_entries
+        self.max_bytes = max_bytes
+        self.hits = 0
+        self.misses = 0
+        self.bytes = 0
+        self._entries: "OrderedDict[Tuple, Tuple[Tuple, object, int]]" = \
+            OrderedDict()
+
+    @staticmethod
+    def _nbytes(packed) -> int:
+        return sum(getattr(a, "nbytes", 0)
+                   for a in jax.tree_util.tree_leaves(packed))
+
+    def get(self, srcs, key: str, pack: Callable[[], object]):
+        """Packed layout for ``srcs`` (one array or a tuple) under ``key``."""
+        if not isinstance(srcs, tuple):
+            srcs = (srcs,)
+        if not all(isinstance(a, jax.Array)
+                   and not isinstance(a, jax.core.Tracer) for a in srcs):
+            return pack()       # tracer or mutable buffer: never cache
+        ck = (key,) + tuple(id(a) for a in srcs)
+        ent = self._entries.get(ck)
+        if ent is not None and all(a is b for a, b in zip(ent[0], srcs)):
+            self.hits += 1
+            self._entries.move_to_end(ck)
+            return ent[1]
+        self.misses += 1
+        packed = pack()
+        nb = self._nbytes(packed)
+        self._entries[ck] = (srcs, packed, nb)
+        self.bytes += nb
+        while self._entries and (len(self._entries) > self.max_entries
+                                 or self.bytes > self.max_bytes):
+            _, (_, _, old_nb) = self._entries.popitem(last=False)
+            self.bytes -= old_nb
+        return packed
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.bytes = 0
+
+
+#: module-level residency cache shared by the scan wrappers and the decode
+#: kernels (kernels/decode_step.py, models/decode.py pack through it too)
+RESIDENT_WEIGHTS = WeightResidency()
+
+
+def resident(srcs, key: str, pack: Callable[[], object]):
+    """Module-level convenience over :data:`RESIDENT_WEIGHTS`."""
+    return RESIDENT_WEIGHTS.get(srcs, key, pack)
+
+
+def _scan_weights_resident(cell: str, W, U, b, schedule: KernelSchedule):
+    """The Pallas scan kernels compute every gate matmul in f32
+    (``preferred_element_type``/explicit casts in ``_gate_mm`` and
+    ``_hoist_stage``), so the f32 weight layout is schedule-invariant data —
+    pre-cast it once per weights identity instead of re-casting inside every
+    compiled call.  bf16 -> f32 is exact, hence bit-identical to the in-call
+    cast.  The XLA golden path computes in the caller's dtype and is left
+    untouched."""
+    if not schedule.use_pallas:
+        return W, U, b
+
+    def pack():
+        return (jnp.asarray(W, jnp.float32), jnp.asarray(U, jnp.float32),
+                jnp.asarray(b, jnp.float32))
+
+    return resident((W, U, b), f"{cell}-scan-f32", pack)
 
 
 # ---------------------------------------------------------------------------
@@ -233,11 +337,24 @@ def _cell_unrolled(cell: str, xs, W, U, b,
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("schedule", "block_batch"))
 def lstm_scan(xs, W, U, b, *, schedule: Optional[KernelSchedule] = None,
               block_batch: Optional[int] = None):
-    """[B, T, in] -> final hidden [B, h], scheduled by ``schedule``."""
+    """[B, T, in] -> final hidden [B, h], scheduled by ``schedule``.
+
+    Eager wrapper: resolves the schedule and fetches the weights' resident
+    f32 layout from :data:`RESIDENT_WEIGHTS` (packed once per weights
+    identity) before entering the jitted kernel body — repeated calls with
+    the same weight arrays stop re-casting them in-program.  Under an outer
+    jit the inputs are tracers, the cache bypasses itself, and the packing
+    stays in-trace exactly as before.
+    """
     schedule = _resolve(schedule, block_batch)
+    W, U, b = _scan_weights_resident("lstm", W, U, b, schedule)
+    return _lstm_scan_jit(xs, W, U, b, schedule=schedule)
+
+
+@partial(jax.jit, static_argnames=("schedule",))
+def _lstm_scan_jit(xs, W, U, b, *, schedule: KernelSchedule):
     if not schedule.use_pallas:
         return ref.lstm_scan_ref(xs, W, U, b)
     if schedule.mode == "pipeline":
@@ -261,10 +378,17 @@ def lstm_scan(xs, W, U, b, *, schedule: Optional[KernelSchedule] = None,
     return out[:B]
 
 
-@partial(jax.jit, static_argnames=("schedule", "block_batch"))
 def gru_scan(xs, W, U, b, *, schedule: Optional[KernelSchedule] = None,
              block_batch: Optional[int] = None):
+    """GRU counterpart of :func:`lstm_scan` (same eager wrapper + resident
+    f32 weight layout + jitted body split)."""
     schedule = _resolve(schedule, block_batch)
+    W, U, b = _scan_weights_resident("gru", W, U, b, schedule)
+    return _gru_scan_jit(xs, W, U, b, schedule=schedule)
+
+
+@partial(jax.jit, static_argnames=("schedule",))
+def _gru_scan_jit(xs, W, U, b, *, schedule: KernelSchedule):
     if not schedule.use_pallas:
         return ref.gru_scan_ref(xs, W, U, b)
     if schedule.mode == "pipeline":

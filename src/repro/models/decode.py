@@ -6,21 +6,38 @@ Cache layout is spec-driven (same machinery as params) so dry-run lowering
 gets correctly sharded ShapeDtypeStructs: KV caches shard their sequence dim
 over 'model' (flash-decode: the softmax max/sum reductions partition across
 the TP axis), batch over the data axes.
+
+Schedule-driven decode: ``decode_step(..., schedule=)`` routes the per-token
+matmuls of the dense-decoder stack (q|k|v, output projection, MLP) through
+the reuse-tiled, weight-resident kernels of ``repro.kernels.decode_step`` —
+the request's :class:`~repro.kernels.schedule.KernelSchedule` changes what
+the hot path EXECUTES: projections are gate-fused ([B, d] @ [d, G*h],
+packed ONCE per (params, schedule key) via the weight-residency cache), the
+layer loop is unrolled over the pre-sliced resident weights instead of
+dynamic-slicing a stacked scan carry, and Pallas backends run the R
+column-tile passes in-block.  ``schedule=None`` is the unchanged einsum
+golden path, and the scheduled path is bit-identical to it (column tiling
+never splits a K reduction) — enforced by tests/test_decode_schedule.py.
+Families whose step is not matmul-shaped (ssm / hybrid / enc-dec / moe)
+accept the argument and keep the einsum path.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.kernels.decode_step import decode_matmul
+from repro.kernels.ops import resident
+from repro.kernels.schedule import KernelSchedule, schedule_key
 from repro.models import transformer as tf
 from repro.models.attention import decode_attention, decode_attention_masked
 from repro.models.init import ParamSpec, ParamSpecs
-from repro.models.layers import apply_rope, embed, norm
+from repro.models.layers import ACTIVATIONS, apply_rope, embed, norm
 from repro.models.moe import moe_block
 from repro.models.mlp import mlp
 from repro.models.rglru import rglru_decode_step
@@ -152,19 +169,140 @@ def _attn_decode(cfg, x, p, pre, ck, cv, pos, window=0, rope=True):
 
 
 # ---------------------------------------------------------------------------
+# Schedule-driven decode: fused, weight-resident dense-decoder step
+# ---------------------------------------------------------------------------
+
+
+def decode_schedulable(cfg: ModelConfig) -> bool:
+    """Families whose per-token hot path is matmul-shaped and therefore
+    runs the scheduled kernel path: the dense decoder stack (dense / vlm).
+    MoE routing, SSM scans, the hybrid block pattern, and enc-dec cross
+    attention keep the einsum path (a schedule is accepted but ignored)."""
+    return cfg.family in ("dense", "vlm") and not cfg.enc_dec
+
+
+def pack_decode_params(cfg: ModelConfig, params: Dict,
+                       schedule: Optional[KernelSchedule]) -> Dict:
+    """The weight-resident decode layout, packed ONCE per (params identity,
+    schedule key) through the kernels' residency cache.
+
+    Per decoder layer: q|k|v gate-fused into ``__wqkv`` [d, (hq+2*hk)*hd]
+    (the LSTM-style gate packing of the paper, at LM scale), the MLP in/up
+    projections fused into ``__wgu`` (or ``__wup``), the output/down
+    projections flattened 2D, everything cast to the compute dtype, and the
+    remaining per-layer params (norm scales/biases) pre-sliced out of their
+    stacked [L, ...] arrays — so the per-token program re-derives none of
+    it.  Tracer params pack in-trace (bit-identical, just not cached)."""
+    stacked = tf.slice_layer(params, "decoder/")
+    srcs = tuple(stacked[k] for k in sorted(stacked))
+    cdt = jnp.dtype(cfg.compute_dtype)
+    glu = cfg.mlp_type in ("swiglu", "geglu")
+
+    def pack() -> Dict:
+        layers: List[Dict] = []
+        d = cfg.d_model
+        for l in range(cfg.n_layers):
+            p_l = {k: v[l] for k, v in stacked.items()}
+            entry = {k: v for k, v in p_l.items()
+                     if "/attn/w" not in k and "/mlp/w" not in k}
+            entry["__wqkv"] = jnp.concatenate(
+                [p_l[f"decoder/attn/{n}"].reshape(d, -1).astype(cdt)
+                 for n in ("wq", "wk", "wv")], axis=-1)
+            entry["__wo"] = p_l["decoder/attn/wo"].reshape(-1, d).astype(cdt)
+            if glu:
+                entry["__wgu"] = jnp.concatenate(
+                    [p_l["decoder/mlp/w_gate"].astype(cdt),
+                     p_l["decoder/mlp/w_up"].astype(cdt)], axis=-1)
+            else:
+                entry["__wup"] = p_l["decoder/mlp/w_up"].astype(cdt)
+            entry["__wdown"] = p_l["decoder/mlp/w_down"].astype(cdt)
+            layers.append(entry)
+        return {"layers": layers}
+
+    return resident(srcs, f"lm-decode/{schedule_key(schedule)}", pack)
+
+
+def _scheduled_dense_step(cfg: ModelConfig, params: Dict, packed: Dict,
+                          cache: Dict, x: jax.Array, pos: jax.Array,
+                          schedule: KernelSchedule
+                          ) -> Tuple[jax.Array, Dict]:
+    """The fused dense-decoder step under ``schedule``: same math as the
+    einsum branch of :func:`decode_step` (bit-identical — every fused /
+    tiled matmul keeps each output column's full-K reduction), executed as
+    scheduled ``decode_matmul`` calls over the resident packed weights."""
+    B = x.shape[0]
+    d, hq, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    glu = cfg.mlp_type in ("swiglu", "geglu")
+
+    def mm(a, w):
+        return decode_matmul(a, w, schedule=schedule)
+
+    ck_all, cv_all = cache["cache/k"], cache["cache/v"]
+    cks, cvs = [], []
+    h = x
+    for l, p_l in enumerate(packed["layers"]):
+        hn = norm(cfg, h, p_l, "decoder/norm1")
+        z = mm(hn.reshape(B, d), p_l["__wqkv"])
+        q = z[:, :hq * hd].reshape(B, 1, hq, hd)
+        k = z[:, hq * hd:(hq + hk) * hd].reshape(B, 1, hk, hd)
+        v = z[:, (hq + hk) * hd:].reshape(B, 1, hk, hd)
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+        ck = _update_cache(ck_all[l], k.astype(ck_all.dtype), pos)
+        cv = _update_cache(cv_all[l], v.astype(cv_all.dtype), pos)
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads_r", "head_dim")
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads_r", "head_dim")
+        o = decode_attention(q, ck.astype(h.dtype), cv.astype(h.dtype),
+                             pos + 1, window=cfg.attn_window)
+        h = h + mm(o.astype(h.dtype).reshape(B, hq * hd),
+                   p_l["__wo"]).reshape(B, 1, d)
+        h2 = norm(cfg, h, p_l, "decoder/norm2")
+        if glu:
+            act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+            zgu = mm(h2.reshape(B, d), p_l["__wgu"])
+            f = zgu.shape[-1] // 2
+            mid = act(zgu[:, :f]) * zgu[:, f:]
+        else:
+            act = ACTIVATIONS["relu2" if cfg.mlp_type == "relu2" else "gelu"]
+            mid = act(mm(h2.reshape(B, d), p_l["__wup"]))
+        mid = constrain(mid[:, None, :], "batch", "seq_nosp", "ffn")[:, 0]
+        h = h + mm(mid, p_l["__wdown"]).reshape(B, 1, d)
+        cks.append(ck)
+        cvs.append(cv)
+    new_cache = dict(cache)
+    new_cache["cache/k"] = jnp.stack(cks)
+    new_cache["cache/v"] = jnp.stack(cvs)
+    h = norm(cfg, h, params, "final_norm")
+    return tf.logits_fn(cfg, params, h), new_cache
+
+
+# ---------------------------------------------------------------------------
 # Decode step (per family)
 # ---------------------------------------------------------------------------
 
 
 def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
-                tokens: jax.Array, pos: jax.Array
+                tokens: jax.Array, pos: jax.Array, *,
+                schedule: Optional[KernelSchedule] = None,
+                packed: Optional[Dict] = None
                 ) -> Tuple[jax.Array, Dict]:
     """tokens: [b, 1] int32; pos: [b] current positions. Returns
-    (logits [b, 1, V], new cache)."""
+    (logits [b, 1, V], new cache).
+
+    ``schedule`` routes the dense-stack matmuls through the reuse-tiled,
+    weight-resident decode kernels (see module docstring); ``packed`` is
+    the pre-packed layout from :func:`pack_decode_params` (derived — and
+    cached — from ``params`` when omitted).  ``schedule=None`` is the
+    unchanged einsum path, bit-identical to earlier revisions."""
     cdt = jnp.dtype(cfg.compute_dtype)
     x = embed(tokens, params["embed/table"], cdt)
     if cfg.family in ("dense", "vlm", "hybrid") or cfg.enc_dec:
         x = x * math.sqrt(cfg.d_model)
+    if schedule is not None and decode_schedulable(cfg):
+        if packed is None:
+            packed = pack_decode_params(cfg, params, schedule)
+        return _scheduled_dense_step(cfg, params, packed, cache, x, pos,
+                                     schedule)
     if cfg.enc_dec:
         # whisper decoder: sinusoidal position at each sequence's pos
         d = cfg.d_model

@@ -41,7 +41,7 @@ from repro.core.hls import (DesignPoint, HLSDesign, RNNDesignPoint,
 from repro.kernels.schedule import (DEFAULT_SCHEDULE_KEY, KernelSchedule,
                                     schedule_key)
 from repro.models import rnn_tagger
-from repro.serving.batcher import MicroBatcher, Request, _pad_stack
+from repro.serving.batcher import KeyStats, MicroBatcher, Request, _pad_stack
 
 RAGGED_POLICIES = ("bucket", "mask")
 
@@ -69,6 +69,11 @@ class RNNServingEngine:
     _traces: Dict[str, int] = field(default_factory=dict, repr=False)
     _target_points: Dict[Tuple, DesignPoint] \
         = field(default_factory=dict, repr=False)
+    # batch-1 fast path: its own jit traces + counters, so the batched
+    # one-trace-per-key invariant and its stats stay untouched
+    _one_cache: Dict[str, Callable] = field(default_factory=dict, repr=False)
+    _one_traces: Dict[str, int] = field(default_factory=dict, repr=False)
+    _one_stats: Dict[str, KeyStats] = field(default_factory=dict, repr=False)
 
     def __post_init__(self):
         if self.ragged not in RAGGED_POLICIES:
@@ -249,6 +254,57 @@ class RNNServingEngine:
         self.predict(np.zeros((1, r.seq_len, r.input_size), np.float32),
                      schedule=schedule, fp=fp)
 
+    # -- batch-1 latency fast path ------------------------------------------
+
+    def _make_one_infer(self, key: str, sched: KernelSchedule,
+                        fp: Optional[FixedPointConfig]) -> Callable:
+        cfg = self.cfg
+        impl = "pallas" if sched.use_pallas else "xla"
+
+        def infer(params, x):
+            # trace-time side effect: fast-path traces counted separately
+            # from the batched path's (the one-trace-per-key invariant of
+            # the co-batching tests must not see this trace)
+            self._one_traces[key] = self._one_traces.get(key, 0) + 1
+            return rnn_tagger.forward(cfg, params, x, fp=fp, impl=impl,
+                                      schedule=sched)
+
+        return jax.jit(infer)
+
+    def predict_one(self, x: np.ndarray,
+                    schedule: Optional[KernelSchedule] = None,
+                    fp: Optional[FixedPointConfig] = None,
+                    target: Optional[DesignTarget] = None) -> np.ndarray:
+        """Single-event inference: ``[T, in] -> [n_outputs]`` — the paper's
+        single-collision latency scenario.
+
+        Skips the batcher entirely: no queueing, no pad-to-``max_batch``
+        round trip — ONE single-row scheduled step through a dedicated
+        batch-1 jit trace of the request's schedule (row-wise bit-identical
+        to the batched path, so ``predict_one(x) == predict(x[None])[0]``
+        exactly; conformance-enforced).  Steady-state wall-clock is
+        recorded per key (compile calls excluded) and reported by
+        ``serve_report`` as the ``fast_path`` column.
+        """
+        if target is not None and schedule is None:
+            pt = self.schedule_for_target(target)
+            schedule, fp = pt.schedule, fp if fp is not None else pt.fp
+        sched, fpr = self.resolve(schedule, fp)
+        key = self._ensure_key(sched, fpr)   # registers specs for reporting
+        fn = self._one_cache.get(key)
+        if fn is None:
+            fn = self._one_cache[key] = self._make_one_infer(key, sched, fpr)
+        traces_before = self._one_traces.get(key, 0)
+        t0 = time.perf_counter()
+        out = np.asarray(fn(self.params, jnp.asarray(x)[None]))[0]
+        if self._one_traces.get(key, 0) == traces_before:   # steady state
+            self._one_stats.setdefault(key, KeyStats()).record_one(
+                time.perf_counter() - t0)
+        return out
+
+    def one_trace_count(self, key: str) -> int:
+        return self._one_traces.get(key, 0)
+
     # -- schedule-keyed serving ---------------------------------------------
 
     def submit(self, x: np.ndarray,
@@ -376,6 +432,10 @@ class RNNServingEngine:
             }
             if key in resolved_from:
                 report[key]["resolved_key"] = resolved_from[key]
+            if key in self._one_stats:
+                # the batch-1 fast path's steady-state latency, next to the
+                # batched queue's — the paper's single-event column
+                report[key]["fast_path"] = self._one_stats[key].summary()
         return report
 
     # -- paired FPGA design point -------------------------------------------

@@ -13,10 +13,18 @@ of the decode step, and its ``KeyStats`` counters, exactly mirroring the RNN
 engine's keyed jit-cache path.  Requests whose keys differ never share a
 decode batch (they would retrace); requests with no schedule ride the
 ``DEFAULT_SCHEDULE_KEY`` decoder, which preserves the original single-pool
-behavior bit-for-bit.  The transformer decode kernels do not yet consume the
-schedule object (they are not reuse-tiled), so today distinct keys buy
-isolation + per-key reporting; when decode kernels grow schedules the keyed
-trace is already the dispatch point.
+behavior bit-for-bit.
+
+Schedule-DRIVEN decode (PR 5): a keyed decoder's schedule now changes what
+its trace executes — ``decode_step(..., schedule=)`` runs the reuse-tiled,
+weight-resident kernel path (fused q|k|v / MLP gate matmuls, R column-tile
+passes in-block), with the packed weight layout derived ONCE per
+(params, schedule key) at decoder construction and fed to the jit trace as
+an input, so per-key decode batches genuinely differ in executed tiling —
+bit-identically to the einsum path (conformance-enforced).
+``serve_report`` pairs each key's measured tokens/s (decoded tokens over
+decode wall-clock) with ``estimate_lm_decode`` of the SAME schedule object
+— the decode path's measured-vs-analytical two-column table.
 """
 
 from __future__ import annotations
@@ -30,9 +38,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.core.hls.resources import estimate_lm_decode
 from repro.kernels.schedule import (DEFAULT_SCHEDULE_KEY, KernelSchedule,
                                     schedule_key)
-from repro.models.decode import cache_specs, decode_step
+from repro.models.decode import (cache_specs, decode_schedulable, decode_step,
+                                 pack_decode_params)
 from repro.serving.batcher import KeyStats
 
 
@@ -48,13 +58,20 @@ class Slot:
 
 class _KeyedDecoder:
     """One schedule key's continuous-batching state: slot pool + KV cache +
-    the key's single jit trace of the decode step + serving counters."""
+    the key's single jit trace of the decode step + serving counters.
+
+    With a schedule, the trace EXECUTES the scheduled kernel path: the
+    weight-resident packed layout is derived once here (host-side, via the
+    kernels' residency cache) and passed to the jit'd step as an input, so
+    the per-token program re-derives nothing — and two decoders with
+    different schedules compile genuinely different tilings."""
 
     def __init__(self, cfg: ModelConfig, key: str,
                  schedule: Optional[KernelSchedule], *, max_batch: int,
-                 max_seq: int, cache_dtype: str):
+                 max_seq: int, cache_dtype: str, params: Optional[Dict] = None):
         self.key = key
         self.schedule = schedule
+        self.scheduled = schedule is not None and decode_schedulable(cfg)
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.slots = [Slot() for _ in range(max_batch)]
@@ -63,12 +80,17 @@ class _KeyedDecoder:
                       for k, s in specs.items()}
         self.stats = KeyStats()
         self.traces = 0
+        self.tokens = 0                  # decoded tokens (per-key tokens/s)
+        self.decode_s = 0.0              # wall-clock spent in decode steps
+        self.packed = (pack_decode_params(cfg, params, schedule)
+                       if self.scheduled and params is not None else None)
 
-        def step(params, cache, tokens, pos):
+        def step(params, cache, tokens, pos, packed=None):
             # Python side effect runs at TRACE time only: one trace per key
             # is the keyed-cache efficiency criterion (RNN engine parity)
             self.traces += 1
-            return decode_step(cfg, params, cache, tokens, pos)
+            return decode_step(cfg, params, cache, tokens, pos,
+                               schedule=schedule, packed=packed)
 
         self._step = jax.jit(step, donate_argnums=(1,))
 
@@ -116,7 +138,8 @@ class LMServingEngine:
             dec = _KeyedDecoder(self.cfg, key, sched,
                                 max_batch=self.max_batch,
                                 max_seq=self.max_seq,
-                                cache_dtype=self.cache_dtype)
+                                cache_dtype=self.cache_dtype,
+                                params=self.params)
             self._decoders[key] = dec
         return dec
 
@@ -165,13 +188,28 @@ class LMServingEngine:
                       now: Optional[float]) -> Dict[int, List[int]]:
         tokens = np.zeros((dec.max_batch, 1), np.int32)
         pos = np.zeros((dec.max_batch,), np.int32)
+        n_active = 0
         for i, s in enumerate(dec.slots):
             if s.active:
                 tokens[i, 0] = s.tokens[s.pos]
                 pos[i] = s.pos
-        logits, dec.cache = dec._step(
-            self.params, dec.cache, jnp.asarray(tokens), jnp.asarray(pos))
+                n_active += 1
+        traces_before = dec.traces
+        t0 = time.perf_counter()
+        if dec.packed is not None:
+            logits, dec.cache = dec._step(
+                self.params, dec.cache, jnp.asarray(tokens),
+                jnp.asarray(pos), dec.packed)
+        else:
+            logits, dec.cache = dec._step(
+                self.params, dec.cache, jnp.asarray(tokens), jnp.asarray(pos))
         logits = np.asarray(logits[:, 0])
+        # tokens/s bookkeeping: real wall-clock of the decode step (the
+        # latency counters below use the caller's logical clock instead);
+        # the tick that traced/compiled is excluded — steady-state rate
+        if dec.traces == traces_before:
+            dec.decode_s += time.perf_counter() - t0
+            dec.tokens += n_active
 
         finished: Dict[int, List[int]] = {}
         for i, s in enumerate(dec.slots):
@@ -203,17 +241,34 @@ class LMServingEngine:
                 finished.update(self._tick_decoder(dec, now))
         return finished
 
-    def serve_report(self) -> Dict[str, Dict]:
+    def serve_report(self, clock_mhz: float = 200.0) -> Dict[str, Dict]:
         """Measured serving stats per schedule key, in the RNN engine's
-        report shape (no analytical column — the HLS model covers the RNN
-        family only; the schedule object is still named so mixed-key decode
-        traffic reads like mixed-key scan traffic)."""
-        return {key: {"schedule": dec.schedule,
-                      "fp": None,
-                      "traces": dec.traces,
-                      "measured": dec.stats.summary(),
-                      "analytical": None}
-                for key, dec in self._decoders.items()}
+        report shape.  The measured column now carries per-key tokens/s
+        (decoded tokens over decode-step wall-clock) next to the request
+        latency counters; keys whose trace EXECUTES the scheduled kernels
+        pair it with ``estimate_lm_decode`` of the SAME schedule object —
+        the decode path's two-column table.  Schedule-less keys, and
+        schedules on families whose decode step is not matmul-shaped (the
+        einsum fallback), stay estimate-less: an estimate must never
+        describe kernels that did not run."""
+        report: Dict[str, Dict] = {}
+        for key, dec in self._decoders.items():
+            measured = dec.stats.summary()
+            measured["tokens"] = float(dec.tokens)
+            measured["decode_s"] = dec.decode_s
+            measured["tokens_per_s"] = (dec.tokens / dec.decode_s
+                                        if dec.decode_s > 0 else 0.0)
+            analytical = None
+            if dec.scheduled:
+                analytical = estimate_lm_decode(
+                    dec.schedule, self.cfg).report_row(clock_mhz)
+                analytical["scheduled_kernels"] = True
+            report[key] = {"schedule": dec.schedule,
+                           "fp": None,
+                           "traces": dec.traces,
+                           "measured": measured,
+                           "analytical": analytical}
+        return report
 
     def run_to_completion(self, max_ticks: int = 512,
                           now: Optional[float] = None) -> Dict[int, List[int]]:

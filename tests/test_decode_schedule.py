@@ -1,0 +1,431 @@
+"""Schedule-driven decode conformance (PR 5).
+
+The contract under test: a KernelSchedule changes what the decode hot path
+EXECUTES — reuse-tiled, weight-resident single-step kernels — while staying
+bit-identical to the unscheduled einsum golden path:
+
+  * ``rnn_decode_step`` bit-matches the golden cells per
+    (cell x R x dtype x fp);
+  * the scheduled LM ``decode_step`` bit-matches the einsum path, token by
+    token, caches included;
+  * the batch-1 fast path ``predict_one`` bit-matches batched ``predict``
+    AND the padded submit/flush path;
+  * the weight-residency cache returns the identical packed arrays across
+    calls (and never serves a stale entry);
+  * the decode estimators are monotone in R and the decode-legal space /
+    selector behave.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.autotune import (DesignTarget, InfeasibleTargetError, SpaceSpec,
+                            decode_legal, enumerate_decode_space,
+                            select_decode)
+from repro.config import FixedPointConfig
+from repro.core.hls.resources import (estimate_decode_step, estimate_lm_decode,
+                                      gate_count)
+from repro.core.rnn.cells import initial_state
+from repro.kernels import ops
+from repro.kernels.decode_step import (decode_matmul, resident_fused,
+                                       resident_matrix, rnn_decode_step)
+from repro.kernels.schedule import KernelSchedule, schedule_key
+from repro.registry import get_config
+from repro.testing import tiny_config
+
+SCHED = lambda R, backend="pallas_interpret": KernelSchedule(  # noqa: E731
+    reuse_factor=R, block_batch=8, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# decode_matmul: the reuse-tiled weight-resident kernel vs plain dot
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("R", [1, 2, 4, 5, 10])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_decode_matmul_bitmatch(R, dtype):
+    rng = np.random.RandomState(0)
+    dt = jnp.dtype(dtype)
+    x = jnp.asarray(rng.randn(3, 26), dtype=dt)     # ragged M (padded to 8)
+    w = jnp.asarray(rng.randn(26, 80), dtype=dt)
+    got = decode_matmul(x, w, schedule=SCHED(R))
+    want = jnp.dot(x, w)
+    assert got.dtype == want.dtype and got.shape == want.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_decode_matmul_degenerate_single_column_tiles():
+    """R = N (one column per pass) stays value-correct; XLA reduces
+    width-1 dots with a different (still full-K) accumulation strategy, so
+    this degenerate tiling is tolerance-exact rather than bit-exact."""
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(3, 26).astype(np.float32))
+    w = jnp.asarray(rng.randn(26, 80).astype(np.float32))
+    got = np.asarray(decode_matmul(x, w, schedule=SCHED(80)))
+    np.testing.assert_allclose(got, np.asarray(jnp.dot(x, w)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_decode_matmul_xla_backend_is_plain_dot():
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(4, 12).astype(np.float32))
+    w = jnp.asarray(rng.randn(12, 24).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(decode_matmul(x, w, schedule=SCHED(4, "xla"))),
+        np.asarray(jnp.dot(x, w)))
+    np.testing.assert_array_equal(
+        np.asarray(decode_matmul(x, w, schedule=None)),
+        np.asarray(jnp.dot(x, w)))
+
+
+def test_decode_matmul_tpu_alignment_raises():
+    s = SCHED(2, "pallas_tpu")
+    x = jnp.zeros((8, 16), jnp.float32)
+    w = jnp.zeros((16, 80), jnp.float32)     # 40-wide tiles: off-lane
+    with pytest.raises(ValueError, match="128"):
+        decode_matmul(x, w, schedule=s)
+
+
+# ---------------------------------------------------------------------------
+# rnn_decode_step: (cell x R x dtype x fp) vs the golden cells
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cell", ["lstm", "gru"])
+@pytest.mark.parametrize("R", [1, 2, 4])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("fp", [None, FixedPointConfig(16, 6)])
+def test_rnn_decode_step_bitmatch(cell, R, dtype, fp):
+    rng = np.random.RandomState(0)
+    dt = jnp.dtype(dtype)
+    g = gate_count(cell)
+    B, F, H = 3, 6, 12
+    W = jnp.asarray(rng.randn(F, g * H) * .3, dtype=dt)
+    U = jnp.asarray(rng.randn(H, g * H) * .3, dtype=dt)
+    bshape = (g * H,) if cell == "lstm" else (2, g * H)
+    b = jnp.asarray(rng.randn(*bshape) * .1, dtype=dt)
+    x = jnp.asarray(rng.randn(B, F), dtype=dt)
+    state = initial_state(cell, B, H, dt)
+    # run TWO chained steps so the state feedback path is also covered
+    for _ in range(2):
+        h1, s1 = rnn_decode_step(cell, x, state, W, U, b,
+                                 schedule=SCHED(R), fp=fp)
+        h0, s0 = rnn_decode_step(cell, x, state, W, U, b,
+                                 schedule=None, fp=fp)
+        np.testing.assert_array_equal(np.asarray(h1, np.float32),
+                                      np.asarray(h0, np.float32))
+        for a, c in zip(jax.tree.leaves(s1), jax.tree.leaves(s0)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(c, np.float32))
+        state = s0
+
+
+# ---------------------------------------------------------------------------
+# Scheduled LM decode vs the einsum golden path
+# ---------------------------------------------------------------------------
+
+
+def _lm_setup(arch="stablelm-3b", B=2, S=12, cache_dtype="float32"):
+    from repro.models import build_model
+    from repro.models.decode import cache_specs
+
+    cfg = tiny_config(get_config(arch))
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    specs = cache_specs(cfg, B, S, cache_dtype)
+    cache = {k: jnp.zeros(s.shape, jnp.dtype(s.dtype))
+             for k, s in specs.items()}
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    return cfg, params, cache, toks
+
+
+@pytest.mark.parametrize("R,backend", [(1, "pallas_interpret"),
+                                       (2, "pallas_interpret"),
+                                       (4, "xla")])
+def test_lm_scheduled_decode_bitmatch(R, backend):
+    from repro.models.decode import decode_step, pack_decode_params
+
+    cfg, params, cache0, toks = _lm_setup()
+    B = toks.shape[0]
+    s = SCHED(R, backend)
+    packed = pack_decode_params(cfg, params, s)
+    base = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+    sched = jax.jit(lambda p, pk, c, t, pos: decode_step(
+        cfg, p, c, t, pos, schedule=s, packed=pk))
+    c0, c1 = dict(cache0), dict(cache0)
+    for t in range(3):
+        pos = jnp.full((B,), t, jnp.int32)
+        l0, c0 = base(params, c0, toks[:, t:t + 1], pos)
+        l1, c1 = sched(params, packed, c1, toks[:, t:t + 1], pos)
+        np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+        for k in c0:
+            np.testing.assert_array_equal(np.asarray(c0[k]),
+                                          np.asarray(c1[k]))
+
+
+def test_lm_unschedulable_family_falls_back():
+    """Families without a matmul-shaped step accept the schedule and keep
+    the einsum path (bit-identical to schedule=None)."""
+    from repro.models.decode import decode_schedulable, decode_step
+
+    cfg, params, cache0, toks = _lm_setup("mamba2-780m")
+    assert not decode_schedulable(cfg)
+    B = toks.shape[0]
+    pos = jnp.zeros((B,), jnp.int32)
+    l0, _ = decode_step(cfg, params, dict(cache0), toks[:, :1], pos)
+    l1, _ = decode_step(cfg, params, dict(cache0), toks[:, :1], pos,
+                        schedule=SCHED(2))
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    # ... and its serving report must NOT fabricate a dense-stack estimate
+    # for kernels that never ran
+    from repro.serving.lm_engine import LMServingEngine
+
+    eng = LMServingEngine(cfg, params, max_batch=1, max_seq=16)
+    eng.add_request([3, 4], max_new=2, schedule=SCHED(2), now=0.0)
+    eng.run_to_completion(now=1.0)
+    row = eng.serve_report()[schedule_key(SCHED(2))]
+    assert row["analytical"] is None
+    assert row["measured"]["tokens"] > 0
+
+
+def test_lm_engine_keyed_scheduled_decode():
+    """Scheduled keys decode the same tokens as the default key, keep one
+    jit trace each, and serve_report pairs tokens/s with the decode
+    estimate of the SAME schedule object."""
+    from repro.models import build_model
+    from repro.serving.lm_engine import LMServingEngine
+
+    cfg = tiny_config(get_config("stablelm-3b"))
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eng = LMServingEngine(cfg, params, max_batch=2, max_seq=32)
+    s = SCHED(2)
+    prompt = [5, 7, 11]
+    r0 = eng.add_request(prompt, max_new=5, now=0.0)
+    r1 = eng.add_request(prompt, max_new=5, schedule=s, now=0.0)
+    out = eng.run_to_completion(now=1.0)
+    assert out[r0] == out[r1]
+    key = schedule_key(s)
+    assert eng.trace_count(key) == 1
+    assert eng.trace_count("default") == 1
+    rep = eng.serve_report()
+    row = rep[key]
+    assert row["measured"]["tokens"] > 0
+    assert row["measured"]["tokens_per_s"] > 0
+    assert row["analytical"]["ii_cycles"] == 2          # II ~ R
+    assert row["analytical"]["scheduled_kernels"] is True
+    assert rep["default"]["analytical"] is None          # nothing to price
+
+
+# ---------------------------------------------------------------------------
+# Batch-1 fast path
+# ---------------------------------------------------------------------------
+
+
+def _rnn_engine(impl="pallas", **kw):
+    from repro.models import rnn_tagger
+    from repro.models.init import init_params
+    from repro.serving.engine import RNNServingEngine
+
+    cfg = get_config("top-tagging-lstm")
+    params = init_params(jax.random.PRNGKey(0), rnn_tagger.param_specs(cfg))
+    return cfg, RNNServingEngine(cfg, params, impl=impl, max_batch=16, **kw)
+
+
+def test_predict_one_bitmatches_batched_predict():
+    cfg, eng = _rnn_engine()
+    r = cfg.rnn
+    x = np.random.RandomState(0).randn(r.seq_len, r.input_size).astype(
+        np.float32)
+    for sched in (None, SCHED(4), SCHED(2, "xla")):
+        one = eng.predict_one(x, schedule=sched)
+        np.testing.assert_array_equal(one, eng.predict(x[None],
+                                                       schedule=sched)[0])
+        # and the padded submit/flush path (pad-to-max_batch round trip)
+        req = eng.submit(x, schedule=sched, now=0.0)
+        eng.flush(now=1.0, force=True)
+        np.testing.assert_array_equal(np.asarray(req.result), one)
+
+
+def test_predict_one_traces_and_stats_are_separate():
+    cfg, eng = _rnn_engine()
+    r = cfg.rnn
+    x = np.random.RandomState(1).randn(r.seq_len, r.input_size).astype(
+        np.float32)
+    s = SCHED(4)
+    key = schedule_key(s)
+    for _ in range(3):
+        eng.predict_one(x, schedule=s)
+    assert eng.one_trace_count(key) == 1        # one batch-1 trace
+    assert eng.trace_count(key) == 0            # batched path untouched
+    rep = eng.serve_report()
+    assert rep[key]["fast_path"]["served"] == 2.0   # compile call excluded
+    # batched predict afterwards still costs exactly one batched trace
+    eng.predict(x[None], schedule=s)
+    assert eng.trace_count(key) == 1
+
+
+def test_predict_one_accepts_target():
+    cfg, eng = _rnn_engine()
+    r = cfg.rnn
+    x = np.random.RandomState(2).randn(r.seq_len, r.input_size).astype(
+        np.float32)
+    t = DesignTarget(objective="latency")
+    out = eng.predict_one(x, target=t)
+    pt = eng.schedule_for_target(t)
+    np.testing.assert_array_equal(out, eng.predict_one(x,
+                                                       schedule=pt.schedule))
+
+
+# ---------------------------------------------------------------------------
+# Weight residency
+# ---------------------------------------------------------------------------
+
+
+def test_residency_returns_identical_arrays_across_calls():
+    rng = np.random.RandomState(0)
+    w = jnp.asarray(rng.randn(6, 4, 8).astype(np.float32))
+    s = SCHED(2)
+    a = resident_matrix(w, schedule=s, tag="t")
+    b = resident_matrix(w, schedule=s, tag="t")
+    assert a is b                                   # the SAME packed array
+    assert a.shape == (6, 32)
+    # a different schedule key packs (and caches) independently
+    c = resident_matrix(w, schedule=SCHED(4), tag="t")
+    assert c is not a
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(a))
+
+
+def test_residency_fused_identity_and_staleness_safety():
+    rng = np.random.RandomState(1)
+    w1 = jnp.asarray(rng.randn(6, 8).astype(np.float32))
+    w2 = jnp.asarray(rng.randn(6, 8).astype(np.float32))
+    s = SCHED(2)
+    f1 = resident_fused((w1, w2), schedule=s)
+    assert f1 is resident_fused((w1, w2), schedule=s)
+    assert f1.shape == (6, 16)
+    # different source arrays (same shapes) must NOT hit the stale entry
+    w3 = jnp.asarray(rng.randn(6, 8).astype(np.float32))
+    f2 = resident_fused((w1, w3), schedule=s)
+    assert f2 is not f1
+    np.testing.assert_array_equal(np.asarray(f2[:, 8:]), np.asarray(w3))
+
+
+def test_residency_tracer_bypass():
+    """Inside a jit trace the cache must not capture (or serve) tracers."""
+    w = jnp.ones((4, 8), jnp.float32)
+    n_before = len(ops.RESIDENT_WEIGHTS)
+
+    @jax.jit
+    def f(w):
+        return resident_matrix(w, schedule=SCHED(2), tag="trace")
+
+    np.testing.assert_array_equal(np.asarray(f(w)), np.asarray(w))
+    assert len(ops.RESIDENT_WEIGHTS) == n_before
+
+
+def test_residency_eviction_is_bounded():
+    cache = ops.WeightResidency(max_entries=4)
+    arrs = [jnp.full((2, 2), i, jnp.float32) for i in range(8)]
+    for a in arrs:
+        cache.get(a, "k", lambda a=a: a * 2)
+    assert len(cache) == 4
+    # evicted entries repack (miss), live ones hit
+    cache.get(arrs[-1], "k", lambda: arrs[-1] * 2)
+    assert cache.hits == 1
+
+
+def test_residency_eviction_is_byte_bounded():
+    # each packed payload is 64 bytes; a 160-byte budget holds two entries
+    cache = ops.WeightResidency(max_entries=100, max_bytes=160)
+    arrs = [jnp.full((4, 4), i, jnp.float32) for i in range(5)]
+    for a in arrs:
+        cache.get(a, "k", lambda a=a: a * 2)
+    assert len(cache) == 2
+    assert cache.bytes <= 160
+
+
+def test_residency_never_caches_mutable_buffers():
+    """In-place mutation of numpy weights must never be served stale: only
+    immutable jax.Arrays are cacheable, everything else packs per call."""
+    cache = ops.WeightResidency()
+    w = np.ones((2, 2), np.float32)
+    first = cache.get(w, "k", lambda: jnp.asarray(w * 2))
+    w[...] = 5.0                    # in-place update
+    second = cache.get(w, "k", lambda: jnp.asarray(w * 2))
+    assert len(cache) == 0          # nothing was cached
+    np.testing.assert_array_equal(np.asarray(first), 2 * np.ones((2, 2)))
+    np.testing.assert_array_equal(np.asarray(second), 10 * np.ones((2, 2)))
+
+
+def test_pack_decode_params_cached_per_schedule_key():
+    from repro.models.decode import pack_decode_params
+
+    cfg, params, _, _ = _lm_setup()
+    s = SCHED(2)
+    p1 = pack_decode_params(cfg, params, s)
+    p2 = pack_decode_params(cfg, params, s)
+    assert p1 is p2
+    p3 = pack_decode_params(cfg, params, SCHED(4))
+    assert p3 is not p1
+
+
+# ---------------------------------------------------------------------------
+# Pricing + decode-legal space
+# ---------------------------------------------------------------------------
+
+
+def test_estimate_decode_step_monotone_in_R():
+    cfg = get_config("flavor-tagging-lstm")
+    rs = [1, 2, 4, 8]
+    ests = [estimate_decode_step(SCHED(R), cfg.rnn) for R in rs]
+    lats = [e.latency_cycles for e in ests]
+    dsps = [e.dsp for e in ests]
+    assert lats == sorted(lats) and lats[0] < lats[-1]
+    assert dsps == sorted(dsps, reverse=True) and dsps[0] > dsps[-1]
+    for R, e in zip(rs, ests):
+        assert e.ii_cycles == R                      # II ~ R
+        assert e.bram_18k == ests[0].bram_18k        # residency: storage
+        assert e.vmem_bytes == ests[0].vmem_bytes    # does not shrink with R
+
+
+def test_estimate_lm_decode_monotone_in_R():
+    cfg = tiny_config(get_config("stablelm-3b"))
+    ests = [estimate_lm_decode(SCHED(R), cfg) for R in (1, 2, 4)]
+    lats = [e.latency_cycles for e in ests]
+    dsps = [e.dsp for e in ests]
+    assert lats == sorted(lats) and lats[0] < lats[-1]
+    assert dsps == sorted(dsps, reverse=True) and dsps[0] > dsps[-1]
+
+
+def test_decode_space_is_single_step_legal():
+    cfg = get_config("top-tagging-lstm")
+    space = enumerate_decode_space(cfg)
+    assert space, "decode space must not be empty"
+    for s in space:
+        assert decode_legal(s)
+        assert s.mode == "static" and not s.hoist_input
+        assert s.hoist_reuse == 1 and s.ii == 0
+    # the scan-only axes really are pruned: widen the spec, same slice
+    wide = SpaceSpec(hoist=(False, True), iis=(0, 1, 2))
+    assert set(p.key() for p in enumerate_decode_space(cfg, wide)) \
+        == set(p.key() for p in space)
+
+
+def test_select_decode_objectives_and_infeasible():
+    cfg = get_config("top-tagging-lstm")
+    lat = select_decode(cfg, DesignTarget(objective="latency"))
+    res = select_decode(cfg, DesignTarget(objective="resources"))
+    assert lat.latency_cycles <= res.latency_cycles
+    assert res.dsp <= lat.dsp
+    assert lat.ii_cycles == lat.estimate.schedule.effective_reuse(
+        gate_count(cfg.rnn.cell) * cfg.rnn.hidden)
+    # a DSP budget forces reuse up (live multipliers ~ 1/R)
+    tight = select_decode(cfg, DesignTarget(max_dsp=res.dsp,
+                                            objective="latency"))
+    assert tight.dsp <= res.dsp
+    with pytest.raises(InfeasibleTargetError, match="nearest"):
+        select_decode(cfg, DesignTarget(max_dsp=1))
