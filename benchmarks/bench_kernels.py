@@ -202,6 +202,11 @@ def write_json(path: str = "BENCH_rnn_kernels.json",
     # baseline, tokens/s + per-token wall clock (acceptance >= 1.3x at R>1)
     from benchmarks import bench_decode
     doc["decode"] = bench_decode.decode_record(full=full)
+    # the quantized datapath: native int8/int4 resident bytes + wall clock,
+    # gated by the golden-model conformance slice (run.py --json exits
+    # non-zero if the bound is violated)
+    from benchmarks import bench_quant
+    doc["quant"] = bench_quant.quant_record(full=full)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
         f.write("\n")

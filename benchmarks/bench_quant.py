@@ -1,0 +1,230 @@
+"""Quantized-execution benchmark: native int8/int4 scan kernels vs the
+float datapath, gated by the golden-model conformance suite.
+
+``quant_record`` produces the persistent record appended to
+BENCH_rnn_kernels.json by ``run.py --json``: per-fp resident packed weight
+bytes (MEASURED — ``pack_ints(...).nbytes`` — against the analytical
+``packed_weight_bytes``/``estimate_schedule`` pricing, which must agree
+exactly) and the steady-state wall-clock of the flavor-tagging LSTM scan
+under fp in {float, int8, int4}, plus a ``conformance`` block re-running a
+compact (kernel x mode x R x fp) slice of the golden-model suite.  A bound
+violation flips ``conformance.passed`` and ``run.py --json`` exits
+non-zero on it — perf rows for a datapath that no longer matches its
+golden model never land silently.
+
+``smoke`` is the fail-fast CI stage (``run.py --quant-smoke``): the same
+conformance slice plus the native-vs-emulation bitwise identity and the
+measured-equals-priced packing identity; raises on any violation.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.hls.resources import estimate_schedule, gate_count
+from repro.core.quant.fixed_point import packed_weight_bytes
+from repro.kernels.schedule import KernelSchedule
+from repro.registry import get_config
+from repro.testing import assert_quantized_conformance, native_fp_configs
+
+
+#: compact conformance slice: every kernel family, both scan modes, the
+#: R axis, both native widths — tiny shapes, so the whole slice is fast
+_CONF_KERNELS = ("lstm", "gru", "rglru", "reuse_matmul")
+_CONF_MODES = ("static", "nonstatic")
+
+
+def _conformance(full: bool = False) -> Dict:
+    """Run the conformance slice; returns the record block (never raises —
+    the caller gates on ``passed``)."""
+    reuses = (1, 2, 4) if full else (1, 4)
+    cells: list = []
+    max_err, passed = 0.0, True
+    for name, fp in sorted(native_fp_configs().items()):
+        for kernel in _CONF_KERNELS:
+            for mode in _CONF_MODES:
+                if kernel in ("rglru", "reuse_matmul") and mode != "static":
+                    continue        # mode is a scan-cell axis only
+                for r in reuses:
+                    sched = KernelSchedule(reuse_factor=r, mode=mode,
+                                           block_batch=8,
+                                           backend="pallas_interpret")
+                    cell = {"kernel": kernel, "mode": mode, "reuse": r,
+                            "fp": name}
+                    try:
+                        err = assert_quantized_conformance(kernel, sched, fp)
+                        cell.update(max_err=err, ok=True)
+                        max_err = max(max_err, err)
+                    except AssertionError as e:
+                        cell.update(ok=False, error=str(e)[:200])
+                        passed = False
+                    cells.append(cell)
+    return {"criterion": "every (kernel x mode x R x fp) cell within "
+                         "2x fixed_point_error_bound of its numpy integer "
+                         "golden model",
+            "cells": len(cells), "max_err": max_err, "passed": passed,
+            "failures": [c for c in cells if not c["ok"]]}
+
+
+def _scan_inputs(rnn, seed: int = 0):
+    g = gate_count(rnn.cell)
+    rng = np.random.RandomState(seed)
+    xs = jnp.asarray(rng.randn(8, rnn.seq_len, rnn.input_size)
+                     .astype(np.float32))
+    W = jnp.asarray(rng.randn(rnn.input_size, g * rnn.hidden)
+                    .astype(np.float32) * .3)
+    U = jnp.asarray(rng.randn(rnn.hidden, g * rnn.hidden)
+                    .astype(np.float32) * .3)
+    b = jnp.asarray(rng.randn(g * rnn.hidden).astype(np.float32) * .1)
+    return xs, W, U, b
+
+
+def _time_scan(fn, *args, iters: int = 10) -> float:
+    jax.block_until_ready(fn(*args))        # compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def quant_record(full: bool = False) -> Dict:
+    """The quantized-execution record: resident packed bytes + wall-clock
+    per fp on the flavor-tagging LSTM scan, gated by conformance."""
+    from repro.kernels import ops
+    from repro.kernels.quantized import pack_ints
+
+    cfg = get_config("flavor-tagging-lstm")
+    rnn = cfg.rnn
+    g = gate_count(rnn.cell)
+    iters = 10 if full else 5
+    xs, W, U, b = _scan_inputs(rnn)
+    sched = KernelSchedule(reuse_factor=2, block_batch=8,
+                           backend="pallas_interpret")
+
+    record = {
+        "bench": "quantized_scan",
+        "config": {"arch": "flavor-tagging-lstm", "cell": rnn.cell,
+                   "input_size": rnn.input_size, "hidden": rnn.hidden,
+                   "seq_len": rnn.seq_len, "batch": int(xs.shape[0]),
+                   "schedule_key": sched.key()},
+        "entries": [],
+        "conformance": _conformance(full=full),
+    }
+
+    variants = [("float", None)] + sorted(native_fp_configs().items())
+    float_bytes = None
+    for label, fp in variants:
+        secs = _time_scan(
+            lambda a, w, u, bb, _fp=fp: ops.lstm_scan(
+                a, w, u, bb, schedule=sched, fp=_fp),
+            xs, W, U, b, iters=iters)
+        priced = (packed_weight_bytes(rnn.input_size, g * rnn.hidden, fp)
+                  + packed_weight_bytes(rnn.hidden, g * rnn.hidden, fp))
+        if fp is None:
+            measured = int(W.nbytes + U.nbytes)
+            float_bytes = priced
+        else:
+            measured = int(pack_ints(W, fp).nbytes + pack_ints(U, fp).nbytes)
+        est = estimate_schedule(sched, cfg.rnn, fp)
+        entry = {
+            "label": label,
+            "fp": None if fp is None else
+                  f"ap_fixed<{fp.total_bits},{fp.integer_bits}>",
+            "scan_us": secs * 1e6,
+            "resident_weight_bytes": measured,
+            "priced_weight_bytes": priced,
+            "packing_matches_pricing": measured == priced,
+            "bytes_vs_float": priced / float_bytes,
+            "analytical": {"bram_18k": est.bram_18k,
+                           "vmem_bytes": est.vmem_bytes,
+                           "weight_vmem_bytes": est.weight_vmem_bytes},
+        }
+        record["entries"].append(entry)
+
+    by = {e["label"]: e for e in record["entries"]}
+    record["acceptance"] = {
+        "criterion": "int4 resident weight bytes <= 1/4 of float, int8 <= "
+                     "1/2, measured packing == analytical pricing, "
+                     "conformance slice passes",
+        "int4_ratio": by["int4"]["bytes_vs_float"],
+        "int8_ratio": by["int8"]["bytes_vs_float"],
+        "passed": (record["conformance"]["passed"]
+                   and by["int4"]["bytes_vs_float"] <= 0.25
+                   and by["int8"]["bytes_vs_float"] <= 0.5
+                   and all(e["packing_matches_pricing"]
+                           for e in record["entries"])),
+    }
+    return record
+
+
+# ---------------------------------------------------------------------------
+# Fail-fast CI stage
+# ---------------------------------------------------------------------------
+
+
+def smoke() -> None:
+    """Quant smoke: the conformance slice (raises on any bound violation),
+    the native-vs-emulation bitwise identity on a tiny LSTM, and the
+    measured-equals-priced packing identity."""
+    from repro.config import FixedPointConfig
+    from repro.kernels import ops
+    from repro.kernels.quantized import pack_ints
+    from repro.testing import make_quantized_inputs
+
+    conf = _conformance(full=False)
+    if not conf["passed"]:
+        raise AssertionError(
+            f"quantized conformance bound violated in {len(conf['failures'])}"
+            f" cell(s): {conf['failures'][0]['error']}")
+    emit("quant/smoke/conformance", 0.0,
+         f"cells={conf['cells']}|max_err={conf['max_err']:.1e}")
+
+    # native int datapath must be bit-identical to the f32 emulation on
+    # PTQ'd weights — a wall-clock win must never come from different math
+    sched = KernelSchedule(reuse_factor=2, block_batch=8,
+                           backend="pallas_interpret")
+    for name, fp in sorted(native_fp_configs().items()):
+        xs, W, U, b = make_quantized_inputs("lstm", fp, B=3, T=5, F=4, H=8)
+        native = np.asarray(ops.lstm_scan(xs, W, U, b, schedule=sched, fp=fp))
+        emu = np.asarray(ops._emulated_scan_jit(xs, W, U, b, cell="lstm",
+                                                fp=fp))
+        assert bool((native == emu).all()), \
+            f"native {name} scan diverged bitwise from the fp emulation"
+        emit(f"quant/smoke/{name}_bitmatch", 0.0, "ok")
+
+    # packed bytes: measured == priced for both widths + the float baseline
+    rng = np.random.RandomState(0)
+    w = jnp.asarray(rng.randn(21, 32).astype(np.float32))
+    for fp, want in ((FixedPointConfig(8, 3), 21 * 32),
+                     (FixedPointConfig(4, 2), 11 * 32)):
+        got = pack_ints(w, fp).nbytes
+        assert got == want == packed_weight_bytes(21, 32, fp), \
+            f"packing bytes {got} != priced {packed_weight_bytes(21, 32, fp)}"
+    emit("quant/smoke/packing_bytes", 0.0, "ok")
+
+
+def run(full: bool = False):
+    rec = quant_record(full=full)
+    for e in rec["entries"]:
+        emit(f"quant/{e['label']}", e["scan_us"],
+             f"bytes={e['resident_weight_bytes']}"
+             f"|vs_float={e['bytes_vs_float']:.2f}"
+             f"|bram={e['analytical']['bram_18k']}")
+    c = rec["conformance"]
+    emit("quant/conformance", 0.0,
+         f"cells={c['cells']}|max_err={c['max_err']:.1e}|passed={c['passed']}")
+    a = rec["acceptance"]
+    emit("quant/acceptance", 0.0,
+         f"int4_ratio={a['int4_ratio']:.3f}|passed={a['passed']}")
+
+
+if __name__ == "__main__":
+    run()

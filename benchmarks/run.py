@@ -35,9 +35,9 @@ def smoke() -> int:
     t0 = time.time()
     from benchmarks import (bench_autotune, bench_decode,  # noqa: F401
                             bench_kernels, bench_latency_resources,
-                            bench_quantization, bench_roofline,
-                            bench_serving, bench_static_nonstatic,
-                            bench_throughput)
+                            bench_quant, bench_quantization,
+                            bench_roofline, bench_serving,
+                            bench_static_nonstatic, bench_throughput)
     print("smoke/imports,0,ok")
 
     from repro.kernels.schedule import KernelSchedule
@@ -71,6 +71,10 @@ def main() -> None:
     ap.add_argument("--decode-smoke", action="store_true",
                     help="decode fail-fast: scheduled-vs-einsum bit-match, "
                          "RNN single-step conformance, batch-1 fast path")
+    ap.add_argument("--quant-smoke", action="store_true",
+                    help="quantized fail-fast: golden-model conformance "
+                         "slice, native-vs-emulation bitwise identity, "
+                         "packed-bytes == pricing")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (e.g. roofline,kernels)")
     args, _ = ap.parse_known_args()
@@ -88,25 +92,36 @@ def main() -> None:
         bench_decode.smoke()
         sys.exit(0)
 
+    if args.quant_smoke:
+        from benchmarks import bench_quant
+        bench_quant.smoke()
+        sys.exit(0)
+
     if args.json is not None:
         from benchmarks import bench_kernels
         doc = bench_kernels.write_json(args.json, full=args.full)
         acc = doc["acceptance"]
         rank = doc["autotune"]["rank_check"]
         dec = doc["decode"]["acceptance"]
+        qnt = doc["quant"]["acceptance"]
+        conf = doc["quant"]["conformance"]
         print(f"json/acceptance,{acc['speedup'] * 1e6:.0f},"
               f"speedup={acc['speedup']:.2f}x|passed={acc['passed']}")
         print(f"json/autotune_rank,{rank['spearman'] * 1e6:.0f},"
               f"spearman={rank['spearman']:.3f}|passed={rank['passed']}")
         print(f"json/decode_acceptance,{dec['speedup'] * 1e6:.0f},"
               f"speedup={dec['speedup']:.2f}x|passed={dec['passed']}")
+        print(f"json/quant_acceptance,0,"
+              f"int4_ratio={qnt['int4_ratio']:.3f}"
+              f"|conformance={conf['passed']}|passed={qnt['passed']}")
         sys.exit(0 if acc["passed"] and rank["passed"] and dec["passed"]
-                 else 1)
+                 and qnt["passed"] else 1)
 
     from benchmarks import (bench_autotune, bench_decode, bench_kernels,
-                            bench_latency_resources, bench_quantization,
-                            bench_roofline, bench_serving,
-                            bench_static_nonstatic, bench_throughput)
+                            bench_latency_resources, bench_quant,
+                            bench_quantization, bench_roofline,
+                            bench_serving, bench_static_nonstatic,
+                            bench_throughput)
     benches = {
         "latency_resources": bench_latency_resources,
         "static_nonstatic": bench_static_nonstatic,
@@ -117,6 +132,7 @@ def main() -> None:
         "serving": bench_serving,
         "autotune": bench_autotune,
         "decode": bench_decode,
+        "quant": bench_quant,
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

@@ -9,11 +9,15 @@
 #   4. benchmarks/run.py --decode-smoke — decode fail-fast: scheduled decode
 #      bit-matches the einsum path, RNN single-step conformance, batch-1
 #      fast path bit-matches batched predict
-#   5. benchmarks/run.py --json — hoisted-vs-in-loop perf record + autotune
-#      frontier + decode tokens/s record (BENCH_rnn_kernels.json); fails if
-#      any acceptance speedup regresses or predicted/measured schedule
-#      ordering decorrelates
-#   6. tier-1: pytest -x -q   — the full suite, first failure stops
+#   5. benchmarks/run.py --quant-smoke — quantized fail-fast: golden-model
+#      conformance slice (exit non-zero on any bound violation), native
+#      int8/int4 vs emulation bitwise identity, packed bytes == pricing
+#   6. benchmarks/run.py --json — hoisted-vs-in-loop perf record + autotune
+#      frontier + decode tokens/s record + quantized resident-bytes record
+#      (BENCH_rnn_kernels.json); fails if any acceptance speedup regresses,
+#      predicted/measured schedule ordering decorrelates, or the quantized
+#      conformance bound is violated
+#   7. tier-1: pytest -x -q   — the full suite, first failure stops
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -29,6 +33,9 @@ python benchmarks/run.py --autotune-smoke
 
 echo "== decode smoke =="
 python benchmarks/run.py --decode-smoke
+
+echo "== quant smoke =="
+python benchmarks/run.py --quant-smoke
 
 echo "== perf record (BENCH_rnn_kernels.json) =="
 python benchmarks/run.py --json

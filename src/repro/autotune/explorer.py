@@ -29,7 +29,8 @@ from repro.config import ModelConfig
 from repro.core.hls.design_point import (DesignPoint, price_decode_point,
                                          price_point)
 from repro.autotune.space import (SpaceSpec, enumerate_decode_space,
-                                  enumerate_space)
+                                  enumerate_space, native_int_legal)
+from repro.core.quant.fixed_point import is_native_int
 from repro.autotune.target import DesignTarget
 
 
@@ -167,6 +168,10 @@ def explore(cfg: ModelConfig, target: Optional[DesignTarget] = None,
     """
     schedules = enumerate_space(cfg, spec)
     fp, clock, part = _pricing_axes(target)
+    if is_native_int(fp):
+        # the native int bodies cannot hoist/pipeline — prune the points
+        # the quantized kernels would refuse to execute
+        schedules = tuple(s for s in schedules if native_int_legal(s))
     points = tuple(price_point(cfg, s, fp, clock_mhz=clock, part=part)
                    for s in schedules)
     return _finish(cfg, target, points)

@@ -158,6 +158,22 @@ def decode_legal(schedule: KernelSchedule) -> bool:
             and schedule.hoist_reuse == 1 and schedule.ii == 0)
 
 
+def native_int_legal(schedule: KernelSchedule) -> bool:
+    """True when the NATIVE int8/int4 kernel bodies can execute
+    ``schedule``.
+
+    Quantized datapaths never hoist — splitting z = q(xW + hU + b) into a
+    precomputed zx plus an in-loop hU would move the hls4ml quantization
+    points — so ``hoist_input``/``hoist_reuse`` and pipeline mode (which
+    implies the hoist) are illegal, as is a pipeline ``ii``.  Reuse factor,
+    mode static/nonstatic, block_batch and backend carry over: the native
+    scan runs the same per-timestep structure either way, with R column
+    tiles per gate matmul.
+    """
+    return (not schedule.hoist_input and schedule.mode != "pipeline"
+            and schedule.hoist_reuse == 1 and schedule.ii == 0)
+
+
 def enumerate_decode_space(cfg: ModelConfig,
                            spec: Optional[SpaceSpec] = None
                            ) -> Tuple[KernelSchedule, ...]:

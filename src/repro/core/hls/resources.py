@@ -12,7 +12,14 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
+from repro.core.quant.fixed_point import is_native_int, packed_weight_bytes
 from repro.kernels.schedule import KernelSchedule
+
+
+def _act_itemsize(fp) -> int:
+    """Bytes per live activation/state element: native int datapaths hold
+    int8 grid indices (1 byte); float and emulated fp paths hold f32."""
+    return 1 if is_native_int(fp) else 4
 
 
 @dataclass(frozen=True)
@@ -99,6 +106,10 @@ class ScheduleEstimate:
     bram_18k        weight storage (non-static replicates per block; the
                     hoisted input weights are stored once)
     vmem_bytes      TPU analogue: live weight tile + scratch per kernel step
+    weight_vmem_bytes  the weight portion of vmem_bytes alone — under a
+                    native int fp this is the PACKED layout's bytes
+                    (``packed_weight_bytes``: int8 /4, int4 /8 vs f32),
+                    identical to what the residency cache measures
     """
 
     schedule: KernelSchedule
@@ -107,6 +118,7 @@ class ScheduleEstimate:
     dsp: int
     bram_18k: int
     vmem_bytes: int
+    weight_vmem_bytes: int = 0
 
     def latency_us(self, clock_mhz: float = 200.0) -> float:
         return self.latency_cycles / clock_mhz
@@ -126,6 +138,7 @@ class ScheduleEstimate:
             "dsp": self.dsp,
             "bram_18k": self.bram_18k,
             "vmem_bytes": self.vmem_bytes,
+            "weight_vmem_bytes": self.weight_vmem_bytes,
         }
 
 
@@ -193,22 +206,28 @@ def estimate_schedule(schedule: KernelSchedule, rnn, fp=None
         dsp += int(-(-mults_in // hr) * pack)
         bram += int(-(-(mults_in * total_bits) // 18432))
 
-    # TPU: live weight column tile + gate scratch + state, f32; hoisting
-    # swaps the (fin+h) x gw tile for h x gw plus the streamed zx tile.
-    # The pipeline kernel unrolls its R passes in-block with the full U
-    # resident (the replicated-resources design it executes).
+    # TPU: live weight column tile + gate scratch + state; hoisting swaps
+    # the (fin+h) x gw tile for h x gw plus the streamed zx tile.  The
+    # pipeline kernel unrolls its R passes in-block with the full U
+    # resident (the replicated-resources design it executes).  The weight
+    # bytes come from packed_weight_bytes — the SAME formula the residency
+    # packer realizes (f32, or the native int8/int4 packed layout) — and
+    # activations/state shrink to 1 byte on the native datapath.
     gw = (g * rnn.hidden) // R
     bt = schedule.block_batch
     fan_in = rnn.hidden if hoist else rnn.input_size + rnn.hidden
-    weight_vmem = (rnn.hidden * g * rnn.hidden
-                   if schedule.mode == "pipeline" else fan_in * gw)
-    vmem = 4 * (weight_vmem
-                + bt * g * rnn.hidden                     # z/zh scratch
-                + (bt * g * rnn.hidden if hoist else 0)   # zx stream tile
-                + 2 * bt * rnn.hidden)                    # h, c state
+    if schedule.mode == "pipeline":
+        weight_vmem = packed_weight_bytes(rnn.hidden, g * rnn.hidden, fp)
+    else:
+        weight_vmem = packed_weight_bytes(fan_in, gw, fp)
+    act = _act_itemsize(fp)
+    vmem = weight_vmem + act * (
+        bt * g * rnn.hidden                     # z/zh scratch
+        + (bt * g * rnn.hidden if hoist else 0)  # zx stream tile
+        + 2 * bt * rnn.hidden)                   # h, c state
     return ScheduleEstimate(schedule=schedule, latency_cycles=latency,
                             ii_cycles=ii, dsp=dsp, bram_18k=bram,
-                            vmem_bytes=vmem)
+                            vmem_bytes=vmem, weight_vmem_bytes=weight_vmem)
 
 
 # ---------------------------------------------------------------------------
@@ -241,14 +260,21 @@ def estimate_decode_step(schedule: KernelSchedule, rnn, fp=None
     mults = d_in * gate_dim
     pack = mults_per_dsp(total_bits)
     bt = schedule.block_batch
+    # resident weights = the TWO matrices the decode step actually packs
+    # (W: input x G*h, U: hidden x G*h) — per-matrix packed_weight_bytes so
+    # the estimate equals the residency cache's measured packed nbytes
+    weight_vmem = (packed_weight_bytes(rnn.input_size, gate_dim, fp)
+                   + packed_weight_bytes(rnn.hidden, gate_dim, fp))
+    act = _act_itemsize(fp)
     return ScheduleEstimate(
         schedule=schedule,
         latency_cycles=R + _C_PIPE,
         ii_cycles=R,
         dsp=int(-(-mults // R) * pack),
         bram_18k=int(-(-(mults * total_bits) // 18432)),
-        vmem_bytes=4 * (mults + bt * gate_dim + bt * d_in
-                        + 2 * bt * rnn.hidden))
+        vmem_bytes=weight_vmem + act * (bt * gate_dim + bt * d_in
+                                        + 2 * bt * rnn.hidden),
+        weight_vmem_bytes=weight_vmem)
 
 
 def estimate_lm_decode(schedule: KernelSchedule, cfg, fp=None
@@ -284,14 +310,16 @@ def estimate_lm_decode(schedule: KernelSchedule, cfg, fp=None
         ii = max(ii, R)
         dsp += int(-(-mults // R) * pack)
         bram += int(-(-(mults * total_bits) // 18432))
-        vmem_w += mults
+        vmem_w += packed_weight_bytes(d_in, d_out, fp)
     L = cfg.n_layers
     bt = schedule.block_batch
+    act = _act_itemsize(fp)
     return ScheduleEstimate(
         schedule=schedule,
         latency_cycles=L * latency,
         ii_cycles=ii,
         dsp=L * dsp,
         bram_18k=L * bram,
-        vmem_bytes=4 * (L * vmem_w + bt * max(o for _, o in chain)
-                        + 2 * bt * d))
+        vmem_bytes=L * vmem_w + act * (bt * max(o for _, o in chain)
+                                       + 2 * bt * d),
+        weight_vmem_bytes=L * vmem_w)

@@ -13,7 +13,8 @@ off by <= 1 ulp of f32 — negligible against the quantization step itself
 
 from __future__ import annotations
 
-from typing import Dict
+import math
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,37 +23,105 @@ import numpy as np
 from repro.config import FixedPointConfig
 
 
+def grid_constants(fp: FixedPointConfig) -> Tuple[float, float, float]:
+    """The single source of the (scale, lo, hi) grid derivation.
+
+    ``q = clamp(round_or_floor(x * scale), lo, hi) / scale``: lo/hi are the
+    INTEGER rails of the ap_fixed grid (e.g. signed W=8: [-128, 127]).
+    Every quantizer — host (``quantize_np``), device (``quantize``), the
+    Pallas kernel (``kernels/fixed_point.py``) and the native-int packers
+    (``kernels/quantized.py``) — derives its grid from here, so the clip
+    range can never diverge between paths.
+    """
+    scale = fp.scale
+    return scale, fp.min_value * scale, fp.max_value * scale
+
+
+def _apply_grid(y, fp: FixedPointConfig, xp):
+    """Round + saturate/wrap ``y`` (already scaled to the integer grid)
+    using the ``xp`` array namespace — the shared core of both quantizers."""
+    if fp.rounding == "rnd":
+        y = xp.round(y)                  # round-half-even (IEEE default)
+    else:  # trn: truncate toward -inf (hls4ml AP_TRN)
+        y = xp.floor(y)
+    _, lo, hi = grid_constants(fp)
+    if fp.saturation == "sat":
+        y = xp.clip(y, lo, hi)
+    else:  # wrap (AP_WRAP): modular arithmetic
+        span = 2.0 ** fp.total_bits
+        y = xp.mod(y - lo, span) + lo
+    return y
+
+
 def quantize(x: jax.Array, fp: FixedPointConfig) -> jax.Array:
     """Quantize to the ap_fixed grid (returns same dtype, values on grid)."""
     dt = x.dtype
     xf = x.astype(jnp.float32)
-    scale = fp.scale
-    y = xf * scale
-    if fp.rounding == "rnd":
-        y = jnp.round(y)                 # round-half-even (IEEE default)
-    else:  # trn: truncate toward -inf (hls4ml AP_TRN)
-        y = jnp.floor(y)
-    if fp.saturation == "sat":
-        lo = fp.min_value * scale
-        hi = fp.max_value * scale
-        y = jnp.clip(y, lo, hi)
-    else:  # wrap (AP_WRAP): modular arithmetic
-        span = 2.0 ** fp.total_bits
-        y = jnp.mod(y - fp.min_value * scale, span) + fp.min_value * scale
-    return (y / scale).astype(dt)
+    y = _apply_grid(xf * fp.scale, fp, jnp)
+    return (y / fp.scale).astype(dt)
 
 
 def quantize_np(x: np.ndarray, fp: FixedPointConfig) -> np.ndarray:
     """Exact host-side quantization in float64 (used for PTQ of weights)."""
-    scale = fp.scale
-    y = np.asarray(x, np.float64) * scale
-    if fp.rounding == "rnd":
-        y = np.round(y)
-    else:
-        y = np.floor(y)
-    if fp.saturation == "sat":
-        y = np.clip(y, fp.min_value * scale, fp.max_value * scale)
-    return (y / scale).astype(np.float32)
+    y = _apply_grid(np.asarray(x, np.float64) * fp.scale, fp, np)
+    return (y / fp.scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Native integer execution (the int8/int4 kernel datapath)
+# ---------------------------------------------------------------------------
+
+
+def is_native_int(fp: Optional[FixedPointConfig]) -> bool:
+    """True when ``fp`` selects the NATIVE integer kernel bodies.
+
+    The native datapath (kernels/quantized.py) stores weights as int8 /
+    nibble-packed int4 and accumulates gate matmuls in int32.  It covers the
+    signed round-to-nearest saturating grids up to 8 total bits — exactly
+    the configs whose products (<= 2^14) and gate-sum accumulators
+    (<= ~2^21 for tagger fan-ins) fit int32 with headroom.  Everything else
+    (wider words, trn, wrap, unsigned) runs the f32 emulation path.
+    """
+    return (fp is not None and fp.total_bits <= 8 and fp.signed
+            and fp.rounding == "rnd" and fp.saturation == "sat")
+
+
+def native_bits(fp: FixedPointConfig) -> int:
+    """Storage width of the native path: 4 (nibble-packed) or 8."""
+    return 4 if fp.total_bits <= 4 else 8
+
+
+def to_ints(x: jax.Array, fp: FixedPointConfig) -> jax.Array:
+    """Quantize onto the integer grid and return the INT8 grid indices
+    (``round(q * scale)``).  Exact (no extra rounding) when ``x`` is already
+    on the grid — the native kernels' activation/state representation."""
+    scale, lo, hi = grid_constants(fp)
+    y = jnp.clip(jnp.round(x.astype(jnp.float32) * scale), lo, hi)
+    return y.astype(jnp.int8)
+
+
+def from_ints(i: jax.Array, fp: FixedPointConfig,
+              dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`to_ints`: grid indices -> on-grid real values."""
+    return (i.astype(jnp.float32) / fp.scale).astype(dtype)
+
+
+def packed_weight_bytes(k: int, n: int,
+                        fp: Optional[FixedPointConfig]) -> int:
+    """Resident bytes of one [k, n] weight matrix under ``fp`` — the SINGLE
+    formula shared by the residency packer (kernels/quantized.py) and the
+    analytical vmem pricing (core/hls/resources.py), so measured packing and
+    ``estimate_*`` report identical weight bytes.
+
+    float / emulated fp: f32 items (4 bytes).  Native int8: one byte per
+    weight.  Native int4: two weights per byte, nibble-packed along k
+    (odd k pads one row).
+    """
+    if not is_native_int(fp):
+        return 4 * k * n
+    if native_bits(fp) == 8:
+        return k * n
+    return math.ceil(k / 2) * n
 
 
 def quantize_params(params: Dict[str, jax.Array], fp: FixedPointConfig,

@@ -110,11 +110,18 @@ def rnn_layer(
                                 (jnp.moveaxis(xs, 1, 0), ts))
         return final[0] if rnn.cell == "lstm" else final
 
-    if impl == "pallas" and fp is None:
+    if impl == "pallas":
+        from repro.core.quant.fixed_point import is_native_int
         from repro.kernels import ops as kops
-        if rnn.cell == "lstm":
-            return kops.lstm_scan(xs, W, U, b, schedule=schedule)
-        return kops.gru_scan(xs, W, U, b, schedule=schedule)
+
+        # fp=None: the float kernels (bit-identical to before).  Native
+        # integral fp: the int8/int4 kernel bodies.  Emulated fp configs
+        # stay on the XLA quantized cells below — emulation IS the
+        # reference datapath, there is no Pallas body for it.
+        if fp is None or is_native_int(fp):
+            if rnn.cell == "lstm":
+                return kops.lstm_scan(xs, W, U, b, schedule=schedule, fp=fp)
+            return kops.gru_scan(xs, W, U, b, schedule=schedule, fp=fp)
 
     # hoisted input projection on the float XLA path: one batched
     # [b, T, fin] @ [fin, G*h] matmul up front, cells consume zx slices —

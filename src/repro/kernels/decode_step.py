@@ -169,11 +169,24 @@ def rnn_decode_step(cell: str, x_t: jax.Array, state,
     passes, weights resident — and are bit-identical to the golden cells
     for every (cell, R, dtype, fp): the cell equations ARE the golden
     cells', only the matmul implementation is injected.
+
+    Native integral fp on a Pallas schedule runs the int8/int4 step from
+    ``kernels/quantized.py`` instead: the weights' nibble-/byte-packed
+    layout comes from the fp-keyed residency cache and the gate matmuls
+    accumulate in int32 — bit-identical to the emulation cells when the
+    weights are PTQ'd (on-grid), which the conformance suite asserts.
     """
+    from repro.core.quant.fixed_point import is_native_int
     from repro.core.rnn.cells import (gru_cell, gru_cell_quantized, lstm_cell,
                                       lstm_cell_quantized)
 
-    if schedule is not None and schedule.use_pallas:
+    use_pallas = schedule is not None and schedule.use_pallas
+    if fp is not None and is_native_int(fp) and use_pallas:
+        from repro.kernels.quantized import quantized_decode_step
+
+        return quantized_decode_step(cell, x_t, state, W, U, b, fp=fp,
+                                     schedule=schedule)
+    if use_pallas:
         mm = lambda a, w: decode_matmul(a, w, schedule=schedule)  # noqa: E731
     else:
         mm = None

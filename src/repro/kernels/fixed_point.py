@@ -1,22 +1,26 @@
-"""Pallas ap_fixed<W,I> quantization kernel: scale -> round-half-even ->
-saturate -> rescale, fused on-chip (hls4ml's fixed-point datapath stage)."""
+"""Pallas ap_fixed<W,I> quantization kernel (hls4ml's fixed-point datapath
+stage, fused on-chip).
+
+The grid math is NOT derived here: the kernel body calls
+``core.quant.fixed_point.quantize`` — the same scale/round/clip/wrap
+derivation as the host and XLA quantizers (one source of truth), so every
+rounding ("rnd"/"trn") and saturation ("sat"/"wrap") mode behaves
+identically across the three paths (cross-checked in
+tests/test_quantization.py)."""
 
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.config import FixedPointConfig
+from repro.core.quant.fixed_point import quantize
 
 
-def _quant_kernel(x_ref, o_ref, *, scale: float, lo: float, hi: float):
-    x = x_ref[...].astype(jnp.float32) * scale
-    # round-half-even == jnp.round semantics
-    y = jnp.clip(jnp.round(x), lo, hi)
-    o_ref[...] = (y * (1.0 / scale)).astype(o_ref.dtype)
+def _quant_kernel(x_ref, o_ref, *, fp: FixedPointConfig):
+    o_ref[...] = quantize(x_ref[...], fp).astype(o_ref.dtype)
 
 
 def fixed_point_pallas(x: jax.Array, fp: FixedPointConfig, *,
@@ -26,9 +30,7 @@ def fixed_point_pallas(x: jax.Array, fp: FixedPointConfig, *,
     n, m = x.shape
     bn = min(block, n)
     assert n % bn == 0
-    kernel = functools.partial(
-        _quant_kernel, scale=fp.scale,
-        lo=fp.min_value * fp.scale, hi=fp.max_value * fp.scale)
+    kernel = functools.partial(_quant_kernel, fp=fp)
     return pl.pallas_call(
         kernel,
         grid=(n // bn,),

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import math
 
 from repro.config import FixedPointConfig
+from repro.core.quant.fixed_point import is_native_int
 from repro.kernels import ref
 from repro.kernels.fixed_point import fixed_point_pallas
 from repro.kernels.gru_scan import (gru_scan_hoisted_pallas, gru_scan_pallas,
@@ -333,12 +334,51 @@ def _cell_unrolled(cell: str, xs, W, U, b,
 
 
 # ---------------------------------------------------------------------------
+# Fixed-point dispatch: native int bodies vs ap_fixed emulation
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("cell", "fp"))
+def _emulated_scan_jit(xs, W, U, b, *, cell: str,
+                       fp: FixedPointConfig):
+    """The ap_fixed EMULATION scan: the quantized cells from core.rnn.cells
+    (f32 compute, quantize() at every hls4ml datapath point) unrolled over
+    T — the fallback body for every fp ``is_native_int`` does not cover
+    (wide words, trn rounding, wrap saturation, unsigned)."""
+    from repro.core.rnn.cells import (gru_cell_quantized, initial_state,
+                                      lstm_cell_quantized)
+
+    B, T, _ = xs.shape
+    H = U.shape[0]
+    step = lstm_cell_quantized if cell == "lstm" else gru_cell_quantized
+    state = initial_state(cell, B, H, jnp.float32)
+    bf = b.astype(jnp.float32)
+    for t in range(T):
+        _, state = step(xs[:, t].astype(jnp.float32), state, W, U, bf, fp)
+    h = state[0] if cell == "lstm" else state
+    return h.astype(xs.dtype)
+
+
+def _scan_fp_dispatch(cell: str, xs, W, U, b, schedule: KernelSchedule,
+                      fp: FixedPointConfig):
+    """Route a quantized scan: native int bodies for integral fp on a
+    Pallas backend, the f32 emulation otherwise (incl. backend="xla" —
+    the quantized golden reference stays the emulation cells)."""
+    from repro.kernels.quantized import quantized_scan
+
+    if is_native_int(fp) and schedule.use_pallas:
+        return quantized_scan(cell, xs, W, U, b, fp=fp, schedule=schedule)
+    return _emulated_scan_jit(xs, W, U, b, cell=cell, fp=fp)
+
+
+# ---------------------------------------------------------------------------
 # Scheduled scan kernels
 # ---------------------------------------------------------------------------
 
 
 def lstm_scan(xs, W, U, b, *, schedule: Optional[KernelSchedule] = None,
-              block_batch: Optional[int] = None):
+              block_batch: Optional[int] = None,
+              fp: Optional[FixedPointConfig] = None):
     """[B, T, in] -> final hidden [B, h], scheduled by ``schedule``.
 
     Eager wrapper: resolves the schedule and fetches the weights' resident
@@ -347,8 +387,15 @@ def lstm_scan(xs, W, U, b, *, schedule: Optional[KernelSchedule] = None,
     the same weight arrays stop re-casting them in-program.  Under an outer
     jit the inputs are tracers, the cache bypasses itself, and the packing
     stays in-trace exactly as before.
+
+    ``fp`` selects the fixed-point datapath: None is today's float route
+    (bit-identical), an ``is_native_int`` config runs the int8/int4 kernel
+    bodies (kernels/quantized.py) on Pallas backends, any other config runs
+    the ap_fixed emulation cells.
     """
     schedule = _resolve(schedule, block_batch)
+    if fp is not None:
+        return _scan_fp_dispatch("lstm", xs, W, U, b, schedule, fp)
     W, U, b = _scan_weights_resident("lstm", W, U, b, schedule)
     return _lstm_scan_jit(xs, W, U, b, schedule=schedule)
 
@@ -379,10 +426,13 @@ def _lstm_scan_jit(xs, W, U, b, *, schedule: KernelSchedule):
 
 
 def gru_scan(xs, W, U, b, *, schedule: Optional[KernelSchedule] = None,
-             block_batch: Optional[int] = None):
+             block_batch: Optional[int] = None,
+             fp: Optional[FixedPointConfig] = None):
     """GRU counterpart of :func:`lstm_scan` (same eager wrapper + resident
-    f32 weight layout + jitted body split)."""
+    f32 weight layout + jitted body split + fp dispatch)."""
     schedule = _resolve(schedule, block_batch)
+    if fp is not None:
+        return _scan_fp_dispatch("gru", xs, W, U, b, schedule, fp)
     W, U, b = _scan_weights_resident("gru", W, U, b, schedule)
     return _gru_scan_jit(xs, W, U, b, schedule=schedule)
 
@@ -441,9 +491,26 @@ def fixed_point(x, fp: FixedPointConfig):
     return run(x)
 
 
-@partial(jax.jit, static_argnames=("schedule", "block_batch", "block_width"))
+@partial(jax.jit, static_argnames=("fp",))
+def _rglru_emulated_jit(a, bx, *, fp: FixedPointConfig):
+    """ap_fixed emulation of the RG-LRU recurrence: gates and state on the
+    grid, one requantization per step (h = q(q(a)*h + q(bx)))."""
+    from repro.core.quant.fixed_point import quantize
+
+    B, T, W = a.shape
+    aq = quantize(a.astype(jnp.float32), fp)
+    bq = quantize(bx.astype(jnp.float32), fp)
+    h = jnp.zeros((B, W), jnp.float32)
+    hs = []
+    for t in range(T):
+        h = quantize(aq[:, t] * h + bq[:, t], fp)
+        hs.append(h)
+    return jnp.stack(hs, axis=1).astype(a.dtype)
+
+
 def rglru_scan(a, bx, *, schedule: Optional[KernelSchedule] = None,
-               block_batch: Optional[int] = None, block_width: int = 128):
+               block_batch: Optional[int] = None, block_width: int = 128,
+               fp: Optional[FixedPointConfig] = None):
     """a, bx: [B, T, W] -> all recurrence states [B, T, W].
 
     Reuse for this matmul-free kernel serializes the width tiles: per
@@ -454,8 +521,24 @@ def rglru_scan(a, bx, *, schedule: Optional[KernelSchedule] = None,
     stage), i.e. the kernel is already in hoisted form — only the
     elementwise a_t * h recurrence is sequential.  Pipeline mode unrolls
     one block per timestep like nonstatic (slim elementwise blocks).
+
+    ``fp`` as in :func:`lstm_scan`: integral configs run the all-integer
+    recurrence (kernels/quantized.py), others the f32 emulation.
     """
     schedule = _resolve(schedule, block_batch, default_bb=8)
+    if fp is not None:
+        if is_native_int(fp) and schedule.use_pallas:
+            from repro.kernels.quantized import quantized_rglru_scan
+
+            return quantized_rglru_scan(a, bx, fp=fp, schedule=schedule)
+        return _rglru_emulated_jit(a, bx, fp=fp)
+    return _rglru_scan_jit(a, bx, schedule=schedule,
+                           block_width=block_width)
+
+
+@partial(jax.jit, static_argnames=("schedule", "block_width"))
+def _rglru_scan_jit(a, bx, *, schedule: KernelSchedule,
+                    block_width: int = 128):
     B, T, W = a.shape
     if not schedule.use_pallas:
         return ref.rglru_scan_ref(a, bx)
@@ -479,11 +562,36 @@ def rglru_scan(a, bx, *, schedule: Optional[KernelSchedule] = None,
     return out[:B, :, :W]
 
 
-@partial(jax.jit, static_argnames=("reuse", "block_m", "schedule"))
 def reuse_matmul(x, w, *, reuse: int = 1, block_m: int = 128,
-                 schedule: Optional[KernelSchedule] = None):
+                 schedule: Optional[KernelSchedule] = None,
+                 fp: Optional[FixedPointConfig] = None):
     """[M, K] @ [K, N] with K serialized into `reuse` passes (a schedule's
-    reuse_factor overrides the bare ``reuse`` argument)."""
+    reuse_factor overrides the bare ``reuse`` argument).
+
+    ``fp``: integral configs on a Pallas schedule run the int8/int4
+    column-tiled kernel (z = q(q(x) @ q(w)) with int32 accumulation);
+    other fp configs emulate the same quantization points in f32.
+    """
+    if fp is not None:
+        if (is_native_int(fp) and schedule is not None
+                and schedule.use_pallas):
+            from repro.kernels.quantized import quantized_reuse_matmul
+
+            return quantized_reuse_matmul(x, w, fp=fp, schedule=schedule)
+        from repro.core.quant.fixed_point import quantize
+
+        xq = quantize(x.astype(jnp.float32), fp)
+        wq = quantize(w.astype(jnp.float32), fp)
+        out = _reuse_matmul_jit(xq, wq, reuse=reuse, block_m=block_m,
+                                schedule=schedule)
+        return quantize(out, fp).astype(x.dtype)
+    return _reuse_matmul_jit(x, w, reuse=reuse, block_m=block_m,
+                             schedule=schedule)
+
+
+@partial(jax.jit, static_argnames=("reuse", "block_m", "schedule"))
+def _reuse_matmul_jit(x, w, *, reuse: int = 1, block_m: int = 128,
+                      schedule: Optional[KernelSchedule] = None):
     if schedule is not None:
         if not schedule.use_pallas:
             return ref.reuse_matmul_ref(x, w)

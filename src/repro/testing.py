@@ -132,6 +132,182 @@ def assert_schedule_conformance(kernel: str, schedule: KernelSchedule, *,
 
 
 # ---------------------------------------------------------------------------
+# Quantized golden models (numpy integer references) + conformance harness
+# ---------------------------------------------------------------------------
+#
+# The native int8/int4 kernels (kernels/quantized.py) are verified against
+# INDEPENDENT numpy references that re-implement each cell's hls4ml
+# quantization points with integer matmuls (exact int32 accumulation, like
+# the hardware) and f32 activations.  Inputs come PTQ'd (weights on the fp
+# grid), under which native == emulation is bit-exact; the only legal
+# divergence from the numpy golden is an activation landing a half-ulp away
+# from a rounding tie (numpy's exp vs XLA's — one grid step), hence the
+# default tolerance of 2 x fixed_point_error_bound = one grid step.
+
+#: the configs the conformance suite pins for the native datapath:
+#: ap_fixed<8,3> (int8 storage, scale 2^5) and ap_fixed<4,2> (nibble-packed)
+def native_fp_configs():
+    from repro.config import FixedPointConfig
+
+    return {"int8": FixedPointConfig(8, 3), "int4": FixedPointConfig(4, 2)}
+
+
+def _np_sigmoid(x):
+    return (1.0 / (1.0 + np.exp(-x.astype(np.float32)))).astype(np.float32)
+
+
+def _np_tanh(x):
+    return np.tanh(x.astype(np.float32))
+
+
+def _np_ints(x, fp):
+    """On-grid f32 values -> integer grid indices (exact)."""
+    return np.round(np.asarray(x, np.float64) * fp.scale).astype(np.int64)
+
+
+def quantized_golden_lstm(xs, W, U, b, fp) -> np.ndarray:
+    """Numpy integer reference of the quantized LSTM scan: int64 gate
+    accumulators over PTQ'd weights, quantize_np at every datapath point of
+    ``cells.lstm_cell_quantized``.  Returns the final hidden state."""
+    from repro.core.quant.fixed_point import quantize_np
+
+    q = lambda v: quantize_np(v, fp)                       # noqa: E731
+    xs = np.asarray(xs, np.float32)
+    Wq, Uq = _np_ints(q(np.asarray(W)), fp), _np_ints(q(np.asarray(U)), fp)
+    bq = q(np.asarray(b))
+    B, T, _ = xs.shape
+    H = np.asarray(U).shape[0]
+    inv2 = np.float32(1.0 / (fp.scale * fp.scale))
+    h = np.zeros((B, H), np.float32)
+    c = np.zeros((B, H), np.float32)
+    for t in range(T):
+        xi = _np_ints(q(xs[:, t]), fp)
+        hi = _np_ints(h, fp)
+        z = q((xi @ Wq).astype(np.float32) * inv2
+              + (hi @ Uq).astype(np.float32) * inv2 + bq)
+        i, f, g, o = (z[:, :H], z[:, H:2 * H], z[:, 2 * H:3 * H], z[:, 3 * H:])
+        i, f, o = q(_np_sigmoid(i)), q(_np_sigmoid(f)), q(_np_sigmoid(o))
+        g = q(_np_tanh(g))
+        c = q(q(f * c) + q(i * g))
+        h = q(o * q(_np_tanh(c)))
+    return h
+
+
+def quantized_golden_gru(xs, W, U, b, fp) -> np.ndarray:
+    """Numpy integer reference of the quantized GRU (reset_after) scan."""
+    from repro.core.quant.fixed_point import quantize_np
+
+    q = lambda v: quantize_np(v, fp)                       # noqa: E731
+    xs = np.asarray(xs, np.float32)
+    Wq, Uq = _np_ints(q(np.asarray(W)), fp), _np_ints(q(np.asarray(U)), fp)
+    bq = q(np.asarray(b))
+    B, T, _ = xs.shape
+    H = np.asarray(U).shape[0]
+    inv2 = np.float32(1.0 / (fp.scale * fp.scale))
+    h = np.zeros((B, H), np.float32)
+    for t in range(T):
+        xi = _np_ints(q(xs[:, t]), fp)
+        hi = _np_ints(h, fp)
+        zx = q((xi @ Wq).astype(np.float32) * inv2 + bq[0])
+        zh = q((hi @ Uq).astype(np.float32) * inv2 + bq[1])
+        zxz, zxr, zxh = np.split(zx, 3, axis=-1)
+        zhz, zhr, zhh = np.split(zh, 3, axis=-1)
+        z = q(_np_sigmoid(zxz + zhz))
+        r = q(_np_sigmoid(zxr + zhr))
+        hh = q(_np_tanh(q(zxh + q(r * zhh))))
+        h = q(q(z * h) + q((1.0 - z) * hh))
+    return h
+
+
+def quantized_golden_rglru(a, bx, fp) -> np.ndarray:
+    """Numpy integer reference of the quantized RG-LRU recurrence — ALL
+    integer arithmetic (the native kernel is matmul-free), so the kernel
+    must match bit-for-bit."""
+    a, bx = np.asarray(a, np.float32), np.asarray(bx, np.float32)
+    from repro.core.quant.fixed_point import quantize_np
+
+    lo = int(round(fp.min_value * fp.scale))
+    hi = int(round(fp.max_value * fp.scale))
+    F = fp.fractional_bits
+    ai = _np_ints(quantize_np(a, fp), fp)
+    bi = _np_ints(quantize_np(bx, fp), fp)
+    B, T, W = a.shape
+    h = np.zeros((B, W), np.int64)
+    hs = []
+    for t in range(T):
+        acc = ai[:, t] * h + (bi[:, t] << F)
+        # round-half-even of acc / 2^F on the integer grid, then saturate
+        h = np.clip(np.round(acc.astype(np.float64) / fp.scale), lo, hi
+                    ).astype(np.int64)
+        hs.append(h)
+    return (np.stack(hs, axis=1) / fp.scale).astype(np.float32)
+
+
+def quantized_golden_reuse_matmul(x, w, fp) -> np.ndarray:
+    """Numpy integer reference of the quantized scheduled matmul
+    z = q(q(x) @ q(w)) — exact int accumulation, must match bit-for-bit."""
+    from repro.core.quant.fixed_point import quantize_np
+
+    xi = _np_ints(quantize_np(np.asarray(x), fp), fp)
+    wi = _np_ints(quantize_np(np.asarray(w), fp), fp)
+    acc = (xi @ wi).astype(np.float32) / np.float32(fp.scale * fp.scale)
+    return quantize_np(acc, fp)
+
+
+QUANTIZED_GOLDENS = {
+    "lstm": quantized_golden_lstm,
+    "gru": quantized_golden_gru,
+    "rglru": quantized_golden_rglru,
+    "reuse_matmul": quantized_golden_reuse_matmul,
+}
+
+
+def make_quantized_inputs(kernel: str, fp, *, dtype: str = "float32",
+                          seed: int = 0, **shape_kw) -> Tuple:
+    """make_kernel_inputs with the WEIGHTS PTQ'd onto the fp grid (exact
+    host-side quantize_np) — the regime where native == emulation bitwise;
+    activations/inputs stay raw, the datapath quantizes them."""
+    import jax.numpy as jnp
+
+    from repro.core.quant.fixed_point import quantize_np
+
+    inputs = make_kernel_inputs(kernel, dtype=dtype, seed=seed, **shape_kw)
+    if kernel in ("lstm", "gru"):
+        xs, W, U, b = inputs
+        return (xs,) + tuple(jnp.asarray(quantize_np(np.asarray(v), fp))
+                             for v in (W, U, b))
+    return inputs
+
+
+def assert_quantized_conformance(kernel: str, schedule: KernelSchedule,
+                                 fp, *, tol: Optional[float] = None,
+                                 seed: int = 0, **shape_kw) -> float:
+    """Run one (kernel x schedule x fp) cell against its numpy integer
+    golden model.  Default tolerance: ONE grid step
+    (2 x fixed_point_error_bound) — the matmul/Hadamard datapath is exact,
+    only an activation rounding tie may move a value one step.
+
+    Returns the max abs error; raises AssertionError beyond tolerance.
+    """
+    from repro.core.quant.fixed_point import fixed_point_error_bound
+    from repro.kernels import ops
+
+    scheduled, _ = ops.SCHEDULED_KERNELS[kernel]
+    inputs = make_quantized_inputs(kernel, fp, seed=seed, **shape_kw)
+    got = np.asarray(scheduled(*inputs, schedule=schedule, fp=fp),
+                     np.float32)
+    want = QUANTIZED_GOLDENS[kernel](*inputs, fp)
+    assert got.shape == want.shape, (kernel, schedule, got.shape, want.shape)
+    err = float(np.max(np.abs(got - want))) if got.size else 0.0
+    limit = 2.0 * fixed_point_error_bound(fp) if tol is None else tol
+    assert err <= limit, (
+        f"{kernel} diverged from quantized golden model under {schedule} "
+        f"fp=ap_fixed<{fp.total_bits},{fp.integer_bits}>: max_err={err:.3e} "
+        f"> {limit:.3e} (seed={seed}, shapes={shape_kw})")
+    return err
+
+
+# ---------------------------------------------------------------------------
 # End-to-end serving conformance (engine output vs the lax.scan golden model)
 # ---------------------------------------------------------------------------
 

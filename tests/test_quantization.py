@@ -82,6 +82,128 @@ def test_saturates_diagnostic():
     assert float(saturates(x, fp)) == pytest.approx(0.5)
 
 
+# -- property tests: host/device agreement, saturation, error bound ----------
+
+
+@given(total=st.integers(4, 22), integer=st.integers(1, 10),
+       rnd=st.booleans(), sat=st.booleans())
+@settings(max_examples=30, deadline=None)
+def test_quantize_and_quantize_np_agree(total, integer, rnd, sat):
+    """One grid derivation (grid_constants/_apply_grid): the host f64 and
+    device f32 quantizers agree on every (W, I, rounding, saturation)."""
+    if integer >= total:
+        return
+    fp = FixedPointConfig(total_bits=total, integer_bits=integer,
+                          rounding="rnd" if rnd else "trn",
+                          saturation="sat" if sat else "wrap")
+    x = np.random.RandomState(total * 31 + integer).randn(256) \
+        .astype(np.float32) * 3
+    a = quantize_np(x, fp)
+    b = np.asarray(quantize(jnp.asarray(x), fp))
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+@given(total=st.integers(4, 20), integer=st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_saturates_consistent_with_clip_range(total, integer):
+    """saturates() flags exactly the entries quantize() clamps to a rail."""
+    if integer >= total:
+        return
+    fp = FixedPointConfig(total_bits=total, integer_bits=integer)
+    x = np.random.RandomState(total + 99 * integer).randn(256) \
+        .astype(np.float32) * (2.0 ** integer)
+    frac = float(saturates(jnp.asarray(x), fp))
+    outside = float(np.mean((x > fp.max_value) | (x < fp.min_value)))
+    assert frac == pytest.approx(outside)
+    # every flagged entry lands ON a rail after quantization
+    q = quantize_np(x, fp)
+    mask = (x > fp.max_value) | (x < fp.min_value)
+    if mask.any():
+        rails = np.isin(q[mask], [fp.max_value, fp.min_value])
+        assert rails.all()
+
+
+@given(total=st.integers(4, 20), integer=st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_error_bound_bounds_round_trip(total, integer):
+    """fixed_point_error_bound is a true bound on the quantization error of
+    every in-range value — and tight within 2x (some value comes within a
+    factor of two of it)."""
+    if integer >= total:
+        return
+    fp = FixedPointConfig(total_bits=total, integer_bits=integer)
+    r = np.random.RandomState(total * 7 + integer)
+    span = min(float(fp.max_value), 4.0)
+    x = (r.rand(512).astype(np.float32) * 2 - 1) * span
+    q = quantize_np(x, fp)
+    err = np.abs(q - x)
+    bound = fixed_point_error_bound(fp)
+    assert err.max() <= bound + 1e-7
+    assert err.max() >= bound / 2 - 1e-7         # tightness witness
+
+
+@given(total=st.integers(4, 8), integer=st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_native_int_round_trip(total, integer):
+    """to_ints/from_ints: grid indices are the exact integer image of
+    quantize() for every native-eligible config."""
+    from repro.core.quant.fixed_point import from_ints, to_ints
+
+    if integer >= total:
+        return
+    fp = FixedPointConfig(total_bits=total, integer_bits=integer)
+    x = jnp.asarray(np.random.RandomState(total).randn(128)
+                    .astype(np.float32))
+    q = quantize(x, fp)
+    i = to_ints(q, fp)
+    assert np.asarray(i).min() >= -(2 ** (total - 1))
+    assert np.asarray(i).max() <= 2 ** (total - 1) - 1
+    np.testing.assert_array_equal(np.asarray(from_ints(i, fp)),
+                                  np.asarray(q))
+
+
+# -- Pallas quantizer cross-check (single source of truth) --------------------
+
+
+def _registered_fp_grid():
+    """Every (W, I, rounding, saturation) combination the cross-check pins —
+    the paper's grid plus the native-int configs plus trn/wrap corners."""
+    fps = [FixedPointConfig(16, 6), FixedPointConfig(8, 3),
+           FixedPointConfig(4, 2), FixedPointConfig(12, 4),
+           FixedPointConfig(16, 6, rounding="trn"),
+           FixedPointConfig(8, 4, saturation="wrap"),
+           FixedPointConfig(10, 3, rounding="trn", saturation="wrap")]
+    return fps
+
+
+@pytest.mark.parametrize("fp", _registered_fp_grid(),
+                         ids=lambda fp: f"ap{fp.total_bits}_{fp.integer_bits}"
+                         f"_{fp.rounding}_{fp.saturation}")
+def test_fixed_point_pallas_matches_reference_quantizer(fp):
+    """The Pallas kernel body delegates to core.quant.fixed_point.quantize
+    (one scale/clip derivation): every registered config — including
+    truncation and wrap modes it used to silently ignore — must match both
+    the device and host quantizers exactly."""
+    from repro.kernels.fixed_point import fixed_point_pallas
+
+    x = jnp.asarray(np.random.RandomState(fp.total_bits).randn(64, 32)
+                    .astype(np.float32) * 4)
+    got = np.asarray(fixed_point_pallas(x, fp, interpret=True))
+    np.testing.assert_array_equal(got, np.asarray(quantize(x, fp)))
+    np.testing.assert_allclose(got, quantize_np(np.asarray(x), fp),
+                               atol=1e-6)
+
+
+def test_ops_fixed_point_wrapper_matches():
+    from repro.kernels import ops
+
+    fp = FixedPointConfig(8, 3)
+    x = jnp.asarray(np.random.RandomState(3).randn(5, 7, 16)
+                    .astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(ops.fixed_point(x, fp)),
+                                  np.asarray(quantize(x, fp)))
+
+
 # -- AUC machinery ------------------------------------------------------------
 
 def test_binary_auc_perfect_and_random():

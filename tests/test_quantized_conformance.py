@@ -1,0 +1,458 @@
+"""The quantized conformance tier: native int8/int4 kernel bodies vs
+numpy integer golden models, emulation bit-identity, fp-keyed residency
+packing, fp-aware pricing, serving reports, autotune feasibility, and the
+paper's precision-vs-AUC regression (Figs. 6-9 protocol).
+
+Every (kernel x mode x R x fp) cell must stay inside its
+``fixed_point_error_bound``-derived tolerance; the matmul/Hadamard parts
+of the datapath are exact, so observed errors are ~0 (only an activation
+rounding tie may legally move a value one grid step).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FixedPointConfig
+from repro.core.quant.fixed_point import (fixed_point_error_bound,
+                                          is_native_int, packed_weight_bytes,
+                                          quantize_np, to_ints)
+from repro.kernels.schedule import KernelSchedule, schedule_key
+from repro.testing import (assert_quantized_conformance, make_kernel_inputs,
+                           make_quantized_inputs, native_fp_configs)
+
+NATIVE_FPS = native_fp_configs()
+KERNELS = ("lstm", "gru", "rglru", "reuse_matmul")
+MODES = ("static", "nonstatic")
+REUSES = (1, 2, 4)
+
+
+def _sched(mode="static", R=1, backend="pallas_interpret", bb=8):
+    return KernelSchedule(reuse_factor=R, mode=mode, backend=backend,
+                          block_batch=bb)
+
+
+# ---------------------------------------------------------------------------
+# The (kernel x mode x R x fp) conformance grid
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("R", REUSES)
+@pytest.mark.parametrize("fp_name", sorted(NATIVE_FPS))
+def test_quantized_conformance_cell(kernel, mode, R, fp_name):
+    err = assert_quantized_conformance(
+        kernel, _sched(mode=mode, R=R), NATIVE_FPS[fp_name])
+    assert err <= 2.0 * fixed_point_error_bound(NATIVE_FPS[fp_name])
+
+
+@pytest.mark.parametrize("kernel", ("lstm", "gru"))
+@pytest.mark.parametrize("fp_name", sorted(NATIVE_FPS))
+def test_quantized_conformance_xla_backend(kernel, fp_name):
+    """The emulation fallback (backend=xla) must satisfy the same golden
+    model — native and emulated routes share the quantization points."""
+    assert_quantized_conformance(kernel, _sched(backend="xla"),
+                                 NATIVE_FPS[fp_name])
+
+
+@pytest.mark.parametrize("kernel", ("rglru", "reuse_matmul"))
+@pytest.mark.parametrize("fp_name", sorted(NATIVE_FPS))
+def test_matmul_free_cells_bit_exact(kernel, fp_name):
+    """Cells without activations have NO legal divergence: all-integer
+    datapaths must match the numpy golden bit-for-bit."""
+    err = assert_quantized_conformance(kernel, _sched(R=2),
+                                       NATIVE_FPS[fp_name])
+    assert err == 0.0, err
+
+
+@pytest.mark.parametrize("cell", ("lstm", "gru"))
+@pytest.mark.parametrize("fp_name", sorted(NATIVE_FPS))
+@pytest.mark.parametrize("seed", (0, 1, 2))
+def test_native_matches_emulation_bitwise(cell, fp_name, seed):
+    """The seed-robust identity at the heart of the design: with PTQ'd
+    (on-grid) weights the native int path and the f32 emulation cells are
+    the SAME jax computation bit-for-bit — int32 gate accumulators rescale
+    exactly, so no tolerance is needed (both sides share XLA's
+    sigmoid/tanh, unlike the numpy golden)."""
+    from repro.kernels import ops
+
+    fp = NATIVE_FPS[fp_name]
+    xs, W, U, b = make_quantized_inputs(cell, fp, seed=seed)
+    nat = ops.SCHEDULED_KERNELS[cell][0](xs, W, U, b, schedule=_sched(R=2),
+                                         fp=fp)
+    emu = ops._emulated_scan_jit(xs, W, U, b, cell=cell, fp=fp)
+    np.testing.assert_array_equal(np.asarray(nat), np.asarray(emu))
+
+
+def test_fp_none_route_unchanged():
+    """fp=None must stay bit-compatible with the pre-quantization float
+    route (the tentpole's compatibility clause)."""
+    from repro.kernels import ops
+
+    xs, W, U, b = make_kernel_inputs("lstm")
+    s = _sched(R=2)
+    np.testing.assert_array_equal(
+        np.asarray(ops.lstm_scan(xs, W, U, b, schedule=s)),
+        np.asarray(ops.lstm_scan(xs, W, U, b, schedule=s, fp=None)))
+
+
+# ---------------------------------------------------------------------------
+# Native decode steps (the single-event engine's quantized route)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cell", ("lstm", "gru"))
+@pytest.mark.parametrize("fp_name", sorted(NATIVE_FPS))
+def test_decode_step_native_matches_emulation(cell, fp_name):
+    """Chained native decode steps == chained emulation cells, bitwise,
+    on PTQ'd weights — the decode route's version of the scan identity."""
+    from repro.core.rnn.cells import (gru_cell_quantized, initial_state,
+                                      lstm_cell_quantized)
+    from repro.kernels.decode_step import rnn_decode_step
+
+    fp = NATIVE_FPS[fp_name]
+    xs, W, U, b = make_quantized_inputs(cell, fp, seed=3)
+    B, T, _ = xs.shape
+    H = U.shape[0]
+    sched = _sched(R=2)
+    ref_step = lstm_cell_quantized if cell == "lstm" else gru_cell_quantized
+    st_n = initial_state(cell, B, H, jnp.float32)
+    st_e = initial_state(cell, B, H, jnp.float32)
+    for t in range(min(T, 4)):
+        h_n, st_n = rnn_decode_step(cell, xs[:, t], st_n, W, U, b,
+                                    schedule=sched, fp=fp)
+        h_e, st_e = ref_step(xs[:, t], st_e, W, U, b, fp)
+        np.testing.assert_array_equal(np.asarray(h_n), np.asarray(h_e))
+
+
+def test_decode_step_nonnative_fp_still_emulates():
+    """A wide (non-native) fp keeps the existing quantized-cell route."""
+    from repro.core.rnn.cells import initial_state, lstm_cell_quantized
+    from repro.kernels.decode_step import rnn_decode_step
+
+    fp = FixedPointConfig(16, 6)
+    assert not is_native_int(fp)
+    xs, W, U, b = make_kernel_inputs("lstm")
+    st = initial_state("lstm", xs.shape[0], U.shape[0], jnp.float32)
+    h, _ = rnn_decode_step("lstm", xs[:, 0], st, W, U, b,
+                           schedule=_sched(), fp=fp)
+    h_ref, _ = lstm_cell_quantized(xs[:, 0], st, W, U, b, fp)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Residency packing: round-trip, fp keying, packed-byte eviction accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fp_name", sorted(NATIVE_FPS))
+@pytest.mark.parametrize("k", (7, 8, 21))
+def test_pack_unpack_round_trip(fp_name, k):
+    from repro.kernels.quantized import pack_ints, unpack_ints
+
+    fp = NATIVE_FPS[fp_name]
+    rng = np.random.RandomState(k)
+    w = jnp.asarray(rng.randn(k, 12).astype(np.float32))
+    packed = pack_ints(w, fp)
+    assert packed.nbytes == packed_weight_bytes(k, 12, fp)
+    got = unpack_ints(packed, fp, k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(to_ints(w, fp)))
+
+
+def test_pack_saturates_at_rails():
+    """Values beyond the grid must clamp to the int rails, not wrap."""
+    from repro.kernels.quantized import pack_ints, unpack_ints
+
+    fp = NATIVE_FPS["int4"]
+    w = jnp.asarray([[100.0, -100.0, 0.0, fp.max_value]], jnp.float32).T
+    got = np.asarray(unpack_ints(pack_ints(w, fp), fp, 4)).ravel()
+    np.testing.assert_array_equal(got, [7, -8, 0, 7])
+
+
+def test_residency_keys_on_fp():
+    """A precision change must never serve a stale layout: the same weight
+    array packed under float, int8 and int4 keys yields THREE distinct
+    cache entries, each with its own packed bytes."""
+    from repro.kernels.ops import RESIDENT_WEIGHTS
+    from repro.kernels.quantized import resident_quantized
+
+    sched = _sched()
+    rng = np.random.RandomState(0)
+    w = jnp.asarray(rng.randn(20, 16).astype(np.float32))
+    before = len(RESIDENT_WEIGHTS)
+    p8 = resident_quantized(w, NATIVE_FPS["int8"], schedule=sched, tag="k")
+    p4 = resident_quantized(w, NATIVE_FPS["int4"], schedule=sched, tag="k")
+    assert len(RESIDENT_WEIGHTS) == before + 2
+    assert p8.nbytes == 20 * 16 and p4.nbytes == 10 * 16
+    # repeat calls hit (identity + key match), no repacking
+    h0 = RESIDENT_WEIGHTS.hits
+    p8b = resident_quantized(w, NATIVE_FPS["int8"], schedule=sched, tag="k")
+    assert RESIDENT_WEIGHTS.hits == h0 + 1 and p8b is p8
+    # the two fp keys embed the ap token, so they can never collide
+    assert schedule_key(sched, NATIVE_FPS["int8"]) \
+        != schedule_key(sched, NATIVE_FPS["int4"])
+
+
+def test_scan_after_float_serves_fresh_quantized_layout():
+    """Running the float route first must not poison the fp route: the
+    quantized scan still matches its golden model afterwards."""
+    from repro.kernels import ops
+
+    fp = NATIVE_FPS["int8"]
+    s = _sched(R=2)
+    xs, W, U, b = make_quantized_inputs("lstm", fp, seed=5)
+    ops.lstm_scan(xs, W, U, b, schedule=s)            # float layout cached
+    assert_quantized_conformance("lstm", s, fp, seed=5)
+
+
+def test_eviction_accounts_packed_bytes():
+    """The LRU byte budget must count the PACKED payload (int4: /8), not
+    the float source bytes — else quantized entries evict 8x too early."""
+    from repro.kernels.ops import WeightResidency
+    from repro.kernels.quantized import pack_ints
+
+    fp = NATIVE_FPS["int4"]
+    rng = np.random.RandomState(0)
+    w = jnp.asarray(rng.randn(64, 64).astype(np.float32))   # f32: 16384 B
+    packed_nb = packed_weight_bytes(64, 64, fp)             # int4: 2048 B
+    cache = WeightResidency(max_entries=64, max_bytes=4 * packed_nb)
+    for i in range(3):
+        wi = w + float(i)                  # distinct identities
+        cache.get(wi, f"quant/t/ap4_2_{i}", lambda wi=wi: pack_ints(wi, fp))
+    # 3 packed entries = 6144 B fit a budget 4 float copies would blow
+    assert len(cache) == 3 and cache.bytes == 3 * packed_nb
+
+
+# ---------------------------------------------------------------------------
+# Pricing: packed bytes identical in measurement and estimate, int4 <= 1/4
+# ---------------------------------------------------------------------------
+
+
+def test_decode_pricing_equals_measured_packing():
+    """estimate_decode_step's weight_vmem_bytes must equal the residency
+    cache's measured packed nbytes for the same weights — the single
+    packed_weight_bytes formula, realized and priced."""
+    from repro.core.hls.resources import estimate_decode_step
+    from repro.kernels.quantized import pack_ints
+    from repro.registry import get_config
+
+    cfg = get_config("flavor-tagging-lstm")
+    rnn = cfg.rnn
+    g = 4
+    rng = np.random.RandomState(0)
+    W = jnp.asarray(rng.randn(rnn.input_size, g * rnn.hidden)
+                    .astype(np.float32))
+    U = jnp.asarray(rng.randn(rnn.hidden, g * rnn.hidden).astype(np.float32))
+    s = _sched(R=2)
+    for fp in NATIVE_FPS.values():
+        est = estimate_decode_step(s, rnn, fp)
+        measured = pack_ints(W, fp).nbytes + pack_ints(U, fp).nbytes
+        assert est.weight_vmem_bytes == measured, (fp.total_bits,)
+
+
+@pytest.mark.parametrize("estimator", ("estimate_schedule",
+                                       "estimate_decode_step"))
+def test_int4_vmem_quarter_of_float(estimator):
+    """Acceptance: int4 resident vmem_bytes <= 1/4 the float layout
+    (weights /8, activations /4) — and int8 <= 1/2."""
+    from repro.core.hls import resources
+    from repro.registry import get_config
+
+    rnn = get_config("flavor-tagging-lstm").rnn
+    fn = getattr(resources, estimator)
+    for mode in MODES:
+        s = _sched(mode=mode, R=2)
+        v_f = fn(s, rnn, None).vmem_bytes
+        v_8 = fn(s, rnn, NATIVE_FPS["int8"]).vmem_bytes
+        v_4 = fn(s, rnn, NATIVE_FPS["int4"]).vmem_bytes
+        assert v_4 <= v_f / 4, (mode, v_4, v_f)
+        assert v_8 <= v_f / 2, (mode, v_8, v_f)
+        assert fn(s, rnn, NATIVE_FPS["int4"]).weight_vmem_bytes * 8 \
+            <= fn(s, rnn, None).weight_vmem_bytes + 8
+
+
+def test_emulated_fp_prices_like_float_vmem():
+    """A non-native fp (e.g. the paper's <16,6>) executes the f32 emulation,
+    so its vmem must stay the float layout's (only BRAM/DSP scale with
+    total_bits)."""
+    from repro.core.hls.resources import estimate_schedule
+    from repro.registry import get_config
+
+    rnn = get_config("flavor-tagging-lstm").rnn
+    s = _sched()
+    assert estimate_schedule(s, rnn, FixedPointConfig(16, 6)).vmem_bytes \
+        == estimate_schedule(s, rnn, None).vmem_bytes
+
+
+def test_lm_decode_pricing_shrinks_native():
+    from repro.core.hls.resources import estimate_lm_decode
+    from repro.registry import get_config
+    from repro.testing import tiny_config
+
+    cfg = tiny_config(get_config("stablelm-3b"))
+    s = _sched()
+    v_f = estimate_lm_decode(s, cfg, None).vmem_bytes
+    v_4 = estimate_lm_decode(s, cfg, NATIVE_FPS["int4"]).vmem_bytes
+    assert v_4 <= v_f / 4
+
+
+# ---------------------------------------------------------------------------
+# Serving report + autotune feasibility under native precision
+# ---------------------------------------------------------------------------
+
+
+def _engine(arch="flavor-tagging-lstm"):
+    from repro.models import build_model
+    from repro.registry import get_config
+    from repro.serving.engine import RNNServingEngine
+
+    cfg = get_config(arch)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return RNNServingEngine(cfg=cfg, params=params, impl="pallas",
+                            max_batch=8)
+
+
+def test_serve_report_quantized_rows_show_reduced_vmem():
+    """serve_report's analytical column for a quantized key must carry the
+    packed-layout vmem/BRAM, visibly below the float key's row."""
+    eng = _engine()
+    rng = np.random.RandomState(0)
+    x = rng.randn(4, eng.cfg.rnn.seq_len, eng.cfg.rnn.input_size) \
+        .astype(np.float32)
+    s = _sched(R=2)
+    fp = NATIVE_FPS["int8"]
+    eng.predict(x, schedule=s)
+    eng.predict(x, schedule=s, fp=fp)
+    report = eng.serve_report()
+    row_f = report[schedule_key(s, None)]["analytical"]
+    row_q = report[schedule_key(s, fp)]["analytical"]
+    assert row_q["vmem_bytes"] < row_f["vmem_bytes"]
+    assert row_q["weight_vmem_bytes"] * 2 <= row_f["weight_vmem_bytes"]
+    assert row_q["bram_18k"] <= row_f["bram_18k"] / 2 + 1
+
+
+def test_auto_schedule_int8_feasible_where_float_is_not():
+    """Satellite acceptance: a BRAM budget only the int8 packing satisfies —
+    the float-only space raises InfeasibleTargetError, the same target with
+    fp=int8 selects a point (the autotuner trades precision for BRAM)."""
+    from repro.autotune import DesignTarget
+    from repro.autotune.explorer import InfeasibleTargetError
+
+    eng = _engine()
+    tight = 30          # float space min bram is 53; int8 static min is 27
+    with pytest.raises(InfeasibleTargetError):
+        eng.auto_schedule(DesignTarget(max_bram_18k=tight), warmup=False)
+    pt = eng.auto_schedule(
+        DesignTarget(max_bram_18k=tight, fp=NATIVE_FPS["int8"]),
+        warmup=False)
+    assert pt.bram_18k <= tight
+    assert eng.fp is not None and eng.fp.total_bits == 8
+    # and the selected point is native-executable (no hoist/pipeline)
+    assert not pt.schedule.hoist_input and pt.schedule.mode != "pipeline"
+
+
+def test_explore_prunes_native_illegal_points():
+    from repro.autotune import DesignTarget
+    from repro.autotune.explorer import explore
+    from repro.autotune.space import native_int_legal
+    from repro.registry import get_config
+
+    cfg = get_config("flavor-tagging-lstm")
+    ex = explore(cfg, DesignTarget(fp=NATIVE_FPS["int8"]))
+    assert ex.points
+    assert all(native_int_legal(p.schedule) for p in ex.points)
+
+
+def test_serving_engine_native_fp_predict_matches_emulation():
+    """End-to-end: engine.predict on the native int8 Pallas route equals
+    the XLA emulation datapath bitwise once the weights are PTQ'd."""
+    from repro.core.quant.ptq import ptq_quantize_model
+    from repro.models import rnn_tagger
+
+    eng = _engine()
+    fp = NATIVE_FPS["int8"]
+    eng.params = ptq_quantize_model(eng.params, fp)
+    rng = np.random.RandomState(1)
+    x = rng.randn(4, eng.cfg.rnn.seq_len, eng.cfg.rnn.input_size) \
+        .astype(np.float32)
+    got = eng.predict(x, schedule=_sched(R=2), fp=fp)
+    want = np.asarray(rnn_tagger.forward(
+        eng.cfg, eng.params, jnp.asarray(x), fp=fp, impl="xla"))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# The paper's precision-vs-AUC regression (Fig. 2 protocol, pinned)
+# ---------------------------------------------------------------------------
+
+
+def _train_flavor_lstm(steps=100, n=1200):
+    from repro.config import OptimizerConfig
+    from repro.data import flavor_tagging_dataset
+    from repro.models import build_model
+    from repro.registry import get_config
+    from repro.training import adamw_init, adamw_update
+
+    cfg = get_config("flavor-tagging-lstm")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    x, y = flavor_tagging_dataset(n, seed=0)
+    opt = OptimizerConfig(lr=5e-3, warmup_steps=10, total_steps=steps,
+                          weight_decay=1e-4)
+    st = adamw_init(params, opt)
+
+    @jax.jit
+    def step(params, st, xb, yb):
+        (_, _), g = jax.value_and_grad(
+            lambda p: m.loss(p, {"x": xb, "y": yb}), has_aux=True)(params)
+        return adamw_update(params, g, st, opt)[:2]
+
+    for i in range(steps):
+        idx = np.random.RandomState(i).randint(0, n, 128)
+        params, st = step(params, st, jnp.asarray(x[idx]), jnp.asarray(y[idx]))
+    return cfg, params
+
+
+def test_auc_scan_flavor_tagging_pinned():
+    """Pinned regression of the paper-shaped precision-vs-AUC curve on the
+    flavor-tagging LSTM: at integer_bits=6 the AUC ratio is within 1% of
+    float for >= 8 fractional bits and degrades sharply at <= 2 — the
+    shape of paper Figs. 6-8."""
+    from repro.core.quant.ptq import auc_scan
+    from repro.data import flavor_tagging_dataset
+    from repro.models import rnn_tagger
+
+    cfg, params = _train_flavor_lstm()
+    xt, yt = flavor_tagging_dataset(512, seed=7)
+    scan = auc_scan(cfg, rnn_tagger.forward, params, xt, yt,
+                    integer_bits=(6,), fractional_bits=(2, 8, 12))
+    curve = dict(scan[6])
+    assert curve[8] >= 0.99, curve
+    assert curve[12] >= 0.995, curve
+    assert curve[2] < 0.95, curve          # coarse grids must visibly hurt
+
+
+def test_auc_scan_quickdraw_ranking_preserved():
+    """Quickdraw (multiclass) counterpart, self-labelled from the float
+    model's own predictions so float AUC is exactly rankable: quantization
+    at <6,10> must preserve the ranking within 1%, and 0 fractional bits
+    must destroy it."""
+    from repro.core.quant.ptq import auc_scan
+    from repro.models import build_model, rnn_tagger
+    from repro.registry import get_config
+
+    cfg = get_config("quickdraw-lstm")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    x = rng.randn(192, cfg.rnn.seq_len, cfg.rnn.input_size) \
+        .astype(np.float32)
+    probs = np.asarray(rnn_tagger.forward(cfg, params, jnp.asarray(x)))
+    y = np.argmax(probs, axis=-1).astype(np.int32)
+    scan = auc_scan(cfg, rnn_tagger.forward, params, x, y,
+                    integer_bits=(6,), fractional_bits=(0, 10))
+    curve = dict(scan[6])
+    assert curve[10] >= 0.99, curve
+    assert curve[0] < 0.9, curve
