@@ -1,0 +1,184 @@
+"""Zero-warmup serving smoke: cold-vs-warm first-request latency.
+
+The persistent compile cache (``repro.serving.compile_cache``) promises that
+a FRESH engine pointed at a warm cache directory answers its very first
+request without a single jit trace — the compiled executable is deserialized
+from disk, not rebuilt.  This bench measures that promise on both serving
+paths and records it in BENCH_rnn_kernels.json:
+
+  1. RNN path: a cold engine serves one padded batch (compiling + storing
+     the executable), then a brand-new engine over the SAME cache dir serves
+     the same traffic.  The warm engine must report ``trace_count == 0`` and
+     ``cold_compiles == 0`` for the key, and its outputs must be
+     bit-identical to the cold engine's.
+  2. LM path: same protocol for the keyed decode step (greedy tokens must
+     match exactly).
+
+``smoke()`` raises (-> scripts/check.sh exits non-zero) if the warm path
+still compiles; ``record()`` returns the measurement dict and, when the
+perf-record JSON already exists, read-modify-writes it under ``"warmup"``
+(run.py --warmup-smoke runs AFTER --json, whose write_json rebuilds the
+document from scratch — the order in check.sh is load-bearing).
+"""
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from benchmarks.common import emit  # noqa: E402
+from repro.kernels.schedule import schedule_key  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.registry import get_config  # noqa: E402
+from repro.serving import LMServingEngine, RNNServingEngine  # noqa: E402
+from repro.testing import tiny_config  # noqa: E402
+
+
+def _serve_batch(eng: RNNServingEngine, x: np.ndarray) -> np.ndarray:
+    """Serve one padded batch through the submit/flush path; returns the
+    per-request results stacked in submission order."""
+    reqs = [eng.submit(x[i]) for i in range(x.shape[0])]
+    eng.flush(force=True)
+    return np.stack([r.result for r in reqs])
+
+
+def _rnn_leg(cache_dir: str) -> Dict[str, object]:
+    cfg = get_config("top-tagging-gru")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    r = cfg.rnn
+    x = np.random.RandomState(0).randn(4, r.seq_len,
+                                       r.input_size).astype(np.float32)
+
+    cold_eng = RNNServingEngine(cfg, params, max_batch=4, cache_dir=cache_dir)
+    key = schedule_key(*cold_eng.resolve())
+    t0 = time.perf_counter()
+    cold_out = _serve_batch(cold_eng, x)
+    cold_s = time.perf_counter() - t0
+    cold_traces = cold_eng.trace_count(key)
+
+    # a brand-new engine over the same cache dir: first request must hit disk
+    warm_eng = RNNServingEngine(cfg, params, max_batch=4, cache_dir=cache_dir)
+    t0 = time.perf_counter()
+    warm_out = _serve_batch(warm_eng, x)
+    warm_s = time.perf_counter() - t0
+    return {
+        "key": key,
+        "cold_first_request_s": cold_s,
+        "warm_first_request_s": warm_s,
+        "speedup": cold_s / max(warm_s, 1e-12),
+        "cold_traces": cold_traces,
+        "warm_traces": warm_eng.trace_count(key),
+        "warm_cold_compiles": warm_eng.compile_cache.cold_compiles,
+        "warm_hits": warm_eng.compile_cache.warm_hits,
+        "bit_identical": bool((cold_out == warm_out).all()),
+    }
+
+
+def _lm_leg(cache_dir: str) -> Dict[str, object]:
+    cfg = tiny_config(get_config("stablelm-3b"))
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    prompt, max_new = [5, 11, 2], 4
+
+    cold_eng = LMServingEngine(cfg, params, max_batch=2, max_seq=32,
+                               cache_dir=cache_dir)
+    rid = cold_eng.add_request(list(prompt), max_new=max_new)
+    t0 = time.perf_counter()
+    cold_toks = cold_eng.run_to_completion()[rid]
+    cold_s = time.perf_counter() - t0
+    cold_traces = cold_eng.trace_count("default")
+
+    warm_eng = LMServingEngine(cfg, params, max_batch=2, max_seq=32,
+                               cache_dir=cache_dir)
+    rid = warm_eng.add_request(list(prompt), max_new=max_new)
+    t0 = time.perf_counter()
+    warm_toks = warm_eng.run_to_completion()[rid]
+    warm_s = time.perf_counter() - t0
+    return {
+        "key": "default",
+        "cold_first_request_s": cold_s,
+        "warm_first_request_s": warm_s,
+        "speedup": cold_s / max(warm_s, 1e-12),
+        "cold_traces": cold_traces,
+        "warm_traces": warm_eng.trace_count("default"),
+        "warm_cold_compiles": warm_eng.compile_cache.cold_compiles,
+        "warm_hits": warm_eng.compile_cache.warm_hits,
+        "bit_identical": list(cold_toks) == list(warm_toks),
+    }
+
+
+def record(json_path: Optional[str] = None) -> Dict[str, object]:
+    """Measure both legs in a throwaway cache dir; optionally persist the
+    result under ``doc["warmup"]`` of an EXISTING perf-record JSON (the doc
+    is read-modified-rewritten, never rebuilt here)."""
+    tmp = tempfile.mkdtemp(prefix="warmup-bench-")
+    try:
+        rnn = _rnn_leg(os.path.join(tmp, "rnn"))
+        lm = _lm_leg(os.path.join(tmp, "lm"))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    passed = all(leg["warm_traces"] == 0 and leg["warm_cold_compiles"] == 0
+                 and leg["cold_traces"] >= 1 and leg["bit_identical"]
+                 for leg in (rnn, lm))
+    rec = {
+        "criterion": "fresh engine over a warm cache dir answers its first "
+                     "request with zero jit traces / zero cold compiles and "
+                     "bit-identical outputs, both serving paths",
+        "rnn": rnn,
+        "lm": lm,
+        "passed": passed,
+    }
+    if json_path is not None and os.path.exists(json_path):
+        with open(json_path) as f:
+            doc = json.load(f)
+        doc["warmup"] = rec
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+    return rec
+
+
+def smoke(json_path: str = "BENCH_rnn_kernels.json") -> None:
+    """Warmup fail-fast: raises unless the warm path is trace-free and
+    bit-identical on both serving paths."""
+    rec = record(json_path=json_path)
+    for name in ("rnn", "lm"):
+        leg = rec[name]
+        emit(f"warmup/{name}/cold_first_request",
+             leg["cold_first_request_s"] * 1e6,
+             f"traces={leg['cold_traces']}|key={leg['key']}")
+        emit(f"warmup/{name}/warm_first_request",
+             leg["warm_first_request_s"] * 1e6,
+             f"traces={leg['warm_traces']}"
+             f"|cold_compiles={leg['warm_cold_compiles']}"
+             f"|warm_hits={leg['warm_hits']}"
+             f"|speedup={leg['speedup']:.1f}x"
+             f"|bit_identical={leg['bit_identical']}")
+        assert leg["cold_traces"] >= 1, \
+            f"{name}: cold engine never traced — the smoke measured nothing"
+        assert leg["warm_traces"] == 0 and leg["warm_cold_compiles"] == 0, \
+            (f"{name}: warm path still compiles "
+             f"(traces={leg['warm_traces']}, "
+             f"cold_compiles={leg['warm_cold_compiles']}) — the persistent "
+             f"compile cache missed")
+        assert leg["bit_identical"], \
+            f"{name}: warm outputs diverged from the cold engine's"
+    emit("warmup/json", 0.0,
+         f"recorded={os.path.exists(json_path)}|path={json_path}")
+
+
+def run(full: bool = False) -> None:
+    del full
+    smoke()
+
+
+if __name__ == "__main__":
+    smoke()

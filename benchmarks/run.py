@@ -37,7 +37,8 @@ def smoke() -> int:
                             bench_kernels, bench_latency_resources,
                             bench_quant, bench_quantization,
                             bench_roofline, bench_serving,
-                            bench_static_nonstatic, bench_throughput)
+                            bench_static_nonstatic, bench_throughput,
+                            bench_warmup)
     print("smoke/imports,0,ok")
 
     from repro.kernels.schedule import KernelSchedule
@@ -75,6 +76,11 @@ def main() -> None:
                     help="quantized fail-fast: golden-model conformance "
                          "slice, native-vs-emulation bitwise identity, "
                          "packed-bytes == pricing")
+    ap.add_argument("--warmup-smoke", action="store_true",
+                    help="zero-warmup fail-fast: fresh engine over a warm "
+                         "compile cache must serve its first request with "
+                         "zero jit traces, bit-identical; records cold-vs-"
+                         "warm first-request latency into the perf JSON")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (e.g. roofline,kernels)")
     args, _ = ap.parse_known_args()
@@ -95,6 +101,11 @@ def main() -> None:
     if args.quant_smoke:
         from benchmarks import bench_quant
         bench_quant.smoke()
+        sys.exit(0)
+
+    if args.warmup_smoke:
+        from benchmarks import bench_warmup
+        bench_warmup.smoke(args.json or "BENCH_rnn_kernels.json")
         sys.exit(0)
 
     if args.json is not None:
@@ -121,7 +132,7 @@ def main() -> None:
                             bench_latency_resources, bench_quant,
                             bench_quantization, bench_roofline,
                             bench_serving, bench_static_nonstatic,
-                            bench_throughput)
+                            bench_throughput, bench_warmup)
     benches = {
         "latency_resources": bench_latency_resources,
         "static_nonstatic": bench_static_nonstatic,
@@ -133,6 +144,7 @@ def main() -> None:
         "autotune": bench_autotune,
         "decode": bench_decode,
         "quant": bench_quant,
+        "warmup": bench_warmup,
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

@@ -17,7 +17,12 @@
 #      (BENCH_rnn_kernels.json); fails if any acceptance speedup regresses,
 #      predicted/measured schedule ordering decorrelates, or the quantized
 #      conformance bound is violated
-#   7. tier-1: pytest -x -q   — the full suite, first failure stops
+#   7. benchmarks/run.py --warmup-smoke — zero-warmup fail-fast: a fresh
+#      engine over a warm compile cache must answer its first request with
+#      ZERO jit traces and bit-identical outputs (both serving paths); the
+#      cold-vs-warm first-request latencies ride the perf record under
+#      "warmup" (this stage must run AFTER --json, which rebuilds the doc)
+#   8. tier-1: pytest -x -q   — the full suite, first failure stops
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -39,6 +44,9 @@ python benchmarks/run.py --quant-smoke
 
 echo "== perf record (BENCH_rnn_kernels.json) =="
 python benchmarks/run.py --json
+
+echo "== warmup smoke =="
+python benchmarks/run.py --warmup-smoke
 
 echo "== tier-1 tests =="
 python -m pytest -x -q

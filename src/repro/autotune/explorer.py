@@ -135,6 +135,23 @@ class Exploration:
     def frontier_table(self) -> List[dict]:
         return [p.report_row() for p in self.frontier]
 
+    def prewarm(self, engine, k: Optional[int] = None) -> Dict[str, dict]:
+        """Zero-warmup hook: pre-compile the engine's serving executables
+        for the top-``k`` feasible points (the whole Pareto frontier when
+        the exploration had no target, or ``k=None`` for all of them).
+
+        An engine started over a warm ``cache_dir`` deserializes every
+        frontier artifact instead of compiling — the first request on ANY
+        frontier queue then pays zero jit compiles, which is what makes a
+        target re-resolve (new tenant, redeploy) a routing decision instead
+        of a latency cliff.  Returns the engine's per-key
+        ``{"status", "compile_s"}`` prewarm report."""
+        pts = list(self.feasible if self.feasible else self.frontier)
+        if k is not None:
+            pts = pts[:k]
+        return engine.prewarm(schedules=[p.schedule for p in pts],
+                              fps=[p.fp for p in pts])
+
 
 def _finish(cfg: ModelConfig, target: Optional[DesignTarget],
             points: Tuple[DesignPoint, ...]) -> Exploration:

@@ -241,6 +241,30 @@ class KernelSchedule:
                      for m in modes for r in reuse_factors)
 
 
+def cache_meta(schedule: "KernelSchedule | None", fp=None) -> dict:
+    """Exhaustive (schedule, fp) identity for the persistent compile cache.
+
+    ``schedule_key`` is the co-batching string and stays forward-compatible
+    by IGNORING axes it does not know — the right property for routing, the
+    wrong one for naming a serialized executable (two schedules that differ
+    in a future axis must never share an artifact).  This derivation is
+    exhaustive by construction: every dataclass field of the schedule and
+    the fixed-point config lands in the dict, so adding an axis
+    automatically invalidates stale cache entries.
+    """
+    from dataclasses import asdict, is_dataclass
+
+    meta: dict = {"schedule": (None if schedule is None
+                               else asdict(schedule))}
+    if fp is None:
+        meta["fp"] = None
+    elif is_dataclass(fp):
+        meta["fp"] = asdict(fp)
+    else:  # duck-typed fp (no-repro-imports invariant): fall back to repr
+        meta["fp"] = repr(fp)
+    return meta
+
+
 def schedule_key(schedule: "KernelSchedule | None", fp=None) -> str:
     """Stable co-batching key for a (schedule, fixed-point config) pair.
 

@@ -4,6 +4,11 @@ from repro.serving.batcher import (  # noqa: F401
     MicroBatcher,
     Request,
 )
+from repro.serving.compile_cache import (  # noqa: F401
+    CachedExecutor,
+    CompileCache,
+    KeyCompileStats,
+)
 from repro.serving.engine import (  # noqa: F401
     RNNServingEngine,
     format_serve_report,

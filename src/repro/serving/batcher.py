@@ -32,6 +32,17 @@ import numpy as np
 from repro.kernels.schedule import DEFAULT_SCHEDULE_KEY, schedule_key
 
 
+def _now() -> float:
+    """Monotonic clock for every arrival/done stamp.
+
+    ``time.time()`` is wall-clock: an NTP step between submit and flush
+    produced negative (or wildly wrong) latencies in KeyStats.  All batcher
+    timing now uses ``time.perf_counter`` — the same clock domain the
+    engines' steady-state measurements already use — and the ``now=``
+    injection hooks stay, so tests drive a logical clock as before."""
+    return time.perf_counter()
+
+
 @dataclass
 class Request:
     payload: Any
@@ -102,6 +113,15 @@ def _pad_stack(payloads: List[np.ndarray]) -> Tuple[np.ndarray, np.ndarray, bool
     plain ``np.stack`` path and report ragged=False.
     """
     arrs = [np.asarray(p) for p in payloads]
+    dtypes = {a.dtype for a in arrs}
+    if len(dtypes) != 1:
+        # padding with arrs[0].dtype would silently down/up-cast the other
+        # payloads; mixed-dtype requests cannot share a compiled trace
+        # anyway, so this is a routing bug at the submitter — say so
+        raise ValueError(
+            f"mixed payload dtypes in one batch: {sorted(map(str, dtypes))} "
+            f"— requests with different dtypes cannot share a trace; route "
+            f"them to different schedule keys")
     lengths = np.asarray([a.shape[0] if a.ndim else 1 for a in arrs], np.int32)
     shapes = {a.shape for a in arrs}
     if len(shapes) == 1:
@@ -181,7 +201,7 @@ class MicroBatcher:
             key = (schedule_key(schedule, fp)
                    if schedule is not None or fp is not None
                    else DEFAULT_SCHEDULE_KEY)
-        r = Request(payload, time.time() if now is None else now,
+        r = Request(payload, _now() if now is None else now,
                     next(self._ids), key=key, schedule=schedule, fp=fp)
         self._queues.setdefault(key, []).append(r)
         return r
@@ -195,11 +215,11 @@ class MicroBatcher:
         mb, mw = self.policy(key)
         if len(q) >= mb:
             return True
-        now = time.time() if now is None else now
+        now = _now() if now is None else now
         return now - q[0].arrival_s >= mw
 
     def ready_keys(self, now: Optional[float] = None) -> List[str]:
-        now = time.time() if now is None else now
+        now = _now() if now is None else now
         return [k for k in self._queues if self.ready_key(k, now)]
 
     def ready(self, now: Optional[float] = None) -> bool:
@@ -273,7 +293,7 @@ class MicroBatcher:
                     "compute on the zero padding", RuntimeWarning,
                     stacklevel=2)
             out = np.asarray(infer_fn(x))
-        t = time.time() if now is None else now
+        t = _now() if now is None else now
         for i, r in enumerate(batch):
             res = out[i]
             # un-pad only outputs shaped exactly like the padded payload

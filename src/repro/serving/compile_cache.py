@@ -1,0 +1,285 @@
+"""Persistent AOT compile cache — zero-warmup serving.
+
+Every new ``(schedule_key, batch-shape bucket)`` pair used to pay a
+first-request jit compile: a latency cliff on every engine start, deploy,
+and new tenant target — exactly the regime the paper's multi-design-point
+serving story cares about (the kernel is microseconds; the compile shell
+around it is seconds).  This module closes that cliff the way AOT serving
+frameworks do (export/compile ahead of time, load artifacts at serve time):
+
+  * :class:`CompileCache` serializes compiled XLA executables
+    (``jax.jit(...).lower(...).compile()`` +
+    ``jax.experimental.serialize_executable``) to a cache directory, one
+    file per content hash of ``{jax/jaxlib version, platform, cfg,
+    schedule_key, fp, argument shapes}``.  Any load / deserialize failure
+    degrades gracefully to a fresh compile (warn, never crash) — a
+    corrupted or stale entry costs one cold compile, not an outage.
+  * :class:`CachedExecutor` wraps one jit'd function and dispatches each
+    distinct argument-shape signature to its own compiled executable:
+    warm signatures load from disk with ZERO jit traces; cold signatures
+    lower/compile once (the wrapped function's trace-time side effects —
+    the engines' trace counters — run exactly then) and are stored for
+    the next process.
+  * Writes are concurrency-safe for N worker replicas sharing one cache
+    directory: serialize to a unique temp file, then atomic
+    ``os.replace`` — readers only ever see complete entries.
+
+Per-logical-key cold/warm counters feed the engines' ``serve_report``
+(the ``compile`` column: hit rate + first-request compile seconds).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pickle
+import time
+import uuid
+import warnings
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional, Tuple
+
+#: bump to invalidate every existing cache entry (serialization layout)
+_FORMAT_VERSION = 1
+
+_SUFFIX = ".jaxcache"
+
+
+def _env_meta() -> Dict[str, str]:
+    """The toolchain axes that invalidate a serialized executable: an
+    artifact compiled by one jaxlib for one platform must never be fed to
+    another."""
+    import jax
+    import jaxlib
+
+    devs = jax.devices()
+    return {
+        "format": str(_FORMAT_VERSION),
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "platform": jax.default_backend(),
+        "n_devices": str(len(devs)),
+        "device_kind": devs[0].device_kind if devs else "none",
+    }
+
+
+def fingerprint(meta: Dict[str, Any]) -> str:
+    """Stable content hash of an entry's metadata (sorted-key JSON)."""
+    blob = json.dumps(meta, sort_keys=True, default=repr)
+    return hashlib.sha256(blob.encode()).hexdigest()[:24]
+
+
+def _slug(name: str, limit: int = 48) -> str:
+    safe = "".join(c if c.isalnum() or c in "-_." else "_" for c in name)
+    return safe[:limit] or "entry"
+
+
+@dataclass
+class KeyCompileStats:
+    """Per-logical-key (schedule key) compile accounting."""
+
+    cold: int = 0                       # fresh lower+compile (one jit trace)
+    warm: int = 0                       # served from a deserialized artifact
+    errors: int = 0                     # load/store failures (fell back)
+    first_compile_s: Optional[float] = None
+
+    def summary(self) -> Dict[str, float]:
+        total = self.cold + self.warm
+        return {
+            "cold": float(self.cold),
+            "warm": float(self.warm),
+            "errors": float(self.errors),
+            "hit_rate": (self.warm / total) if total else 0.0,
+            "first_compile_s": self.first_compile_s,
+        }
+
+
+class CompileCache:
+    """Directory of serialized executables shared by serving engines.
+
+    ``cache_dir=None`` disables persistence but keeps the accounting: every
+    signature then costs exactly one in-process cold compile (the pre-PR
+    behavior), and ``serve_report`` still shows honest cold counts.
+    """
+
+    def __init__(self, cache_dir: Optional[os.PathLike | str] = None):
+        self.dir = Path(cache_dir) if cache_dir is not None else None
+        self.enabled = self.dir is not None
+        if self.enabled:
+            self.dir.mkdir(parents=True, exist_ok=True)
+        self._env = _env_meta()
+        self._stats: Dict[str, KeyCompileStats] = {}
+
+    # -- accounting ----------------------------------------------------------
+
+    def stats(self, key: str) -> KeyCompileStats:
+        return self._stats.setdefault(key, KeyCompileStats())
+
+    def report_row(self, key: str) -> Dict[str, float]:
+        return self.stats(key).summary()
+
+    def record_cold(self, key: str, compile_s: float) -> None:
+        st = self.stats(key)
+        st.cold += 1
+        if st.first_compile_s is None:
+            st.first_compile_s = compile_s
+
+    def record_warm(self, key: str) -> None:
+        self.stats(key).warm += 1
+
+    @property
+    def cold_compiles(self) -> int:
+        return sum(s.cold for s in self._stats.values())
+
+    @property
+    def warm_hits(self) -> int:
+        return sum(s.warm for s in self._stats.values())
+
+    # -- entry identity ------------------------------------------------------
+
+    def entry_meta(self, meta: Dict[str, Any]) -> Dict[str, Any]:
+        return {**self._env, **meta}
+
+    def entry_path(self, name_hint: str, meta: Dict[str, Any]) -> Path:
+        assert self.dir is not None
+        full = self.entry_meta(meta)
+        return self.dir / f"{_slug(name_hint)}-{fingerprint(full)}{_SUFFIX}"
+
+    # -- load / store --------------------------------------------------------
+
+    def load(self, name_hint: str, meta: Dict[str, Any],
+             key: str) -> Optional[Callable]:
+        """Deserialize the entry for ``meta``; None on miss OR any failure
+        (corrupted file, version skew inside the payload, pickle error) —
+        the caller falls back to a cold compile."""
+        if not self.enabled:
+            return None
+        path = self.entry_path(name_hint, meta)
+        if not path.exists():
+            return None
+        try:
+            from jax.experimental import serialize_executable
+            with open(path, "rb") as f:
+                doc = pickle.load(f)
+            want = self.entry_meta(meta)
+            if doc.get("meta") != want:
+                raise ValueError(
+                    f"entry metadata mismatch (hash collision or stale "
+                    f"format): {path.name}")
+            return serialize_executable.deserialize_and_load(
+                doc["payload"], doc["in_tree"], doc["out_tree"])
+        except Exception as e:  # corrupted/stale entry: warn, fall back
+            self.stats(key).errors += 1
+            warnings.warn(
+                f"compile cache entry {path.name} unusable "
+                f"({type(e).__name__}: {e}); falling back to jit compile",
+                RuntimeWarning, stacklevel=2)
+            return None
+
+    def store(self, name_hint: str, meta: Dict[str, Any], compiled: Any,
+              key: str) -> bool:
+        """Serialize ``compiled`` under its content hash.
+
+        Write-temp-then-rename: safe under concurrent writers (N replicas
+        sharing one directory race benignly — last complete write wins,
+        readers never observe a partial file)."""
+        if not self.enabled:
+            return False
+        path = self.entry_path(name_hint, meta)
+        tmp = path.with_name(
+            f"{path.name}.tmp.{os.getpid()}.{uuid.uuid4().hex[:8]}")
+        try:
+            from jax.experimental import serialize_executable
+            payload, in_tree, out_tree = serialize_executable.serialize(
+                compiled)
+            with open(tmp, "wb") as f:
+                pickle.dump({"meta": self.entry_meta(meta),
+                             "payload": payload,
+                             "in_tree": in_tree,
+                             "out_tree": out_tree}, f)
+            os.replace(tmp, path)
+            return True
+        except Exception as e:  # unserializable executable, full disk, ...
+            self.stats(key).errors += 1
+            warnings.warn(
+                f"compile cache store failed for {path.name} "
+                f"({type(e).__name__}: {e}); serving uncached",
+                RuntimeWarning, stacklevel=2)
+            try:
+                if tmp.exists():
+                    tmp.unlink()
+            except OSError:
+                pass
+            return False
+
+
+def _arg_signature(args: Tuple[Any, ...]) -> Tuple:
+    """Hashable (shape, dtype) signature over every array leaf, plus the
+    pytree structure — the shape-bucket identity of one executable."""
+    import jax
+
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    return (str(treedef),
+            tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+
+
+class CachedExecutor:
+    """One jit'd function, dispatched per argument-shape signature to AOT
+    executables that persist across processes.
+
+    Call it exactly like the jit'd function (positional args).  The first
+    call with a new signature either loads the serialized executable (warm
+    — zero jit traces) or lowers/compiles once (cold — the wrapped
+    function's trace-time side effects run) and stores the artifact.
+    :meth:`warm` does the same from ``jax.ShapeDtypeStruct`` avals without
+    executing — the engines' pre-warm path.
+    """
+
+    def __init__(self, jitted: Callable, cache: CompileCache, key: str,
+                 meta: Dict[str, Any], name_hint: Optional[str] = None):
+        self._jitted = jitted
+        self._cache = cache
+        self.key = key
+        self._meta = dict(meta)
+        self._name = name_hint if name_hint is not None else key
+        self._compiled: Dict[Tuple, Callable] = {}
+
+    def _acquire(self, sig: Tuple, args: Tuple[Any, ...]) -> Callable:
+        meta = {**self._meta, "treedef": sig[0], "leaves": sig[1]}
+        fn = self._cache.load(self._name, meta, self.key)
+        if fn is not None:
+            self._cache.record_warm(self.key)
+        else:
+            t0 = time.perf_counter()
+            fn = self._jitted.lower(*args).compile()
+            self._cache.record_cold(self.key, time.perf_counter() - t0)
+            self._cache.store(self._name, meta, fn, self.key)
+        self._compiled[sig] = fn
+        return fn
+
+    def __call__(self, *args):
+        sig = _arg_signature(args)
+        fn = self._compiled.get(sig)
+        if fn is None:
+            fn = self._acquire(sig, args)
+        return fn(*args)
+
+    def warm(self, *args) -> Dict[str, Any]:
+        """Ensure the executable for this signature exists WITHOUT running
+        it; args may mix real arrays and ``jax.ShapeDtypeStruct`` avals.
+        Returns ``{"status": "hot"|"warm"|"cold", "compile_s": float}``."""
+        sig = _arg_signature(args)
+        if sig in self._compiled:
+            return {"status": "hot", "compile_s": 0.0}
+        cold_before = self._cache.stats(self.key).cold
+        t0 = time.perf_counter()
+        self._acquire(sig, args)
+        dt = time.perf_counter() - t0
+        cold = self._cache.stats(self.key).cold > cold_before
+        return {"status": "cold" if cold else "warm",
+                "compile_s": dt if cold else 0.0}
+
+    def compiled_signatures(self) -> int:
+        return len(self._compiled)

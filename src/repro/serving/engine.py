@@ -39,9 +39,10 @@ from repro.config import FixedPointConfig, ModelConfig
 from repro.core.hls import (DesignPoint, HLSDesign, RNNDesignPoint,
                             estimate_design, estimate_schedule)
 from repro.kernels.schedule import (DEFAULT_SCHEDULE_KEY, KernelSchedule,
-                                    schedule_key)
+                                    cache_meta, schedule_key)
 from repro.models import rnn_tagger
 from repro.serving.batcher import KeyStats, MicroBatcher, Request, _pad_stack
+from repro.serving.compile_cache import CachedExecutor, CompileCache
 
 RAGGED_POLICIES = ("bucket", "mask")
 
@@ -63,6 +64,10 @@ class RNNServingEngine:
                                           # padded batch, XLA datapath)
     pad_batches: bool = True              # pad flushes to max_batch: one jit
                                           # trace per schedule hash
+    cache_dir: Optional[str] = None       # persistent AOT compile cache; a
+                                          # warm dir serves the first request
+                                          # of a FRESH engine with zero jit
+                                          # compiles (N replicas may share it)
     _infer_cache: Dict[str, Callable] = field(default_factory=dict, repr=False)
     _key_specs: Dict[str, Tuple[KernelSchedule, Optional[FixedPointConfig]]] \
         = field(default_factory=dict, repr=False)
@@ -79,6 +84,7 @@ class RNNServingEngine:
         if self.ragged not in RAGGED_POLICIES:
             raise ValueError(f"ragged {self.ragged!r} not in {RAGGED_POLICIES}")
         self.batcher = MicroBatcher(max_batch=self.max_batch)
+        self.compile_cache = CompileCache(self.cache_dir)
 
     # -- schedule resolution -------------------------------------------------
 
@@ -175,19 +181,34 @@ class RNNServingEngine:
             self._infer_cache[key] = self._make_infer(key, sched, fp)
         return key
 
+    def _executor_meta(self, kind: str, sched: KernelSchedule,
+                       fp: Optional[FixedPointConfig]) -> Dict:
+        """Content identity of one compiled serving executable: the model
+        config plus the EXHAUSTIVE schedule/fp axes (``cache_meta``, not the
+        routing key — a future schedule axis must invalidate entries, not
+        silently share them).  The toolchain axes (jaxlib, platform) are
+        appended by the CompileCache itself; argument shapes by the
+        executor."""
+        return {"kind": kind, "cfg": repr(self.cfg),
+                **cache_meta(sched, fp)}
+
     def _make_infer(self, key: str, sched: KernelSchedule,
                     fp: Optional[FixedPointConfig]) -> Callable:
         cfg = self.cfg
         impl = "pallas" if sched.use_pallas else "xla"
 
         def infer(params, x, lengths=None):
-            # Python side effect runs at TRACE time only: counts jit traces
-            # per schedule hash (the co-batching efficiency criterion)
+            # Python side effect runs at COLD lower/compile time only:
+            # counts jit traces per schedule hash (the co-batching
+            # efficiency criterion).  A warm cache hit deserializes the
+            # executable instead of tracing, so this never runs — which is
+            # exactly what trace_count() == 0 after a warm start asserts.
             self._traces[key] = self._traces.get(key, 0) + 1
             return rnn_tagger.forward(cfg, params, x, fp=fp, impl=impl,
                                       schedule=sched, lengths=lengths)
 
-        return jax.jit(infer)
+        return CachedExecutor(jax.jit(infer), self.compile_cache, key,
+                              self._executor_meta("rnn_infer", sched, fp))
 
     def trace_count(self, key: str) -> int:
         return self._traces.get(key, 0)
@@ -233,7 +254,11 @@ class RNNServingEngine:
         key = self._ensure_key(*self.resolve(schedule, fp))
         pad, lengths, _ = _pad_stack(list(xs))
         if self.ragged == "mask":
-            out = self._predict_key(key, pad, lengths)
+            # through _predict_padded, NOT _predict_key: a direct call would
+            # compile one trace per distinct request count, silently
+            # breaking the one-trace-per-key invariant the co-batching
+            # design is built on
+            out = self._predict_padded(key, pad, lengths)
             return [out[i] for i in range(len(xs))]
         return self._bucket_predict(key, xs, lengths)
 
@@ -249,10 +274,47 @@ class RNNServingEngine:
         return out                           # type: ignore[return-value]
 
     def warmup(self, schedule: Optional[KernelSchedule] = None,
-               fp: Optional[FixedPointConfig] = None):
+               fp: Optional[FixedPointConfig] = None) -> Dict[str, Dict]:
+        """Warm ONE (schedule, fp) pair's serving-shape executable — from
+        the persistent cache when possible, else compile-and-store."""
+        return self.prewarm(schedules=[schedule], fps=[fp])
+
+    def prewarm(self, targets: Optional[List[DesignTarget]] = None,
+                schedules: Optional[List[Optional[KernelSchedule]]] = None,
+                fps: Optional[List[Optional[FixedPointConfig]]] = None
+                ) -> Dict[str, Dict]:
+        """Zero-warmup entry point: make the serving-bucket executables for
+        a list of targets and/or schedules exist BEFORE traffic arrives.
+
+        Each (schedule, fp) pair — targets are resolved through the
+        explorer first — is lowered against the key's serving shape bucket
+        (``max_batch`` rows x the config's sequence) from
+        ``jax.ShapeDtypeStruct`` avals, so nothing executes.  Over a warm
+        ``cache_dir`` this deserializes stored artifacts (zero jit
+        compiles); cold entries compile once and are stored for the next
+        engine / replica.  Returns per-key
+        ``{"status": "hot"|"warm"|"cold", "compile_s": ...}``.
+        """
+        pairs: List[Tuple[Optional[KernelSchedule],
+                          Optional[FixedPointConfig]]] = []
+        for t in (targets or ()):
+            pt = self.schedule_for_target(t)
+            pairs.append((pt.schedule, pt.fp))
+        if schedules is not None:
+            fps = fps if fps is not None else [None] * len(schedules)
+            pairs.extend(zip(schedules, fps))
+        if not pairs:
+            pairs.append((None, None))   # the engine's resolved default
         r = self.cfg.rnn
-        self.predict(np.zeros((1, r.seq_len, r.input_size), np.float32),
-                     schedule=schedule, fp=fp)
+        out: Dict[str, Dict] = {}
+        for sched, fp in pairs:
+            key = self._ensure_key(*self.resolve(sched, fp))
+            mb, _ = self.batcher.policy(key)
+            rows = mb if self.pad_batches else 1
+            x = jax.ShapeDtypeStruct((rows, r.seq_len, r.input_size),
+                                     jnp.float32)
+            out[key] = self._infer_cache[key].warm(self.params, x)
+        return out
 
     # -- batch-1 latency fast path ------------------------------------------
 
@@ -269,7 +331,9 @@ class RNNServingEngine:
             return rnn_tagger.forward(cfg, params, x, fp=fp, impl=impl,
                                       schedule=sched)
 
-        return jax.jit(infer)
+        return CachedExecutor(jax.jit(infer), self.compile_cache, key,
+                              self._executor_meta("rnn_one", sched, fp),
+                              name_hint=f"{key}-one")
 
     def predict_one(self, x: np.ndarray,
                     schedule: Optional[KernelSchedule] = None,
@@ -392,10 +456,14 @@ class RNNServingEngine:
         key = self._ensure_key(sched, fpr)
         x = np.random.RandomState(0).randn(
             batch, r.seq_len, r.input_size).astype(np.float32)
-        self._predict_key(key, x)                   # compile
+        # through _predict_padded, NOT _predict_key: benchmarking at
+        # arbitrary batch sizes must measure (and compile) the SAME padded
+        # serving-shape executable the flush path runs — a direct call per
+        # distinct batch size would silently stack extra traces on the key
+        self._predict_padded(key, x)                # compile
         t0 = time.perf_counter()
         for _ in range(iters):
-            self._predict_key(key, x)
+            self._predict_padded(key, x)
         dt = (time.perf_counter() - t0) / iters
         est = estimate_schedule(sched, r, fpr)
         return {"key": key, "batch": batch, "latency_s": dt,
@@ -412,7 +480,15 @@ class RNNServingEngine:
 
         Requests served on the bare DEFAULT_SCHEDULE_KEY queue report the
         engine's RESOLVED schedule (the kernel they actually executed) with
-        its estimate, not an estimate-less row."""
+        its estimate, not an estimate-less row.  Compiles always belong to
+        the resolved key's own row: the default row reports ``traces: 0``
+        and points at ``resolved_key`` — attributing the resolved key's
+        trace count to BOTH rows would double-report the same compiles
+        whenever both queues saw traffic.
+
+        Each row also carries the ``compile`` column — the persistent
+        cache's per-key cold/warm split (hit rate + first-request compile
+        seconds), the zero-warmup acceptance signal."""
         specs = dict(self._key_specs)
         resolved_from: Dict[str, str] = {}
         if (DEFAULT_SCHEDULE_KEY in self.batcher.stats
@@ -426,9 +502,10 @@ class RNNServingEngine:
             report[key] = {
                 "schedule": sched,
                 "fp": fpr,
-                "traces": self.trace_count(resolved_from.get(key, key)),
+                "traces": 0 if key in resolved_from else self.trace_count(key),
                 "measured": self.batcher.key_stats(key).summary(),
                 "analytical": est.report_row(clock_mhz),
+                "compile": self.compile_cache.report_row(key),
             }
             if key in resolved_from:
                 report[key]["resolved_key"] = resolved_from[key]
@@ -453,12 +530,16 @@ def format_serve_report(report: Dict[str, Dict],
                         clock_mhz: float = 200.0) -> str:
     """Render serve_report() as the measured-vs-analytical table."""
     lines = [f"{'schedule key':38s} {'served':>6s} {'meas p50':>10s} "
-             f"{'meas p99':>10s} {'est lat':>9s} {'est II':>8s} {'DSP':>6s}"]
+             f"{'meas p99':>10s} {'est lat':>9s} {'est II':>8s} {'DSP':>6s} "
+             f"{'cold/warm':>9s} {'hit':>5s}"]
     for key, row in report.items():
         m, a = row["measured"], row["analytical"]
+        c = row.get("compile", {})
+        cw = f"{int(c.get('cold', 0))}/{int(c.get('warm', 0))}"
         lines.append(
             f"{key:38s} {int(m['served']):6d} "
             f"{m['latency_p50_s'] * 1e3:8.2f}ms "
             f"{m['latency_p99_s'] * 1e3:8.2f}ms "
-            f"{a['latency_us']:7.2f}us {a['ii_cycles']:8d} {a['dsp']:6d}")
+            f"{a['latency_us']:7.2f}us {a['ii_cycles']:8d} {a['dsp']:6d} "
+            f"{cw:>9s} {c.get('hit_rate', 0.0):4.0%}")
     return "\n".join(lines)

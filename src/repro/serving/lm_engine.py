@@ -40,10 +40,11 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core.hls.resources import estimate_lm_decode
 from repro.kernels.schedule import (DEFAULT_SCHEDULE_KEY, KernelSchedule,
-                                    schedule_key)
+                                    cache_meta, schedule_key)
 from repro.models.decode import (cache_specs, decode_schedulable, decode_step,
                                  pack_decode_params)
-from repro.serving.batcher import KeyStats
+from repro.serving.batcher import KeyStats, _now
+from repro.serving.compile_cache import CachedExecutor, CompileCache
 
 
 @dataclass
@@ -68,7 +69,8 @@ class _KeyedDecoder:
 
     def __init__(self, cfg: ModelConfig, key: str,
                  schedule: Optional[KernelSchedule], *, max_batch: int,
-                 max_seq: int, cache_dtype: str, params: Optional[Dict] = None):
+                 max_seq: int, cache_dtype: str, params: Optional[Dict] = None,
+                 compile_cache: Optional[CompileCache] = None):
         self.key = key
         self.schedule = schedule
         self.scheduled = schedule is not None and decode_schedulable(cfg)
@@ -86,13 +88,34 @@ class _KeyedDecoder:
                        if self.scheduled and params is not None else None)
 
         def step(params, cache, tokens, pos, packed=None):
-            # Python side effect runs at TRACE time only: one trace per key
-            # is the keyed-cache efficiency criterion (RNN engine parity)
+            # Python side effect runs at COLD lower/compile time only: one
+            # trace per key is the keyed-cache efficiency criterion (RNN
+            # engine parity); a warm persistent-cache hit deserializes the
+            # executable without tracing, so this stays 0 on a warm start
             self.traces += 1
             return decode_step(cfg, params, cache, tokens, pos,
                                schedule=schedule, packed=packed)
 
-        self._step = jax.jit(step, donate_argnums=(1,))
+        meta = {"kind": "lm_decode_step", "cfg": repr(cfg),
+                "max_batch": max_batch, "max_seq": max_seq,
+                "cache_dtype": cache_dtype,
+                **cache_meta(schedule, None)}
+        self._step = CachedExecutor(
+            jax.jit(step, donate_argnums=(1,)),
+            compile_cache if compile_cache is not None else CompileCache(),
+            key, meta, name_hint=f"lm-{key}")
+
+    def warm_step(self, params: Dict) -> Dict:
+        """Ensure this key's decode-step executable exists without ticking
+        (nothing executes, the KV cache is untouched): lowers against the
+        exact shapes ``_tick_decoder`` calls with — warm over a persistent
+        cache, compile-and-store when cold."""
+        tok = jax.ShapeDtypeStruct((self.max_batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((self.max_batch,), jnp.int32)
+        args = (params, self.cache, tok, pos)
+        if self.packed is not None:
+            args = args + (self.packed,)
+        return self._step.warm(*args)
 
     @property
     def any_active(self) -> bool:
@@ -109,13 +132,15 @@ class LMServingEngine:
     def __init__(self, cfg: ModelConfig, params: Dict, *,
                  max_batch: int = 4, max_seq: int = 256,
                  cache_dtype: str = "float32",
-                 schedule: Optional[KernelSchedule] = None):
+                 schedule: Optional[KernelSchedule] = None,
+                 cache_dir: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
         self.schedule = schedule            # default-request schedule
+        self.compile_cache = CompileCache(cache_dir)
         self._decoders: Dict[str, _KeyedDecoder] = {}
         self._next_req = 0
         # eagerly build the default decoder: same allocation behavior as the
@@ -139,9 +164,22 @@ class LMServingEngine:
                                 max_batch=self.max_batch,
                                 max_seq=self.max_seq,
                                 cache_dtype=self.cache_dtype,
-                                params=self.params)
+                                params=self.params,
+                                compile_cache=self.compile_cache)
             self._decoders[key] = dec
         return dec
+
+    def prewarm(self, schedules: Optional[List[Optional[KernelSchedule]]]
+                = None) -> Dict[str, Dict]:
+        """Zero-warmup for the decode path: build each schedule's keyed
+        decoder and make its step executable exist before the first tick —
+        deserialized from a warm ``cache_dir`` (zero jit compiles) or
+        compiled once and stored.  No schedules: the engine default."""
+        out: Dict[str, Dict] = {}
+        for sched in (schedules if schedules is not None else [None]):
+            dec = self._decoder_for(sched)
+            out[dec.key] = dec.warm_step(self.params)
+        return out
 
     def keys(self) -> List[str]:
         return list(self._decoders)
@@ -173,7 +211,9 @@ class LMServingEngine:
         s.pos = 0
         s.tokens = list(prompt)
         s.max_new = max_new
-        s.arrival_s = time.time() if now is None else now
+        # monotonic clock (batcher._now), matching the RNN path: wall-clock
+        # time.time() made request latencies NTP-step sensitive
+        s.arrival_s = _now() if now is None else now
         s._prompt_len = len(prompt)
         return s.req_id
 
@@ -224,9 +264,9 @@ class LMServingEngine:
             if done:
                 finished[s.req_id] = list(s.tokens)
                 s.active = False        # slot freed for the next request
-                # same clock domain as add_request: wall time by default,
+                # same clock domain as add_request: monotonic by default,
                 # the caller's logical clock when both pass ``now``
-                t = time.time() if now is None else now
+                t = _now() if now is None else now
                 dec.stats.record_one(t - s.arrival_s)
         if finished:
             dec.stats.batches += 1
@@ -267,7 +307,8 @@ class LMServingEngine:
                            "fp": None,
                            "traces": dec.traces,
                            "measured": measured,
-                           "analytical": analytical}
+                           "analytical": analytical,
+                           "compile": self.compile_cache.report_row(key)}
         return report
 
     def run_to_completion(self, max_ticks: int = 512,

@@ -1,0 +1,305 @@
+"""Zero-warmup serving: the persistent AOT compile cache.
+
+Acceptance criteria (ISSUE 7):
+  * a FRESH engine constructed over a warm cache directory answers its
+    first serving-path request with ZERO jit compiles (trace counters),
+    bit-identical to the uncached jit path;
+  * corrupted cache entries degrade to a jit compile with a warning —
+    never a crash;
+  * ``serve_report()`` carries per-key cold/warm hit rates;
+  * ``prewarm(targets=...)`` / the explorer's frontier hook warm a list of
+    design points ahead of traffic;
+  * the LM decode path gets the same guarantee through its keyed decoders.
+"""
+
+import pickle
+
+import jax
+import numpy as np
+import pytest
+
+from repro.autotune import DesignTarget, SpaceSpec
+from repro.autotune.explorer import explore
+from repro.config import FixedPointConfig
+from repro.kernels.schedule import KernelSchedule, cache_meta, schedule_key
+from repro.models import build_model
+from repro.registry import get_config
+from repro.serving import CompileCache, LMServingEngine, RNNServingEngine
+from repro.testing import tiny_config
+
+SCHED = KernelSchedule(reuse_factor=2, mode="static", block_batch=4,
+                       backend="pallas_interpret")
+
+
+@pytest.fixture(scope="module")
+def gru_tagger():
+    cfg = get_config("top-tagging-gru")
+    return cfg, build_model(cfg).init(jax.random.PRNGKey(0))
+
+
+def _engine(gru_tagger, cache_dir=None, **kw):
+    cfg, params = gru_tagger
+    kw.setdefault("max_batch", 4)
+    return RNNServingEngine(cfg, params, cache_dir=cache_dir, **kw)
+
+
+def _serve_once(eng, x):
+    """One serving-path round trip (submit -> padded flush), batch rows."""
+    reqs = [eng.submit(x[i], schedule=SCHED) for i in range(x.shape[0])]
+    eng.flush(force=True)
+    return np.stack([r.result for r in reqs])
+
+
+# ---------------------------------------------------------------------------
+# Cold -> warm round trip (the PR's acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_cold_then_warm_engine_zero_compiles_bit_identical(gru_tagger,
+                                                           tmp_path, rng):
+    key = schedule_key(SCHED)
+    x = rng.randn(4, 20, 6).astype(np.float32)
+
+    cold = _engine(gru_tagger, cache_dir=tmp_path)
+    got_cold = _serve_once(cold, x)
+    assert cold.trace_count(key) == 1                 # first process compiles
+    row = cold.serve_report()[key]
+    assert row["compile"]["cold"] == 1
+    assert row["compile"]["warm"] == 0
+    assert row["compile"]["first_compile_s"] > 0
+    assert list(tmp_path.glob("*.jaxcache"))          # artifact on disk
+    assert not list(tmp_path.glob("*.tmp.*"))         # rename left no temp
+
+    # a FRESH engine over the same cache dir: first request, zero compiles
+    warm = _engine(gru_tagger, cache_dir=tmp_path)
+    got_warm = _serve_once(warm, x)
+    assert warm.trace_count(key) == 0                 # ZERO jit compiles
+    assert warm.compile_cache.cold_compiles == 0
+    row = warm.serve_report()[key]
+    assert row["compile"]["warm"] == 1
+    assert row["compile"]["hit_rate"] == 1.0
+
+    # bit-identical to the uncached jit path
+    ref = _engine(gru_tagger)                         # no cache_dir: plain jit
+    got_jit = _serve_once(ref, x)
+    np.testing.assert_array_equal(got_warm, got_jit)
+    np.testing.assert_array_equal(got_cold, got_jit)
+
+
+def test_corrupted_cache_entry_falls_back_to_jit(gru_tagger, tmp_path, rng):
+    x = rng.randn(4, 20, 6).astype(np.float32)
+    key = schedule_key(SCHED)
+    want = _serve_once(_engine(gru_tagger, cache_dir=tmp_path), x)
+    entries = list(tmp_path.glob("*.jaxcache"))
+    assert entries
+    for p in entries:                                  # corrupt every entry
+        p.write_bytes(b"not a serialized executable")
+
+    eng = _engine(gru_tagger, cache_dir=tmp_path)
+    with pytest.warns(RuntimeWarning, match="falling back to jit"):
+        got = _serve_once(eng, x)
+    np.testing.assert_array_equal(got, want)           # served correctly
+    assert eng.trace_count(key) == 1                   # via a cold compile
+    assert eng.serve_report()[key]["compile"]["errors"] >= 1
+
+
+def test_stale_metadata_is_never_served(gru_tagger, tmp_path, rng):
+    """An entry whose stored metadata disagrees with the expected content
+    hash (e.g. a colliding filename from another toolchain) is rejected."""
+    x = rng.randn(4, 20, 6).astype(np.float32)
+    _serve_once(_engine(gru_tagger, cache_dir=tmp_path), x)
+    entry = next(iter(tmp_path.glob("*.jaxcache")))
+    doc = pickle.loads(entry.read_bytes())
+    doc["meta"] = {**doc["meta"], "jaxlib": "0.0.0"}   # stale toolchain
+    entry.write_bytes(pickle.dumps(doc))
+    eng = _engine(gru_tagger, cache_dir=tmp_path)
+    with pytest.warns(RuntimeWarning, match="unusable"):
+        _serve_once(eng, x)
+    assert eng.trace_count(schedule_key(SCHED)) == 1   # recompiled
+
+
+def test_distinct_schedule_fp_shape_get_distinct_entries(gru_tagger,
+                                                         tmp_path, rng):
+    """The content hash separates schedule, fp, and shape-bucket axes — a
+    warm hit can never hand back another design point's executable."""
+    eng = _engine(gru_tagger, cache_dir=tmp_path)
+    x = rng.randn(4, 20, 6).astype(np.float32)
+    fp = FixedPointConfig(16, 6)
+    _serve_once(eng, x)                                    # (SCHED, float)
+    n1 = len(list(tmp_path.glob("*.jaxcache")))
+    reqs = [eng.submit(x[i], schedule=SCHED, fp=fp) for i in range(4)]
+    eng.flush(force=True)                                  # (SCHED, ap16_6)
+    assert all(r.result is not None for r in reqs)
+    n2 = len(list(tmp_path.glob("*.jaxcache")))
+    assert n2 == n1 + 1
+    # same key, different shape bucket (a different max_batch replica)
+    other = _engine(gru_tagger, cache_dir=tmp_path, max_batch=2)
+    _serve_once(other, x[:2])
+    assert len(list(tmp_path.glob("*.jaxcache"))) == n2 + 1
+    assert other.trace_count(schedule_key(SCHED)) == 1     # cold, not stale
+
+
+def test_cache_meta_is_exhaustive_over_schedule_axes():
+    """Every schedule dataclass field lands in the persistent-cache
+    identity, so a future axis invalidates entries instead of sharing."""
+    import dataclasses
+
+    base = cache_meta(SCHED, None)["schedule"]
+    assert set(base) == {f.name for f in dataclasses.fields(KernelSchedule)}
+    assert cache_meta(SCHED, None) != cache_meta(SCHED.replace(ii=0,
+                                                 mode="pipeline"), None)
+    assert (cache_meta(SCHED, FixedPointConfig(16, 6))
+            != cache_meta(SCHED, FixedPointConfig(8, 3)))
+
+
+# ---------------------------------------------------------------------------
+# Pre-warm APIs
+# ---------------------------------------------------------------------------
+
+
+def test_prewarm_targets_then_fresh_engine_serves_warm(gru_tagger, tmp_path,
+                                                       rng):
+    targets = [DesignTarget(max_dsp=600), DesignTarget(objective="latency")]
+    eng = _engine(gru_tagger, cache_dir=tmp_path)
+    report = eng.prewarm(targets=targets)
+    assert report and all(r["status"] == "cold" for r in report.values())
+    keys = list(report)
+
+    fresh = _engine(gru_tagger, cache_dir=tmp_path)
+    report2 = fresh.prewarm(targets=targets)
+    assert [r["status"] for r in report2.values()] == ["warm"] * len(keys)
+    assert fresh.compile_cache.cold_compiles == 0
+    # first real request on a prewarmed queue: zero compiles, correct result
+    x = rng.randn(3, 20, 6).astype(np.float32)
+    pt = fresh.schedule_for_target(targets[0])
+    reqs = [fresh.submit(x[i], target=targets[0]) for i in range(3)]
+    fresh.flush(force=True)
+    assert fresh.trace_count(pt.key) == 0
+    ref = _engine(gru_tagger)
+    want = ref.predict(x, schedule=pt.schedule, fp=pt.fp)
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.result), want[i])
+
+
+def test_auto_schedule_warms_selected_point(gru_tagger, tmp_path):
+    spec = SpaceSpec(backends=("pallas_interpret",), block_batches=(4,))
+    eng = _engine(gru_tagger, cache_dir=tmp_path)
+    pt = eng.auto_schedule(DesignTarget(max_dsp=600), spec=spec)  # warmup=True
+    assert eng.compile_cache.stats(pt.key).cold == 1
+    fresh = _engine(gru_tagger, cache_dir=tmp_path)
+    fresh.auto_schedule(DesignTarget(max_dsp=600), spec=spec)
+    assert fresh.compile_cache.cold_compiles == 0      # warm start
+    assert fresh.trace_count(pt.key) == 0
+
+
+def test_exploration_prewarm_hook(gru_tagger, tmp_path):
+    cfg, _ = gru_tagger
+    spec = SpaceSpec(backends=("xla",), block_batches=(4,))
+    ex = explore(cfg, DesignTarget(objective="latency"), spec)
+    eng = _engine(gru_tagger, cache_dir=tmp_path)
+    report = ex.prewarm(eng, k=2)
+    assert len(report) == min(2, len(ex.feasible))
+    assert all(r["status"] == "cold" for r in report.values())
+    fresh = _engine(gru_tagger, cache_dir=tmp_path)
+    assert all(r["status"] == "warm"
+               for r in ex.prewarm(fresh, k=2).values())
+
+
+def test_warmup_without_cache_dir_still_works(gru_tagger, rng):
+    """cache_dir=None keeps the old in-process behavior: warmup compiles the
+    serving bucket once, the flush path reuses it (no disk involved)."""
+    eng = _engine(gru_tagger)
+    out = eng.warmup(schedule=SCHED)
+    key = schedule_key(SCHED)
+    assert out[key]["status"] == "cold"
+    assert eng.trace_count(key) == 1
+    x = rng.randn(4, 20, 6).astype(np.float32)
+    _serve_once(eng, x)
+    assert eng.trace_count(key) == 1                   # no second compile
+
+
+# ---------------------------------------------------------------------------
+# LM decode path
+# ---------------------------------------------------------------------------
+
+
+def test_lm_engine_cold_then_warm_decode(tmp_path):
+    cfg = tiny_config(get_config("stablelm-3b"))
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+
+    cold = LMServingEngine(cfg, params, max_batch=2, max_seq=32,
+                           cache_dir=tmp_path)
+    a = cold.add_request([3, 4, 5], max_new=2)
+    done = cold.run_to_completion()
+    assert cold.trace_count("default") == 1
+    assert cold.serve_report()["default"]["compile"]["cold"] == 1
+
+    warm = LMServingEngine(cfg, params, max_batch=2, max_seq=32,
+                           cache_dir=tmp_path)
+    b = warm.add_request([3, 4, 5], max_new=2)
+    done2 = warm.run_to_completion()
+    assert warm.trace_count("default") == 0            # ZERO decode compiles
+    assert done2[b] == done[a]                         # same greedy tokens
+    row = warm.serve_report()["default"]
+    assert row["compile"]["warm"] == 1 and row["compile"]["cold"] == 0
+
+    # and bit-identical to a never-cached engine
+    ref = LMServingEngine(cfg, params, max_batch=2, max_seq=32)
+    c = ref.add_request([3, 4, 5], max_new=2)
+    assert ref.run_to_completion()[c] == done[a]
+
+
+def test_lm_prewarm_keyed_schedule(tmp_path):
+    cfg = tiny_config(get_config("stablelm-3b"))
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    sched = KernelSchedule(reuse_factor=2, mode="static")
+    eng = LMServingEngine(cfg, params, max_batch=2, max_seq=32,
+                          cache_dir=tmp_path)
+    rep = eng.prewarm(schedules=[sched])
+    assert rep[schedule_key(sched)]["status"] == "cold"
+    fresh = LMServingEngine(cfg, params, max_batch=2, max_seq=32,
+                            cache_dir=tmp_path)
+    rep2 = fresh.prewarm(schedules=[sched])
+    assert rep2[schedule_key(sched)]["status"] == "warm"
+    rid = fresh.add_request([5, 7], max_new=2, schedule=sched)
+    out = fresh.run_to_completion()
+    assert fresh.trace_count(schedule_key(sched)) == 0
+    ref = LMServingEngine(cfg, params, max_batch=2, max_seq=32)
+    r2 = ref.add_request([5, 7], max_new=2, schedule=sched)
+    assert ref.run_to_completion()[r2] == out[rid]
+
+
+# ---------------------------------------------------------------------------
+# CompileCache unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_compile_cache_disabled_counts_cold_compiles():
+    cache = CompileCache(None)
+    assert not cache.enabled
+    assert cache.load("x", {"k": 1}, "key") is None
+    assert cache.store("x", {"k": 1}, object(), "key") is False
+    cache.record_cold("key", 0.5)
+    cache.record_warm("key")
+    row = cache.report_row("key")
+    assert row["cold"] == 1 and row["warm"] == 1 and row["hit_rate"] == 0.5
+    assert row["first_compile_s"] == 0.5
+
+
+def test_compile_cache_store_is_atomic_and_concurrent_safe(tmp_path):
+    """Two caches (two replicas) storing the same entry: both succeed, one
+    complete file remains, no temp litter — the write-temp-then-rename
+    contract N workers sharing a directory rely on."""
+    import jax.numpy as jnp
+
+    f = jax.jit(lambda x: x * 2)
+    compiled = f.lower(jnp.ones((2,))).compile()
+    meta = {"kind": "unit"}
+    a, b = CompileCache(tmp_path), CompileCache(tmp_path)
+    assert a.store("e", meta, compiled, "k")
+    assert b.store("e", meta, compiled, "k")
+    files = list(tmp_path.iterdir())
+    assert len(files) == 1 and files[0].suffix == ".jaxcache"
+    fn = a.load("e", meta, "k")
+    assert fn is not None
+    np.testing.assert_array_equal(np.asarray(fn(jnp.ones((2,)))), [2.0, 2.0])

@@ -4,9 +4,11 @@ import jax
 import numpy as np
 import pytest
 
+from repro.kernels.schedule import KernelSchedule, schedule_key
 from repro.models import build_model
 from repro.registry import get_config
 from repro.serving import LMServingEngine, MicroBatcher, RNNServingEngine
+from repro.serving.batcher import _pad_stack
 from repro.testing import tiny_config
 
 
@@ -94,6 +96,105 @@ def test_microbatcher_per_key_policy():
     mb.submit(np.zeros(2), now=0.0, key="slow")
     assert mb.ready_keys(now=0.0) == ["fast"]       # slow waits for 8/10 s
     assert len(mb.run(lambda x: x, now=0.0)) == 1
+
+
+def test_microbatcher_latencies_survive_backwards_wallclock(monkeypatch):
+    """Regression (ISSUE 7): the batcher stamped arrival/done with wall-clock
+    ``time.time()`` while the engines measured with ``perf_counter`` — an
+    NTP step backwards between submit and flush produced NEGATIVE latencies
+    in KeyStats.  The batcher is monotonic end-to-end now: a time.time()
+    that jumps backwards must not be consulted at all."""
+    import time as _time
+
+    from repro.serving import batcher as batcher_mod
+
+    wall = iter([1000.0, 999.0, 500.0, 100.0, 3.0])    # NTP stepping back
+    monkeypatch.setattr(batcher_mod.time, "time",
+                        lambda: next(wall), raising=True)
+    mb = MicroBatcher(max_batch=2, max_wait_s=0.0)
+    mb.submit(np.zeros(2, np.float32))                 # no now=: real clocks
+    _time.sleep(0.001)
+    mb.submit(np.zeros(2, np.float32))
+    done = mb.run(lambda x: x + 1)
+    assert len(done) == 2
+    for r in done:
+        assert r.latency_s is not None and r.latency_s >= 0.0
+    s = mb.key_stats("default")
+    assert s.latency_sum_s >= 0.0 and s.latency_max_s >= 0.0
+    assert all(v >= 0.0 for v in s.latencies_s)
+
+
+def test_pad_stack_mixed_dtypes_raise():
+    """Regression (ISSUE 7): _pad_stack padded with arrs[0].dtype, silently
+    down/up-casting mixed-dtype payloads sharing one queue."""
+    with pytest.raises(ValueError, match="mixed payload dtypes"):
+        _pad_stack([np.zeros((3, 2), np.float32),
+                    np.zeros((2, 2), np.float64)])
+    # and through the batcher path
+    mb = MicroBatcher(max_batch=2, max_wait_s=0.0)
+    mb.submit(np.zeros((3, 2), np.float32), now=0.0)
+    mb.submit(np.zeros((2, 2), np.float16), now=0.0)
+    with pytest.raises(ValueError, match="mixed payload dtypes"):
+        mb.run(lambda x: x, now=0.1, force=True)
+    # uniform dtypes still pad fine
+    out, lengths, ragged = _pad_stack([np.zeros((3, 2), np.float32),
+                                       np.zeros((2, 2), np.float32)])
+    assert ragged and out.dtype == np.float32 and list(lengths) == [3, 2]
+
+
+def test_benchmark_and_mask_ragged_keep_one_trace_per_key(rng):
+    """Regression (ISSUE 7): benchmark() and the ragged='mask' path of
+    predict_ragged called _predict_key directly, bypassing _pad_rows — each
+    distinct batch size stacked an extra trace on the key, silently breaking
+    the one-trace-per-key invariant and inflating serve_report's traces."""
+    cfg = get_config("top-tagging-gru")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    s = KernelSchedule(reuse_factor=1, mode="static", backend="xla")
+    key = schedule_key(s)
+
+    eng = RNNServingEngine(cfg, params, max_batch=8)
+    for batch in (2, 4, 7):                       # mixed batch sizes
+        eng.benchmark(batch, iters=1, schedule=s)
+    assert eng.trace_count(key) == 1
+
+    eng2 = RNNServingEngine(cfg, params, max_batch=8, ragged="mask")
+    full = rng.randn(8, 20, 6).astype(np.float32)
+    for n in (2, 3, 5):                           # mixed request counts
+        outs = eng2.predict_ragged([full[i] for i in range(n)], schedule=s)
+        assert len(outs) == n
+    assert eng2.trace_count(key) == 1
+    # mask-path results still match direct predict row-wise
+    want = eng2.predict(full[:3], schedule=s)
+    got = np.stack(eng2.predict_ragged([full[i] for i in range(3)],
+                                       schedule=s))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_serve_report_does_not_double_count_default_traces(rng):
+    """Regression (ISSUE 7): when BOTH the bare default queue and the
+    resolved key's own queue saw traffic, serve_report attributed the
+    resolved key's trace count to both rows — the same compiles reported
+    twice.  The default row now reports traces=0 with a resolved_key
+    pointer; the compiles live on the resolved row only."""
+    cfg = get_config("top-tagging-gru")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eng = RNNServingEngine(cfg, params, max_batch=4)
+    resolved = schedule_key(*eng.resolve())
+    x = rng.randn(4, 20, 6).astype(np.float32)
+    for i in range(2):
+        eng.batcher.submit(x[i])                       # bare default queue
+    for i in range(2, 4):
+        eng.submit(x[i], schedule=eng.resolved_schedule)   # resolved queue
+    eng.flush(force=True)
+
+    report = eng.serve_report()
+    assert report["default"]["resolved_key"] == resolved
+    assert report["default"]["traces"] == 0            # never double-counted
+    assert report[resolved]["traces"] == eng.trace_count(resolved) == 1
+    total_reported = sum(r["traces"] for r in report.values())
+    assert total_reported == sum(eng._traces.values())  # exact accounting
+    assert report["default"]["measured"]["served"] == 2
+    assert report[resolved]["measured"]["served"] == 2
 
 
 def test_rnn_engine_static_nonstatic_same_predictions(rng):
