@@ -37,8 +37,8 @@ def smoke() -> int:
                             bench_kernels, bench_latency_resources,
                             bench_quant, bench_quantization,
                             bench_roofline, bench_serving,
-                            bench_static_nonstatic, bench_throughput,
-                            bench_warmup)
+                            bench_static_nonstatic, bench_streaming,
+                            bench_throughput, bench_warmup)
     print("smoke/imports,0,ok")
 
     from repro.kernels.schedule import KernelSchedule
@@ -81,6 +81,12 @@ def main() -> None:
                          "compile cache must serve its first request with "
                          "zero jit traces, bit-identical; records cold-vs-"
                          "warm first-request latency into the perf JSON")
+    ap.add_argument("--stream-smoke", action="store_true",
+                    help="streaming fail-fast: overload replay at 0.5x/1x/2x "
+                         "priced throughput; <=1x must never shed, 2x must "
+                         "shed and/or downgrade, admitted p99 within "
+                         "deadline, exact accounting, full drain; per-stage "
+                         "percentiles ride the perf JSON under 'streaming'")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (e.g. roofline,kernels)")
     args, _ = ap.parse_known_args()
@@ -108,6 +114,11 @@ def main() -> None:
         bench_warmup.smoke(args.json or "BENCH_rnn_kernels.json")
         sys.exit(0)
 
+    if args.stream_smoke:
+        from benchmarks import bench_streaming
+        bench_streaming.smoke(args.json or "BENCH_rnn_kernels.json")
+        sys.exit(0)
+
     if args.json is not None:
         from benchmarks import bench_kernels
         doc = bench_kernels.write_json(args.json, full=args.full)
@@ -132,7 +143,7 @@ def main() -> None:
                             bench_latency_resources, bench_quant,
                             bench_quantization, bench_roofline,
                             bench_serving, bench_static_nonstatic,
-                            bench_throughput, bench_warmup)
+                            bench_streaming, bench_throughput, bench_warmup)
     benches = {
         "latency_resources": bench_latency_resources,
         "static_nonstatic": bench_static_nonstatic,
@@ -145,6 +156,7 @@ def main() -> None:
         "decode": bench_decode,
         "quant": bench_quant,
         "warmup": bench_warmup,
+        "streaming": bench_streaming,
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

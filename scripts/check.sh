@@ -22,7 +22,13 @@
 #      ZERO jit traces and bit-identical outputs (both serving paths); the
 #      cold-vs-warm first-request latencies ride the perf record under
 #      "warmup" (this stage must run AFTER --json, which rebuilds the doc)
-#   8. tier-1: pytest -x -q   — the full suite, first failure stops
+#   8. benchmarks/run.py --stream-smoke — streaming fail-fast: deadline-
+#      aware overload replay at 0.5x/1x/2x priced throughput; fails if any
+#      replay deadlocks, an admitted request's p99 exceeds its deadline,
+#      traffic at <=1x rate sheds at all, or 2x overload passes unnoticed
+#      (neither shed nor downgraded); per-stage p50/p99 + shed/downgrade
+#      counts ride the perf record under "streaming" (also after --json)
+#   9. tier-1: pytest -x -q   — the full suite, first failure stops
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -47,6 +53,9 @@ python benchmarks/run.py --json
 
 echo "== warmup smoke =="
 python benchmarks/run.py --warmup-smoke
+
+echo "== streaming smoke =="
+python benchmarks/run.py --stream-smoke
 
 echo "== tier-1 tests =="
 python -m pytest -x -q

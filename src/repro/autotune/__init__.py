@@ -9,6 +9,7 @@ tables, turned into a solver.
 from repro.autotune.explorer import (  # noqa: F401
     Exploration,
     InfeasibleTargetError,
+    degradation_ladder,
     explore,
     explore_decode,
     is_feasible,

@@ -262,6 +262,63 @@ def select_decode(cfg: ModelConfig, target: DesignTarget,
 
 
 # ---------------------------------------------------------------------------
+# Degradation ladder (overload control's pre-warmed fallback schedules)
+# ---------------------------------------------------------------------------
+
+
+def degradation_ladder(cfg: ModelConfig, base: DesignPoint, *,
+                       spec: Optional[SpaceSpec] = None,
+                       fp=None,
+                       max_rungs: int = 4,
+                       min_gain: float = 1.5) -> Tuple[DesignPoint, ...]:
+    """Pre-warmable fallback schedules for graceful degradation under
+    overload — rung 0 is the resolved ``base`` point, every later rung
+    buys at least ``min_gain``x more priced throughput than the rung
+    before it.
+
+    When a streaming pipeline's sustained queue depth crosses its
+    high-water mark it steps DOWN this ladder (and back up on low water):
+    each step raises the admission rate (``admission_rate_eps`` of the
+    rung's estimate) the same way the paper trades ``reuse_factor`` —
+    giving up latency/resource headroom for initiation-interval
+    throughput, accuracy-neutral because every rung executes the same
+    trained weights, just under a different schedule.
+
+    Candidates come from the Pareto frontier of the float space, plus —
+    when ``fp`` is a native-int config — the native-legal quantized slice
+    (``space.native_int_legal``), priced WITH that fp, so an int8 rung can
+    appear where float pricing has no headroom left.  The result is
+    deterministic: throughput strictly ascends along the ladder, ties
+    broken toward fewer resources, deduped by serving key.
+    """
+    if max_rungs < 1:
+        raise ValueError(f"max_rungs must be >= 1: {max_rungs}")
+    if min_gain <= 1.0:
+        raise ValueError(f"min_gain must be > 1.0: {min_gain}")
+    clock = base.clock_mhz
+    candidates: List[DesignPoint] = list(explore(cfg, None, spec).frontier)
+    if is_native_int(fp):
+        qt = DesignTarget(fp=fp, objective="throughput", clock_mhz=clock)
+        candidates.extend(explore(cfg, qt, spec).frontier)
+    ladder: List[DesignPoint] = [base]
+    seen = {base.key}
+    # descending ii = ascending throughput: each accepted rung is the
+    # SMALLEST gain >= min_gain, keeping later rungs available for later
+    pool = sorted((p for p in candidates if p.key not in seen),
+                  key=lambda p: (-p.ii_cycles, p.dsp, p.bram_18k, p.key))
+    for p in pool:                       # ascending throughput order
+        if len(ladder) >= max_rungs:
+            break
+        if p.key in seen:
+            continue
+        if p.throughput_eps(clock) >= min_gain * ladder[-1].throughput_eps(
+                clock):
+            ladder.append(p)
+            seen.add(p.key)
+    return tuple(ladder)
+
+
+# ---------------------------------------------------------------------------
 # Measured refinement (the bench harness's steady-state timing)
 # ---------------------------------------------------------------------------
 

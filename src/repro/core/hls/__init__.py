@@ -15,6 +15,7 @@ from repro.core.hls.design_point import (  # noqa: F401
 from repro.core.hls.resources import (  # noqa: F401
     FPGA_PARTS,
     ScheduleEstimate,
+    admission_rate_eps,
     estimate_decode_step,
     estimate_lm_decode,
     estimate_schedule,

@@ -126,6 +126,17 @@ class ScheduleEstimate:
     def throughput_eps(self, clock_mhz: float = 200.0) -> float:
         return clock_mhz * 1e6 / max(self.ii_cycles, 1)
 
+    def service_s(self, clock_mhz: float = 200.0) -> float:
+        """End-to-end service time of one event, in seconds — the latency
+        half of the streaming pipeline's single-server queue model."""
+        return self.latency_us(clock_mhz) * 1e-6
+
+    def ii_s(self, clock_mhz: float = 200.0) -> float:
+        """Initiation interval in seconds — the server occupancy per event
+        (the next event may enter after this, even while the previous one
+        is still in flight on a pipelined design)."""
+        return max(self.ii_cycles, 1) / (clock_mhz * 1e6)
+
     def report_row(self, clock_mhz: float = 200.0) -> dict:
         """The analytical column of the serving layer's measured-vs-
         analytical table, keyed exactly like the measured one."""
@@ -228,6 +239,31 @@ def estimate_schedule(schedule: KernelSchedule, rnn, fp=None
     return ScheduleEstimate(schedule=schedule, latency_cycles=latency,
                             ii_cycles=ii, dsp=dsp, bram_18k=bram,
                             vmem_bytes=vmem, weight_vmem_bytes=weight_vmem)
+
+
+# ---------------------------------------------------------------------------
+# Throughput -> admission-rate bridge (the streaming pipeline's runtime gate)
+# ---------------------------------------------------------------------------
+
+
+def admission_rate_eps(estimate: ScheduleEstimate,
+                       clock_mhz: float = 200.0, *,
+                       utilization: float = 1.0) -> float:
+    """Events/s an admission gate may let through for one priced schedule.
+
+    This is the bridge that turns a :class:`DesignTarget` budget into a
+    RUNTIME guarantee: the analytical initiation-interval throughput of the
+    resolved schedule (``estimate.throughput_eps`` — the same number the
+    explorer's feasibility check read) becomes the refill rate of the
+    streaming pipeline's token bucket, derated by ``utilization``
+    (queueing theory: a single-server queue is only stable below 1.0;
+    1.0 is exact for deterministic arrivals, bursty traffic should derate).
+    Arrivals beyond this rate are shed at ingest instead of growing an
+    unbounded queue the design can never drain.
+    """
+    if not 0.0 < utilization <= 1.0:
+        raise ValueError(f"utilization must be in (0, 1]: {utilization}")
+    return utilization * estimate.throughput_eps(clock_mhz)
 
 
 # ---------------------------------------------------------------------------

@@ -2,6 +2,7 @@ from repro.kernels.schedule import schedule_key  # noqa: F401
 from repro.serving.batcher import (  # noqa: F401
     KeyStats,
     MicroBatcher,
+    QueueFullError,
     Request,
 )
 from repro.serving.compile_cache import (  # noqa: F401
@@ -13,4 +14,19 @@ from repro.serving.engine import (  # noqa: F401
     RNNServingEngine,
     format_serve_report,
 )
+from repro.serving.faults import (  # noqa: F401
+    FaultInjector,
+    InjectedFault,
+    VirtualClock,
+    break_engine_key,
+    corrupt_cache_entries,
+)
 from repro.serving.lm_engine import LMServingEngine  # noqa: F401
+from repro.serving.streaming import (  # noqa: F401
+    SHED_REASONS,
+    STAGES,
+    StreamingPipeline,
+    StreamRequest,
+    TokenBucket,
+    format_stream_report,
+)

@@ -53,10 +53,32 @@ class Request:
     fp: Any = None                     # Optional[FixedPointConfig]
     result: Any = None
     done_s: Optional[float] = None
+    error: Optional[BaseException] = None   # the flush failure, attached —
+                                            # a failed request is REPORTED,
+                                            # never silently dropped
 
     @property
     def latency_s(self) -> Optional[float]:
         return None if self.done_s is None else self.done_s - self.arrival_s
+
+    @property
+    def status(self) -> str:
+        """Exactly one of pending | answered | failed."""
+        if self.error is not None:
+            return "failed"
+        return "pending" if self.done_s is None else "answered"
+
+
+class QueueFullError(RuntimeError):
+    """Explicit bounded-queue reject: the submitter is told, counted per
+    key, and may shed / retry / downgrade — never a silent drop."""
+
+    def __init__(self, key: str, bound: int):
+        self.key = key
+        self.bound = bound
+        super().__init__(
+            f"queue {key!r} is full ({bound} pending): the admission layer "
+            f"must shed or downgrade instead of queueing unboundedly")
 
 
 # percentile window: enough samples for stable p99, bounded memory for
@@ -75,6 +97,8 @@ class KeyStats:
 
     served: int = 0
     batches: int = 0
+    failed: int = 0                    # flush-fn exceptions, per request
+    rejected: int = 0                  # bounded-queue explicit rejects
     latency_sum_s: float = 0.0
     latency_max_s: float = 0.0
     latencies_s: List[float] = field(default_factory=list)
@@ -92,12 +116,20 @@ class KeyStats:
         for r in batch:
             self.record_one(r.latency_s or 0.0)
 
+    def record_failed(self, n: int) -> None:
+        self.failed += n
+
+    def record_rejected(self) -> None:
+        self.rejected += 1
+
     def summary(self) -> Dict[str, float]:
         n = max(self.served, 1)
         lat = np.asarray(self.latencies_s) if self.latencies_s else np.zeros(1)
         return {
             "served": float(self.served),
             "batches": float(self.batches),
+            "failed": float(self.failed),
+            "rejected": float(self.rejected),
             "mean_batch": float(self.served) / max(self.batches, 1),
             "latency_mean_s": self.latency_sum_s / n,
             "latency_p50_s": float(np.percentile(lat, 50)),
@@ -156,8 +188,11 @@ class MicroBatcher:
 
     max_batch: int = 64
     max_wait_s: float = 0.002
+    max_queue: Optional[int] = None    # default per-key pending bound;
+                                       # None = unbounded (pre-PR behavior)
     _queues: Dict[str, List[Request]] = field(default_factory=dict)
     _policy: Dict[str, Tuple[int, float]] = field(default_factory=dict)
+    _bounds: Dict[str, Optional[int]] = field(default_factory=dict)
     _stats: Dict[str, KeyStats] = field(default_factory=dict)
     _ids: "itertools.count" = field(default_factory=itertools.count)
     _rr: int = 0                       # round-robin cursor over key order
@@ -165,13 +200,20 @@ class MicroBatcher:
     # -- policy / introspection ---------------------------------------------
 
     def set_policy(self, key: str, *, max_batch: Optional[int] = None,
-                   max_wait_s: Optional[float] = None) -> None:
+                   max_wait_s: Optional[float] = None,
+                   max_queue: Optional[int] = ...) -> None:  # type: ignore
         mb, mw = self.policy(key)
         self._policy[key] = (max_batch if max_batch is not None else mb,
                              max_wait_s if max_wait_s is not None else mw)
+        if max_queue is not ...:       # ... = leave the bound untouched
+            self._bounds[key] = max_queue
 
     def policy(self, key: str) -> Tuple[int, float]:
         return self._policy.get(key, (self.max_batch, self.max_wait_s))
+
+    def queue_bound(self, key: str) -> Optional[int]:
+        """Pending-request cap for one key (None = unbounded)."""
+        return self._bounds.get(key, self.max_queue)
 
     def keys(self) -> List[str]:
         """Keys in first-seen order (the round-robin order)."""
@@ -196,11 +238,20 @@ class MicroBatcher:
                fp: Any = None) -> Request:
         """Enqueue one request.  The queue key is, in priority order: the
         explicit ``key``, ``schedule_key(schedule, fp)`` when either is
-        given, else the default queue."""
+        given, else the default queue.
+
+        A bounded queue (``max_queue`` / ``set_policy(max_queue=...)``) that
+        is already full raises :class:`QueueFullError` — an EXPLICIT reject,
+        counted in the key's stats, so overload backpressure reaches the
+        submitter instead of growing the queue without limit."""
         if key is None:
             key = (schedule_key(schedule, fp)
                    if schedule is not None or fp is not None
                    else DEFAULT_SCHEDULE_KEY)
+        bound = self.queue_bound(key)
+        if bound is not None and len(self._queues.get(key, ())) >= bound:
+            self.key_stats(key).record_rejected()
+            raise QueueFullError(key, bound)
         r = Request(payload, _now() if now is None else now,
                     next(self._ids), key=key, schedule=schedule, fp=fp)
         self._queues.setdefault(key, []).append(r)
@@ -272,6 +323,14 @@ class MicroBatcher:
         lengths — the engine's flush functions do; a plain function gets the
         padded batch (and a RuntimeWarning), and per-request results whose
         shape equals the padded payload shape are un-padded on the way out.
+
+        An exception raised BY the infer function fails exactly this batch:
+        every drained request comes back with the error attached
+        (``status == "failed"``, counted in the key's stats) instead of the
+        exception propagating with the batch lost — so one key's broken
+        kernel can never drop another key's queued requests in
+        :meth:`run_all`.  (Payload-shape errors from padding still raise:
+        they are routing bugs at the submitter, and the existing contract.)
         """
         if key is None:
             key = self._next_key(now, ready_only=not force)
@@ -283,16 +342,28 @@ class MicroBatcher:
         if not batch:
             return []
         x, lengths, ragged = _pad_stack([r.payload for r in batch])
-        if ragged and _accepts_lengths(infer_fn):
-            out = np.asarray(infer_fn(x, lengths=lengths))
-        else:
-            if ragged:
-                warnings.warn(
-                    "ragged batch padded for an infer function without a "
-                    "'lengths' parameter: sequence-dependent models will "
-                    "compute on the zero padding", RuntimeWarning,
-                    stacklevel=2)
-            out = np.asarray(infer_fn(x))
+        try:
+            if ragged and _accepts_lengths(infer_fn):
+                out = np.asarray(infer_fn(x, lengths=lengths))
+            else:
+                if ragged:
+                    warnings.warn(
+                        "ragged batch padded for an infer function without a "
+                        "'lengths' parameter: sequence-dependent models will "
+                        "compute on the zero padding", RuntimeWarning,
+                        stacklevel=2)
+                out = np.asarray(infer_fn(x))
+        except Exception as e:
+            t = _now() if now is None else now
+            for r in batch:
+                r.error = e
+                r.done_s = t
+            self.key_stats(key).record_failed(len(batch))
+            warnings.warn(
+                f"flush of queue {key!r} failed ({type(e).__name__}: {e}); "
+                f"{len(batch)} request(s) failed with the error attached, "
+                f"other queues unaffected", RuntimeWarning, stacklevel=2)
+            return batch
         t = _now() if now is None else now
         for i, r in enumerate(batch):
             res = out[i]

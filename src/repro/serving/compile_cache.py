@@ -83,6 +83,7 @@ class KeyCompileStats:
     cold: int = 0                       # fresh lower+compile (one jit trace)
     warm: int = 0                       # served from a deserialized artifact
     errors: int = 0                     # load/store failures (fell back)
+    quarantined: int = 0                # known-corrupt entries skipped
     first_compile_s: Optional[float] = None
 
     def summary(self) -> Dict[str, float]:
@@ -91,6 +92,7 @@ class KeyCompileStats:
             "cold": float(self.cold),
             "warm": float(self.warm),
             "errors": float(self.errors),
+            "quarantined": float(self.quarantined),
             "hit_rate": (self.warm / total) if total else 0.0,
             "first_compile_s": self.first_compile_s,
         }
@@ -111,6 +113,14 @@ class CompileCache:
             self.dir.mkdir(parents=True, exist_ok=True)
         self._env = _env_meta()
         self._stats: Dict[str, KeyCompileStats] = {}
+        # negative cache: entry paths that already failed to deserialize.
+        # Without it a known-corrupt entry was re-read, re-unpickled and
+        # re-warned on EVERY request (the warn-and-fall-back path has no
+        # memory) — the fallback stayed correct but each request paid the
+        # doomed deserialization attempt.  First failure warns and
+        # quarantines; later lookups skip the file silently until a
+        # successful store replaces it.
+        self._quarantine: set = set()
 
     # -- accounting ----------------------------------------------------------
 
@@ -157,6 +167,10 @@ class CompileCache:
         if not self.enabled:
             return None
         path = self.entry_path(name_hint, meta)
+        if str(path) in self._quarantine:
+            # known corrupt: don't re-attempt (and re-warn) every request
+            self.stats(key).quarantined += 1
+            return None
         if not path.exists():
             return None
         try:
@@ -170,11 +184,13 @@ class CompileCache:
                     f"format): {path.name}")
             return serialize_executable.deserialize_and_load(
                 doc["payload"], doc["in_tree"], doc["out_tree"])
-        except Exception as e:  # corrupted/stale entry: warn, fall back
+        except Exception as e:  # corrupted/stale entry: warn ONCE, fall back
             self.stats(key).errors += 1
+            self._quarantine.add(str(path))
             warnings.warn(
                 f"compile cache entry {path.name} unusable "
-                f"({type(e).__name__}: {e}); falling back to jit compile",
+                f"({type(e).__name__}: {e}); falling back to jit compile "
+                f"(entry quarantined — not re-read until overwritten)",
                 RuntimeWarning, stacklevel=2)
             return None
 
@@ -200,6 +216,9 @@ class CompileCache:
                              "in_tree": in_tree,
                              "out_tree": out_tree}, f)
             os.replace(tmp, path)
+            # a fresh, complete entry now lives at this path: lift any
+            # quarantine from a corrupt predecessor
+            self._quarantine.discard(str(path))
             return True
         except Exception as e:  # unserializable executable, full disk, ...
             self.stats(key).errors += 1

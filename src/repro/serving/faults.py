@@ -1,0 +1,208 @@
+"""Fault-injection harness for the streaming pipeline — chaos, on purpose.
+
+A hard-real-time trigger path is judged by how it fails, not how it runs:
+when a stage hiccups, a kernel throws, a cache entry rots, or the clock
+steps backwards, the pipeline must degrade predictably — shed, downgrade,
+or fail THAT request with the error attached — never deadlock, never lose a
+request silently, never corrupt another tenant's results.  This module
+provides the controlled faults the chaos test suite drives through
+:class:`~repro.serving.streaming.StreamingPipeline`:
+
+  * :class:`FaultInjector` — armable per-stage *stalls* (extra seconds
+    charged at a stage boundary, visible to the deadline projections) and
+    *failures* (exceptions raised inside a stage, caught per request);
+  * :func:`break_engine_key` — replaces ONE schedule key's compiled infer
+    fn with one that raises N times then recovers: the flush-exception
+    fault the batcher's per-key isolation must contain;
+  * :func:`corrupt_cache_entries` — truncates/garbles persistent compile
+    cache artifacts on disk: the quarantine path's trigger;
+  * :class:`VirtualClock` — a drivable clock for deterministic replay,
+    with :meth:`VirtualClock.step_back` as the misbehaving-clock fault
+    (the pipeline's monotonic clamp must absorb it).
+
+Faults are one-shot by default (``times=1``) and consumed in arm order, so
+a chaos scenario reads as a script: arm, run, assert the degradation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, List, Optional
+
+
+class InjectedFault(RuntimeError):
+    """The exception a ``fail`` arm raises inside a pipeline stage."""
+
+
+@dataclass
+class _Arm:
+    kind: str                   # "stall" | "fail"
+    stage: str
+    seconds: float = 0.0        # stall only
+    exc: Optional[BaseException] = None   # fail only
+    after: int = 0              # skip this many matching checks first
+    remaining: int = 1          # then fire this many times
+
+
+@dataclass
+class FaultInjector:
+    """Scriptable per-stage faults; a default (empty) injector is inert.
+
+    ``stall(stage, seconds)`` charges extra seconds at that stage boundary
+    — in a replay the stall lands in the simulated clock domain, so
+    deadline projections and the per-stage budget report see it honestly.
+    ``fail(stage)`` raises :class:`InjectedFault` (or a supplied exception)
+    when the pipeline enters that stage; the pipeline converts it into a
+    per-request failure with the error attached.
+    """
+
+    _arms: List[_Arm] = field(default_factory=list)
+    fired: List[str] = field(default_factory=list)   # audit log
+
+    # -- arming --------------------------------------------------------------
+
+    def stall(self, stage: str, seconds: float, *, times: int = 1,
+              after: int = 0) -> "FaultInjector":
+        if seconds < 0:
+            raise ValueError(f"stall seconds must be >= 0: {seconds}")
+        self._arms.append(_Arm("stall", stage, seconds=seconds,
+                               after=after, remaining=times))
+        return self
+
+    def fail(self, stage: str, exc: Optional[BaseException] = None, *,
+             times: int = 1, after: int = 0) -> "FaultInjector":
+        self._arms.append(_Arm("fail", stage, exc=exc, after=after,
+                               remaining=times))
+        return self
+
+    # -- consumption (the pipeline calls these at stage boundaries) ----------
+
+    def _take(self, kind: str, stage: str) -> Optional[_Arm]:
+        for arm in self._arms:
+            if arm.kind != kind or arm.stage != stage or arm.remaining <= 0:
+                continue
+            if arm.after > 0:
+                arm.after -= 1
+                continue
+            arm.remaining -= 1
+            self.fired.append(f"{kind}:{stage}")
+            return arm
+        return None
+
+    def stall_s(self, stage: str) -> float:
+        """Seconds of injected stall at this stage boundary (0.0 = none)."""
+        arm = self._take("stall", stage)
+        return arm.seconds if arm is not None else 0.0
+
+    def check(self, stage: str) -> None:
+        """Raise the armed failure for this stage, if any."""
+        arm = self._take("fail", stage)
+        if arm is not None:
+            raise arm.exc if arm.exc is not None else InjectedFault(
+                f"injected fault at stage {stage!r}")
+
+    def armed(self) -> int:
+        """Arms that have not fully fired yet."""
+        return sum(1 for a in self._arms if a.remaining > 0)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level faults
+# ---------------------------------------------------------------------------
+
+
+class _FlakyInfer:
+    """Wraps one compiled infer fn: raises ``times`` times, then delegates.
+
+    Replacing the engine's ``_infer_cache`` entry (looked up per call by
+    ``_predict_key``) exercises the REAL failure path: the exception
+    surfaces inside the batcher's flush, which must fail only that key's
+    batch and keep serving every other queue.
+    """
+
+    def __init__(self, real: Callable, exc: BaseException, times: int):
+        self.real = real
+        self.exc = exc
+        self.times = times
+        self.raised = 0
+
+    def __call__(self, *args, **kwargs):
+        if self.times > 0:
+            self.times -= 1
+            self.raised += 1
+            raise self.exc
+        return self.real(*args, **kwargs)
+
+
+def break_engine_key(engine, key: str, exc: Optional[BaseException] = None,
+                     *, times: int = 1) -> _FlakyInfer:
+    """Arm a flush exception on one schedule key of an RNNServingEngine.
+
+    The key's compiled infer fn is swapped for a raiser that fails the
+    next ``times`` flushes of THAT key only, then recovers.  Returns the
+    wrapper (``.raised`` counts firings) — the original fn is preserved
+    inside it, so recovery needs no re-compile.
+    """
+    if key not in engine._infer_cache:
+        raise KeyError(f"engine has no compiled key {key!r}; serve or "
+                       f"prewarm it first")
+    flaky = _FlakyInfer(engine._infer_cache[key],
+                        exc if exc is not None
+                        else InjectedFault(f"injected flush fault on {key}"),
+                        times)
+    engine._infer_cache[key] = flaky
+    return flaky
+
+
+# ---------------------------------------------------------------------------
+# Persistent-cache faults
+# ---------------------------------------------------------------------------
+
+
+def corrupt_cache_entries(cache_dir, *, pattern: str = f"*.jaxcache",
+                          payload: bytes = b"\x00corrupt\x00") -> int:
+    """Overwrite every matching compile-cache artifact with garbage bytes.
+
+    Models bit rot / torn writes from outside the process (the atomic
+    tmp-then-rename writer can't produce these itself).  Returns the number
+    of entries corrupted; the CompileCache must warn once, quarantine, and
+    fall back to a cold compile — never crash, never serve garbage.
+    """
+    n = 0
+    for p in Path(cache_dir).glob(pattern):
+        p.write_bytes(payload)
+        n += 1
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Clock faults
+# ---------------------------------------------------------------------------
+
+
+class VirtualClock:
+    """Drivable clock for deterministic replay: ``clock()`` -> seconds.
+
+    ``advance`` moves time forward (the replay driver's tick);
+    ``step_back`` is the FAULT — a clock that jumps backwards (NTP step,
+    TSC skew).  The pipeline's monotonic clamp must absorb backwards steps
+    without negative latencies or corrupted accounting.
+    """
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError("advance must be >= 0; use step_back for the "
+                             "backwards-clock fault")
+        self.t += dt
+        return self.t
+
+    def step_back(self, dt: float) -> float:
+        self.t -= dt
+        return self.t

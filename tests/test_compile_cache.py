@@ -303,3 +303,54 @@ def test_compile_cache_store_is_atomic_and_concurrent_safe(tmp_path):
     fn = a.load("e", meta, "k")
     assert fn is not None
     np.testing.assert_array_equal(np.asarray(fn(jnp.ones((2,)))), [2.0, 2.0])
+
+
+# ---------------------------------------------------------------------------
+# Quarantine of known-corrupt entries (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_entry_quarantined_warns_once(tmp_path):
+    """Regression (ISSUE 8): a known-corrupt entry was re-read, re-unpickled
+    and re-warned on EVERY request.  The first failure warns and quarantines
+    the fingerprint; later lookups skip the file silently."""
+    import warnings
+
+    cache = CompileCache(tmp_path)
+    meta = {"kind": "t"}
+    cache.entry_path("e", meta).write_bytes(b"\x00garbage\x00")
+
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        assert cache.load("e", meta, "k") is None      # first: warn + mark
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")                 # any warning fails
+        assert cache.load("e", meta, "k") is None      # later: silent skip
+        assert cache.load("e", meta, "k") is None
+    st = cache.stats("k")
+    assert st.errors == 1                              # ONE failed attempt
+    assert st.quarantined == 2                         # skips counted
+    assert st.summary()["quarantined"] == 2.0
+
+
+def test_successful_store_lifts_quarantine(gru_tagger, tmp_path, rng):
+    """A fresh, complete entry written over a quarantined path is served
+    again — the quarantine names the corrupt bytes, not the fingerprint
+    forever."""
+    x = rng.randn(4, 20, 6).astype(np.float32)
+    key = schedule_key(SCHED)
+    want = _serve_once(_engine(gru_tagger, cache_dir=tmp_path), x)
+    for p in tmp_path.glob("*.jaxcache"):
+        p.write_bytes(b"rotten")
+
+    eng = _engine(gru_tagger, cache_dir=tmp_path)
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        got = _serve_once(eng, x)                      # cold compile + store
+    np.testing.assert_array_equal(got, want)
+    assert eng.trace_count(key) == 1
+    assert not eng.compile_cache._quarantine           # store lifted it
+
+    fresh = _engine(gru_tagger, cache_dir=tmp_path)    # overwritten entry
+    got2 = _serve_once(fresh, x)                       # serves warm again
+    assert fresh.trace_count(key) == 0
+    assert fresh.compile_cache.cold_compiles == 0
+    np.testing.assert_array_equal(got2, want)

@@ -245,3 +245,64 @@ def test_lm_engine_greedy_determinism():
         rid = eng.add_request([5, 11, 2], max_new=5)
         outs.append(tuple(eng.run_to_completion()[rid]))
     assert outs[0] == outs[1]
+
+
+def test_flush_failure_in_one_key_does_not_drop_other_keys(rng):
+    """Regression (ISSUE 8): an exception in one key's flush fn used to
+    propagate out of run_all mid-drain — requests already queued on OTHER
+    keys were silently dropped.  Now exactly the broken key's batch fails
+    (error attached, counted), other queues flush normally."""
+    cfg = get_config("top-tagging-gru")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eng = RNNServingEngine(cfg, params, max_batch=4)
+    good = KernelSchedule(reuse_factor=1, mode="static", backend="xla")
+    bad = KernelSchedule(reuse_factor=2, mode="static", backend="xla")
+    bad_key = schedule_key(bad)
+    x = rng.randn(4, 20, 6).astype(np.float32)
+
+    good_reqs = [eng.submit(x[i], schedule=good) for i in range(2)]
+    bad_reqs = [eng.submit(x[i], schedule=bad) for i in range(2, 4)]
+    boom = RuntimeError("kernel fault")
+
+    def raiser(*a, **kw):
+        raise boom
+
+    eng._infer_cache[bad_key] = raiser                 # break ONE key
+    with pytest.warns(RuntimeWarning, match="other queues unaffected"):
+        done = eng.flush(force=True)
+
+    assert len(done) == 4                              # nothing dropped
+    for r in good_reqs:                                # healthy key served
+        assert r.status == "answered" and r.result is not None
+    for r in bad_reqs:                                 # broken key reported
+        assert r.status == "failed" and r.error is boom
+        assert r.done_s is not None
+    assert eng.batcher.key_stats(bad_key).failed == 2
+    assert eng.batcher.key_stats(schedule_key(good)).summary()["served"] == 2
+
+
+def test_bounded_queue_rejects_explicitly(rng):
+    """Regression (ISSUE 8): MicroBatcher queues grew without limit under
+    overload.  A per-key bound now rejects at submit with QueueFullError —
+    counted, never silent."""
+    from repro.serving import QueueFullError
+
+    mb = MicroBatcher(max_batch=8, max_queue=2)
+    mb.submit(np.zeros(2, np.float32), now=0.0, key="k")
+    mb.submit(np.zeros(2, np.float32), now=0.0, key="k")
+    with pytest.raises(QueueFullError) as ei:
+        mb.submit(np.zeros(2, np.float32), now=0.0, key="k")
+    assert ei.value.key == "k" and ei.value.bound == 2
+    assert mb.pending("k") == 2                        # bound held
+    assert mb.key_stats("k").rejected == 1
+
+    # per-key override: unbounded keys stay unbounded
+    mb.set_policy("free", max_queue=None)
+    for _ in range(5):
+        mb.submit(np.zeros(2, np.float32), now=0.0, key="free")
+    assert mb.pending("free") == 5
+
+    # draining frees capacity for the bounded key
+    mb.run(lambda x: x, now=0.1, key="k", force=True)
+    r = mb.submit(np.zeros(2, np.float32), now=0.2, key="k")
+    assert r.status == "pending"

@@ -1,0 +1,527 @@
+"""Trigger-grade streaming: admission control, shedding, degradation, chaos.
+
+Acceptance criteria (ISSUE 8):
+  * every stage boundary gets a monotone timestamp; the per-stage budget
+    report renders beside ``serve_report``;
+  * admission is token-bucketed at the priced throughput of the resolved
+    design point (``core.hls.admission_rate_eps``) — a <=1x replay never
+    sheds, a 2x replay sheds and/or downgrades, with exact per-key
+    accounting (``submitted == answered + shed + failed``, nothing silent);
+  * answered requests meet their deadline even under injected stalls (the
+    dispatch-time re-check converts would-be misses into late sheds);
+  * the degradation ladder downgrades under sustained high-water queue
+    depth and recovers at low-water, over pre-warmed rungs only;
+  * non-degraded (rung 0) outputs are bit-identical to direct ``predict``;
+  * the fault matrix — stage stalls, flush exceptions, corrupted compile
+    cache entries, backwards clock steps — passes without deadlock or
+    silent request loss.
+"""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.autotune import (DesignTarget, SpaceSpec, degradation_ladder,
+                            select)
+from repro.core.hls import admission_rate_eps, price_point
+from repro.models import build_model
+from repro.registry import get_config
+from repro.serving import (FaultInjector, InjectedFault, RNNServingEngine,
+                           StreamingPipeline, VirtualClock,
+                           format_stream_report)
+from repro.serving.faults import break_engine_key, corrupt_cache_entries
+from repro.serving.streaming import STAGES, TokenBucket
+from repro.testing import native_fp_configs
+
+SPEC = SpaceSpec(backends=("xla",), block_batches=(8,))
+CLOCK_MHZ = 200.0
+
+
+@pytest.fixture(scope="module")
+def gru_tagger():
+    cfg = get_config("top-tagging-gru")
+    return cfg, build_model(cfg).init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def ladder(gru_tagger):
+    """Base rung = the latency-best point under a DSP budget (R4); the
+    degraded rungs walk the frontier down-R toward higher priced
+    throughput (R2, R1)."""
+    cfg, _ = gru_tagger
+    base = select(cfg, DesignTarget(max_dsp=400, objective="latency"), SPEC)
+    rungs = degradation_ladder(cfg, base, spec=SPEC, max_rungs=3)
+    assert len(rungs) == 3
+    return rungs
+
+
+@pytest.fixture(scope="module")
+def engine(gru_tagger):
+    cfg, params = gru_tagger
+    return RNNServingEngine(cfg, params, max_batch=8)
+
+
+def _events(cfg, n, seed=0):
+    r = cfg.rnn
+    return np.random.RandomState(seed).randn(
+        n, r.seq_len, r.input_size).astype(np.float32)
+
+
+def _pipe(engine, ladder, clk, **kw):
+    kw.setdefault("deadline_us", 50.0)
+    kw.setdefault("prewarm", False)     # keys still registered; compiles
+    kw.setdefault("clock_mhz", CLOCK_MHZ)  # happen lazily to keep CI fast
+    return StreamingPipeline(engine, ladder, clock=clk, **kw)
+
+
+def _replay(pipe, clk, xs, rate_mult, *, base_rate=None):
+    """Deterministic arrival trace at ``rate_mult`` x the rung-0 priced
+    throughput; push + pump per tick, then drain."""
+    rate = base_rate if base_rate is not None else pipe._rung_rate(0)
+    dt = 1.0 / (rate_mult * rate)
+    reqs = []
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        for i, x in enumerate(xs):
+            t = clk.advance(dt) if i else clk.t
+            reqs.append(pipe.push(x, now=t))
+            pipe.pump(now=t)
+        pipe.drain()
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# Stage stamps & budget report
+# ---------------------------------------------------------------------------
+
+
+def test_stage_stamps_monotone_and_complete(engine, ladder):
+    cfg = engine.cfg
+    clk = VirtualClock()
+    pipe = _pipe(engine, ladder, clk)
+    reqs = _replay(pipe, clk, _events(cfg, 40), 1.0)
+    assert all(r.status == "answered" for r in reqs)
+    for r in reqs:
+        times = [r.arrival_s] + [r.stamps[s] for s in STAGES]
+        assert all(a <= b + 1e-15 for a, b in zip(times, times[1:])), \
+            (r.req_id, r.stamps)
+        assert r.latency_s is not None and r.latency_s >= 0
+
+
+def test_stage_budget_report_counts_overruns(engine, ladder):
+    cfg = engine.cfg
+    clk = VirtualClock()
+    faults = FaultInjector().stall("prep", 5e-6, times=3)
+    pipe = _pipe(engine, ladder, clk, faults=faults,
+                 stage_budgets_us={"prep": 1.0})
+    _replay(pipe, clk, _events(cfg, 20), 0.5)
+    rep = pipe.stage_report()
+    assert set(rep) == set(STAGES)
+    assert rep["prep"]["budget_us"] == 1.0
+    assert rep["prep"]["over_budget"] == 3          # exactly the stalled ones
+    assert rep["infer"]["over_budget"] == 0
+    for stage in STAGES:
+        assert rep[stage]["sim"]["served"] == 20
+
+
+def test_format_stream_report_renders_beside_serve_report(engine, ladder):
+    cfg = engine.cfg
+    clk = VirtualClock()
+    pipe = _pipe(engine, ladder, clk)
+    _replay(pipe, clk, _events(cfg, 16), 1.0)
+    text = format_stream_report(pipe)
+    for stage in STAGES:
+        assert stage in text
+    assert "ladder" in text
+    assert "schedule key" in text                   # the serve_report table
+    assert ladder[0].key in text
+
+
+# ---------------------------------------------------------------------------
+# Admission control & shedding
+# ---------------------------------------------------------------------------
+
+
+def test_no_shed_at_or_below_priced_throughput(engine, ladder):
+    """A replay at exactly the priced admission rate (and below) must not
+    shed — the acceptance criterion the bench gate enforces."""
+    cfg = engine.cfg
+    for mult in (0.5, 1.0):
+        clk = VirtualClock()
+        pipe = _pipe(engine, ladder[:1], clk)       # single rung: no escape
+        reqs = _replay(pipe, clk, _events(cfg, 200), mult)
+        acc = pipe.verify_accounting()
+        (key,) = acc
+        assert acc[key]["shed"] == 0, (mult, acc)
+        assert acc[key]["answered"] == 200
+        assert all(r.stamps["infer"] <= r.deadline_s + 1e-12 for r in reqs)
+
+
+def test_admission_sheds_at_2x_single_rung(engine, ladder):
+    """With no ladder to climb, a 2x replay must shed ~half at admission —
+    counted per key, never silently dropped."""
+    cfg = engine.cfg
+    clk = VirtualClock()
+    pipe = _pipe(engine, ladder[:1], clk)
+    reqs = _replay(pipe, clk, _events(cfg, 400), 2.0)
+    acc = pipe.verify_accounting()[ladder[0].key]
+    assert acc["shed_admission"] > 100              # ~185 of 400
+    assert acc["answered"] + acc["shed"] + acc["failed"] == 400
+    statuses = {r.status for r in reqs}
+    assert statuses <= {"answered", "shed"}
+    # answered requests still meet the deadline
+    for r in reqs:
+        if r.status == "answered":
+            assert r.stamps["infer"] <= r.deadline_s + 1e-12
+
+
+def test_deadline_shed_at_enqueue_when_budget_cannot_cover(engine, ladder):
+    """A deadline below the rung's service latency sheds at enqueue —
+    before the request wastes a server slot."""
+    cfg = engine.cfg
+    clk = VirtualClock()
+    svc_us = ladder[0].estimate.service_s(CLOCK_MHZ) * 1e6
+    pipe = _pipe(engine, ladder[:1], clk, deadline_us=svc_us * 0.5)
+    reqs = _replay(pipe, clk, _events(cfg, 10), 0.25)
+    acc = pipe.verify_accounting()[ladder[0].key]
+    assert acc["shed_deadline"] == 10
+    assert acc["answered"] == 0
+    assert all(r.status == "shed" and r.shed_reason == "deadline"
+               for r in reqs)
+
+
+def test_queue_full_shed_is_explicit(engine, ladder):
+    """A bounded queue rejects at enqueue with its own counter — the queue
+    never grows past ``max_queue``."""
+    cfg = engine.cfg
+    clk = VirtualClock()
+    pipe = _pipe(engine, ladder[:1], clk, max_queue=3, burst=64.0,
+                 deadline_us=10_000.0, high_water=100)
+    xs = _events(cfg, 10)
+    reqs = [pipe.push(x, now=clk.t) for x in xs]    # no pump in between
+    assert pipe.in_flight() == 3
+    acc = pipe.verify_accounting()[ladder[0].key]
+    assert acc["shed_queue_full"] == 7
+    pipe.drain()
+    acc = pipe.verify_accounting()[ladder[0].key]
+    assert acc["answered"] == 3
+    assert sum(1 for r in reqs if r.shed_reason == "queue_full") == 7
+
+
+def test_admission_rate_bridge(gru_tagger, ladder):
+    """The pipeline's token-bucket rate IS the priced throughput of the
+    resolved design point, through ``core.hls.admission_rate_eps``."""
+    base = ladder[0]
+    assert admission_rate_eps(base.estimate, CLOCK_MHZ) \
+        == pytest.approx(base.throughput_eps(CLOCK_MHZ))
+    assert admission_rate_eps(base.estimate, CLOCK_MHZ, utilization=0.5) \
+        == pytest.approx(0.5 * base.throughput_eps(CLOCK_MHZ))
+    with pytest.raises(ValueError):
+        admission_rate_eps(base.estimate, CLOCK_MHZ, utilization=0.0)
+    with pytest.raises(ValueError):
+        admission_rate_eps(base.estimate, CLOCK_MHZ, utilization=1.5)
+
+
+def test_token_bucket_exact_rate_never_starves():
+    tb = TokenBucket(rate_eps=1e6, burst=4.0)
+    dt = 1.0 / 1e6
+    t = 0.0
+    for _ in range(10_000):                         # 1.0x: float-rounding
+        assert tb.try_take(t)                       # noise only, burst absorbs
+        t += dt
+    tb2 = TokenBucket(rate_eps=1e6, burst=4.0)
+    taken = sum(tb2.try_take(i * dt / 2) for i in range(1000))
+    assert 500 <= taken <= 520                      # 2.0x: ~half admitted
+
+
+# ---------------------------------------------------------------------------
+# Degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def test_degradation_ladder_ascending_throughput(gru_tagger, ladder):
+    cfg, _ = gru_tagger
+    eps = [p.throughput_eps(CLOCK_MHZ) for p in ladder]
+    assert eps == sorted(eps)
+    assert len(set(eps)) == len(eps)                # strictly ascending
+    for a, b in zip(eps, eps[1:]):
+        assert b >= 1.5 * a                         # default min_gain
+    # native-int candidates merge in when fp is native
+    fp8 = native_fp_configs()["int8"]
+    rungs8 = degradation_ladder(cfg, ladder[0], spec=SPEC, fp=fp8,
+                                max_rungs=4)
+    eps8 = [p.throughput_eps(CLOCK_MHZ) for p in rungs8]
+    assert eps8 == sorted(eps8) and len(set(eps8)) == len(eps8)
+    with pytest.raises(ValueError):
+        degradation_ladder(cfg, ladder[0], spec=SPEC, max_rungs=0)
+    with pytest.raises(ValueError):
+        degradation_ladder(cfg, ladder[0], spec=SPEC, min_gain=1.0)
+
+
+def test_ladder_must_be_strictly_ascending(engine, ladder):
+    with pytest.raises(ValueError, match="ascending"):
+        StreamingPipeline(engine, tuple(reversed(ladder)), deadline_us=50.0,
+                          prewarm=False)
+
+
+def test_downgrade_at_high_water_and_recover_at_low_water(engine, ladder):
+    """2x overload drives the rung down the ladder (admission rate rises);
+    returning to 0.5x recovers to rung 0."""
+    cfg = engine.cfg
+    clk = VirtualClock()
+    pipe = _pipe(engine, ladder, clk)
+    base_rate = pipe._rung_rate(0)
+    _replay(pipe, clk, _events(cfg, 300), 2.0, base_rate=base_rate)
+    assert pipe.downgrades >= 1
+    assert pipe.rung >= 1
+    assert pipe.admission_rate() > base_rate        # rate follows the rung
+    _replay(pipe, clk, _events(cfg, 400, seed=1), 0.5, base_rate=base_rate)
+    assert pipe.recoveries >= 1
+    assert pipe.rung == 0
+    assert pipe.admission_rate() == pytest.approx(base_rate)
+    pipe.verify_accounting()
+
+
+def test_all_rungs_prewarmed_at_construction(gru_tagger, ladder):
+    """Every rung's executable exists before traffic — a downgrade under
+    overload never pays a compile."""
+    cfg, params = gru_tagger
+    eng = RNNServingEngine(cfg, params, max_batch=8)
+    StreamingPipeline(eng, ladder, deadline_us=50.0, prewarm=True)
+    for pt in ladder:
+        assert pt.key in eng._infer_cache
+        assert eng._infer_cache[pt.key].compiled_signatures() >= 1
+
+
+def test_rung0_outputs_bit_identical_to_direct_predict(engine, ladder):
+    cfg = engine.cfg
+    clk = VirtualClock()
+    pipe = _pipe(engine, ladder, clk)
+    xs = _events(cfg, 24, seed=3)
+    reqs = _replay(pipe, clk, xs, 1.0)
+    assert all(r.status == "answered" and r.rung == 0 for r in reqs)
+    want = engine.predict(xs, schedule=ladder[0].schedule, fp=ladder[0].fp)
+    got = np.stack([r.result for r in reqs])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_exec_mode_one_matches_batch(engine, ladder):
+    cfg = engine.cfg
+    xs = _events(cfg, 6, seed=4)
+    outs = {}
+    for mode in ("batch", "one"):
+        clk = VirtualClock()
+        pipe = _pipe(engine, ladder, clk, exec_mode=mode)
+        reqs = _replay(pipe, clk, xs, 0.5)
+        assert all(r.status == "answered" for r in reqs)
+        outs[mode] = np.stack([r.result for r in reqs])
+    np.testing.assert_array_equal(outs["batch"], outs["one"])
+
+
+# ---------------------------------------------------------------------------
+# Fault matrix (chaos suite) — no deadlock, no silent loss
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_infer_stall_within_headroom_sheds_nothing(engine, ladder):
+    """A stall the deadline headroom can absorb degrades latency, not
+    outcomes: everything still answered, still within deadline."""
+    cfg = engine.cfg
+    clk = VirtualClock()
+    faults = FaultInjector().stall("infer", 40e-6, after=5)   # < 50us budget
+    pipe = _pipe(engine, ladder[:1], clk, faults=faults)
+    reqs = _replay(pipe, clk, _events(cfg, 60), 1.0)
+    acc = pipe.verify_accounting()[ladder[0].key]
+    assert acc["answered"] == 60
+    assert acc["deadline_miss"] == 0
+    assert max(r.infer_latency_s for r in reqs) > 30e-6       # stall visible
+    for r in reqs:
+        assert r.stamps["infer"] <= r.deadline_s + 1e-12
+
+
+def test_chaos_infer_stall_never_breaks_deadline_for_answered(engine, ladder):
+    """A stall LONGER than the deadline extends the server-free pointer
+    before the dispatch-time re-check: queued victims shed late, arrivals
+    inside the outage window shed at enqueue, and every ANSWERED request
+    still meets its deadline."""
+    cfg = engine.cfg
+    clk = VirtualClock(1.0)
+    faults = FaultInjector().stall("infer", 60e-6)            # > 50us budget
+    pipe = _pipe(engine, ladder[:1], clk, faults=faults, burst=32.0)
+    xs = _events(cfg, 60)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        reqs = [pipe.push(x, now=clk.t) for x in xs[:10]]     # queued burst
+        late = pipe.pump(now=clk.t)                           # stall fires
+        assert all(r.status == "shed" and r.shed_reason == "deadline"
+                   for r in late)                             # late sheds
+        assert len(late) == 10
+        reqs += _replay(pipe, clk, xs[10:], 1.0)
+    acc = pipe.verify_accounting()[ladder[0].key]
+    assert acc["shed_deadline"] >= 10
+    assert acc["answered"] > 0                                # recovered
+    assert acc["deadline_miss"] == 0
+    for r in reqs:
+        if r.status == "answered":
+            assert r.stamps["infer"] <= r.deadline_s + 1e-12
+
+
+def test_chaos_stage_failure_fails_only_that_request(engine, ladder):
+    cfg = engine.cfg
+    clk = VirtualClock()
+    faults = FaultInjector().fail("prep", after=3, times=2)
+    pipe = _pipe(engine, ladder, clk, faults=faults)
+    reqs = _replay(pipe, clk, _events(cfg, 20), 0.5)
+    failed = [r for r in reqs if r.status == "failed"]
+    assert len(failed) == 2
+    assert all(isinstance(r.error, InjectedFault) for r in failed)
+    assert sum(1 for r in reqs if r.status == "answered") == 18
+    pipe.verify_accounting()
+
+
+def test_chaos_flush_exception_fails_batch_with_error_attached(gru_tagger,
+                                                               ladder):
+    """An exception inside the compiled infer fn surfaces per-request via
+    the batcher's isolation — the pipeline reports those requests failed
+    (error attached) and keeps serving afterwards."""
+    cfg, params = gru_tagger
+    eng = RNNServingEngine(cfg, params, max_batch=8)
+    clk = VirtualClock()
+    pipe = _pipe(eng, ladder[:1], clk)
+    xs = _events(cfg, 12)
+    warm = _replay(pipe, clk, xs[:4], 0.5)          # compile before breaking
+    assert all(r.status == "answered" for r in warm)
+
+    flaky = break_engine_key(eng, ladder[0].key, times=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        r_broken = pipe.push(xs[4], now=clk.advance(1e-3))
+        pipe.drain()
+    assert flaky.raised == 1
+    assert r_broken.status == "failed"
+    assert isinstance(r_broken.error, InjectedFault)
+
+    after = _replay(pipe, clk, xs[5:], 0.5)         # recovered, same key
+    assert all(r.status == "answered" for r in after)
+    acc = pipe.verify_accounting()[ladder[0].key]
+    assert acc["failed"] == 1 and acc["answered"] == len(xs) - 1
+
+
+def test_chaos_corrupt_cache_entry_serves_with_one_warning(gru_tagger,
+                                                           ladder, tmp_path):
+    """Corrupted persistent compile-cache entries cost one warning + one
+    cold compile — the stream is still answered correctly."""
+    cfg, params = gru_tagger
+    xs = _events(cfg, 8)
+    warm = RNNServingEngine(cfg, params, max_batch=8,
+                            cache_dir=tmp_path)
+    pipe = StreamingPipeline(warm, ladder[:1], deadline_us=50.0,
+                             prewarm=True, clock=VirtualClock())
+    n = corrupt_cache_entries(tmp_path)
+    assert n >= 1
+
+    eng = RNNServingEngine(cfg, params, max_batch=8, cache_dir=tmp_path)
+    clk = VirtualClock()
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        pipe2 = StreamingPipeline(eng, ladder[:1], deadline_us=50.0,
+                                  prewarm=True, clock=clk)
+    reqs = _replay(pipe2, clk, xs, 0.5)
+    assert all(r.status == "answered" for r in reqs)
+    want = eng.predict(xs, schedule=ladder[0].schedule, fp=ladder[0].fp)
+    np.testing.assert_array_equal(np.stack([r.result for r in reqs]), want)
+
+
+def test_chaos_backwards_clock_step_absorbed(engine, ladder):
+    """A clock that steps backwards mid-stream is clamped: counted, no
+    negative stage durations, accounting intact."""
+    cfg = engine.cfg
+    clk = VirtualClock()
+    pipe = _pipe(engine, ladder[:1], clk)
+    rate = pipe._rung_rate(0)
+    dt = 1.0 / rate
+    xs = _events(cfg, 30)
+    reqs = []
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        for i, x in enumerate(xs):
+            if i == 10:
+                clk.step_back(50 * dt)              # NTP-style backwards jump
+            t = clk.advance(dt) if i else clk.t
+            reqs.append(pipe.push(x, now=t))
+            pipe.pump(now=t)
+        pipe.drain()
+    assert pipe.clock_steps > 0
+    pipe.verify_accounting()
+    for r in reqs:
+        if r.status == "answered":
+            times = [r.arrival_s] + [r.stamps[s] for s in STAGES]
+            assert all(a <= b + 1e-15 for a, b in zip(times, times[1:]))
+    rep = pipe.stage_report()
+    for stage in STAGES:
+        assert rep[stage]["sim"]["latency_max_s"] >= 0
+
+
+def test_chaos_full_matrix_drains_without_deadlock(engine, ladder):
+    """All fault classes at once: the stream still drains completely and
+    every request is accounted for."""
+    cfg = engine.cfg
+    clk = VirtualClock()
+    faults = (FaultInjector()
+              .stall("ingest", 1e-6, times=2, after=2)
+              .stall("infer", 20e-6, after=10)
+              .fail("prep", after=7)
+              .fail("sink", after=15))
+    pipe = _pipe(engine, ladder, clk, faults=faults)
+    rate = pipe._rung_rate(0)
+    dt = 1.0 / (1.5 * rate)
+    xs = _events(cfg, 80)
+    reqs = []
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        for i, x in enumerate(xs):
+            if i == 40:
+                clk.step_back(10 * dt)
+            t = clk.advance(dt) if i else clk.t
+            reqs.append(pipe.push(x, now=t))
+            pipe.pump(now=t)
+        pipe.drain()
+    assert pipe.in_flight() == 0                    # fully drained
+    acc = pipe.verify_accounting()
+    total = sum(c["submitted"] for c in acc.values())
+    assert total == 80
+    assert all(r.status in ("answered", "shed", "failed") for r in reqs)
+    assert sum(c["failed"] for c in acc.values()) == 2
+    for r in reqs:
+        if r.status == "answered":
+            assert r.stamps["infer"] <= r.deadline_s + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector / VirtualClock units
+# ---------------------------------------------------------------------------
+
+
+def test_fault_injector_consumption_order():
+    fi = FaultInjector().stall("prep", 0.5, times=2).fail("prep", after=1)
+    assert fi.stall_s("prep") == 0.5
+    assert fi.stall_s("infer") == 0.0               # wrong stage: untouched
+    fi.check("prep")                                # after=1: skipped once
+    with pytest.raises(InjectedFault):
+        fi.check("prep")
+    assert fi.stall_s("prep") == 0.5
+    assert fi.stall_s("prep") == 0.0                # exhausted
+    assert fi.armed() == 0
+    assert fi.fired == ["stall:prep", "fail:prep", "stall:prep"]
+
+
+def test_virtual_clock():
+    clk = VirtualClock(1.0)
+    assert clk() == 1.0
+    assert clk.advance(0.5) == 1.5
+    assert clk.step_back(1.0) == 0.5
+    with pytest.raises(ValueError):
+        clk.advance(-0.1)
+    with pytest.raises(ValueError):
+        FaultInjector().stall("x", -1.0)

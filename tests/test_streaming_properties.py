@@ -1,0 +1,145 @@
+"""Property tests for the streaming pipeline's accounting & deadline laws.
+
+Runs under real hypothesis when installed, else under the deterministic
+``tests/_hypothesis_stub.py`` fallback (conftest installs it).  Invariants,
+over randomized arrival rates, ladder depths, queue bounds and injected
+faults:
+
+  * every submitted request ends in EXACTLY ONE of {answered, shed,
+    failed} once the stream is drained;
+  * per key, ``shed + answered + failed == submitted`` (exact accounting,
+    nothing silent);
+  * every ANSWERED request's inference result was available within its
+    deadline — including under injected stalls (the dispatch-time re-check
+    converts would-be misses into late sheds).
+
+The model under test is the ANALYTICAL service model over a virtual clock,
+so every example is exactly reproducible.
+"""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.autotune import DesignTarget, SpaceSpec, degradation_ladder, select
+from repro.models import build_model
+from repro.registry import get_config
+from repro.serving import (FaultInjector, RNNServingEngine, StreamingPipeline,
+                           VirtualClock)
+
+SPEC = SpaceSpec(backends=("xla",), block_batches=(8,))
+TERMINAL = ("answered", "shed", "failed")
+
+
+@pytest.fixture(scope="module")
+def harness():
+    """One shared engine + 3-rung ladder + a pool of payloads; each example
+    builds its own pipeline (cheap: the compiled kernels are shared)."""
+    cfg = get_config("top-tagging-gru")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eng = RNNServingEngine(cfg, params, max_batch=8)
+    base = select(cfg, DesignTarget(max_dsp=400, objective="latency"), SPEC)
+    rungs = degradation_ladder(cfg, base, spec=SPEC, max_rungs=3)
+    r = cfg.rnn
+    xs = np.random.RandomState(0).randn(
+        64, r.seq_len, r.input_size).astype(np.float32)
+    return eng, rungs, xs
+
+
+def _run_stream(harness, *, n, rate_mult, rungs, max_queue, deadline_us,
+                faults=None, pump_every=1):
+    eng, ladder, xs = harness
+    clk = VirtualClock()
+    pipe = StreamingPipeline(eng, ladder[:rungs], deadline_us=deadline_us,
+                             max_queue=max_queue, clock=clk, prewarm=False,
+                             faults=faults)
+    dt = 1.0 / (rate_mult * pipe._rung_rate(0))
+    reqs = []
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        for i in range(n):
+            t = clk.advance(dt) if i else clk.t
+            reqs.append(pipe.push(xs[i % len(xs)], now=t))
+            if i % pump_every == 0:
+                pipe.pump(now=t)
+        pipe.drain()
+    return pipe, reqs
+
+
+@settings(max_examples=12)
+@given(n=st.integers(5, 80), rate_pct=st.integers(25, 400),
+       rungs=st.integers(1, 3), max_queue=st.integers(1, 32),
+       pump_every=st.integers(1, 5))
+def test_every_request_exactly_one_terminal_state(harness, n, rate_pct,
+                                                  rungs, max_queue,
+                                                  pump_every):
+    pipe, reqs = _run_stream(harness, n=n, rate_mult=rate_pct / 100.0,
+                             rungs=rungs, max_queue=max_queue,
+                             deadline_us=50.0, pump_every=pump_every)
+    assert pipe.in_flight() == 0
+    assert len(reqs) == n
+    for r in reqs:
+        assert r.status in TERMINAL, (r.req_id, r.status)
+        # the terminal state is exclusive: shed has a reason and no result,
+        # failed has an error, answered has a result
+        if r.status == "shed":
+            assert r.shed_reason is not None and r.result is None
+        if r.status == "failed":
+            assert r.error is not None
+        if r.status == "answered":
+            assert r.result is not None and r.error is None
+
+
+@settings(max_examples=12)
+@given(n=st.integers(5, 80), rate_pct=st.integers(25, 400),
+       rungs=st.integers(1, 3), max_queue=st.integers(1, 32),
+       deadline_us=st.floats(1.0, 100.0))
+def test_shed_answered_failed_sums_to_submitted_per_key(harness, n, rate_pct,
+                                                        rungs, max_queue,
+                                                        deadline_us):
+    pipe, reqs = _run_stream(harness, n=n, rate_mult=rate_pct / 100.0,
+                             rungs=rungs, max_queue=max_queue,
+                             deadline_us=deadline_us)
+    acc = pipe.verify_accounting()          # raises on any imbalance
+    for key, c in acc.items():
+        assert c["shed"] + c["answered"] + c["failed"] == c["submitted"], key
+        by_status = {
+            "answered": sum(1 for r in reqs
+                            if r.key == key and r.status == "answered"),
+            "shed": sum(1 for r in reqs
+                        if r.key == key and r.status == "shed"),
+            "failed": sum(1 for r in reqs
+                          if r.key == key and r.status == "failed"),
+        }
+        # counters agree with the request objects themselves
+        assert by_status["answered"] == c["answered"]
+        assert by_status["shed"] == c["shed"]
+        assert by_status["failed"] == c["failed"]
+    assert sum(c["submitted"] for c in acc.values()) == n
+
+
+@settings(max_examples=12)
+@given(n=st.integers(10, 60), rate_pct=st.integers(50, 300),
+       stall_us=st.floats(0.0, 200.0), stall_after=st.integers(0, 20),
+       deadline_us=st.floats(2.0, 80.0))
+def test_answered_requests_meet_deadline_under_stalls(harness, n, rate_pct,
+                                                      stall_us, stall_after,
+                                                      deadline_us):
+    """The deadline law survives injected infer stalls of ANY length: a
+    stall may shed requests (late or at enqueue) but never produces an
+    answered request whose inference missed its deadline."""
+    faults = FaultInjector().stall("infer", stall_us * 1e-6,
+                                   after=stall_after)
+    pipe, reqs = _run_stream(harness, n=n, rate_mult=rate_pct / 100.0,
+                             rungs=2, max_queue=32, deadline_us=deadline_us,
+                             faults=faults)
+    pipe.verify_accounting()
+    for r in reqs:
+        if r.status == "answered":
+            assert r.stamps["infer"] <= r.deadline_s + 1e-12, \
+                (r.req_id, r.stamps, r.deadline_s)
+    for c in pipe.counts.values():
+        assert c.deadline_miss == 0
