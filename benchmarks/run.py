@@ -36,7 +36,7 @@ def smoke() -> int:
     from benchmarks import (bench_autotune, bench_decode,  # noqa: F401
                             bench_kernels, bench_latency_resources,
                             bench_quant, bench_quantization,
-                            bench_roofline, bench_serving,
+                            bench_roofline, bench_serving, bench_spec,
                             bench_static_nonstatic, bench_streaming,
                             bench_throughput, bench_warmup)
     print("smoke/imports,0,ok")
@@ -81,6 +81,13 @@ def main() -> None:
                          "compile cache must serve its first request with "
                          "zero jit traces, bit-identical; records cold-vs-"
                          "warm first-request latency into the perf JSON")
+    ap.add_argument("--spec-smoke", action="store_true",
+                    help="speculative-decode fail-fast: the autotuned "
+                         "(draft, verify, K) triple must beat the PR 5 "
+                         "scheduled R4 decode path in tokens/s with greedy "
+                         "exact-match enforced in the same run; measured-vs-"
+                         "assumed accept rate rides the perf JSON under "
+                         "'speculative'")
     ap.add_argument("--stream-smoke", action="store_true",
                     help="streaming fail-fast: overload replay at 0.5x/1x/2x "
                          "priced throughput; <=1x must never shed, 2x must "
@@ -119,6 +126,11 @@ def main() -> None:
         bench_streaming.smoke(args.json or "BENCH_rnn_kernels.json")
         sys.exit(0)
 
+    if args.spec_smoke:
+        from benchmarks import bench_spec
+        bench_spec.smoke(args.json or "BENCH_rnn_kernels.json")
+        sys.exit(0)
+
     if args.json is not None:
         from benchmarks import bench_kernels
         doc = bench_kernels.write_json(args.json, full=args.full)
@@ -142,8 +154,9 @@ def main() -> None:
     from benchmarks import (bench_autotune, bench_decode, bench_kernels,
                             bench_latency_resources, bench_quant,
                             bench_quantization, bench_roofline,
-                            bench_serving, bench_static_nonstatic,
-                            bench_streaming, bench_throughput, bench_warmup)
+                            bench_serving, bench_spec,
+                            bench_static_nonstatic, bench_streaming,
+                            bench_throughput, bench_warmup)
     benches = {
         "latency_resources": bench_latency_resources,
         "static_nonstatic": bench_static_nonstatic,
@@ -157,6 +170,7 @@ def main() -> None:
         "quant": bench_quant,
         "warmup": bench_warmup,
         "streaming": bench_streaming,
+        "spec": bench_spec,
     }
     selected = (args.only.split(",") if args.only else list(benches))
     print("name,us_per_call,derived")

@@ -28,7 +28,13 @@
 #      traffic at <=1x rate sheds at all, or 2x overload passes unnoticed
 #      (neither shed nor downgraded); per-stage p50/p99 + shed/downgrade
 #      counts ride the perf record under "streaming" (also after --json)
-#   9. tier-1: pytest -x -q   — the full suite, first failure stops
+#   9. benchmarks/run.py --spec-smoke — speculative-decode fail-fast: the
+#      autotuned (draft, verify, K) triple must beat the PR 5 scheduled R4
+#      decode path in tokens/s, token sequences bit-identical to sequential
+#      decode on the verify schedule, drafted == accepted + rejected exact;
+#      measured-vs-assumed accept rate rides the perf record under
+#      "speculative" (also after --json)
+#  10. tier-1: pytest -x -q   — the full suite, first failure stops
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -56,6 +62,9 @@ python benchmarks/run.py --warmup-smoke
 
 echo "== streaming smoke =="
 python benchmarks/run.py --stream-smoke
+
+echo "== speculative smoke =="
+python benchmarks/run.py --spec-smoke
 
 echo "== tier-1 tests =="
 python -m pytest -x -q

@@ -9,14 +9,17 @@ tables, turned into a solver.
 from repro.autotune.explorer import (  # noqa: F401
     Exploration,
     InfeasibleTargetError,
+    SpeculativePoint,
     degradation_ladder,
     explore,
     explore_decode,
+    explore_speculative,
     is_feasible,
     measure_points,
     pareto,
     select,
     select_decode,
+    select_speculative,
     violation,
 )
 from repro.autotune.space import (  # noqa: F401
@@ -25,5 +28,8 @@ from repro.autotune.space import (  # noqa: F401
     divisors,
     enumerate_decode_space,
     enumerate_space,
+    enumerate_speculative_space,
+    lm_decode_schedules,
+    speculative_draft_legal,
 )
 from repro.autotune.target import OBJECTIVES, DesignTarget  # noqa: F401

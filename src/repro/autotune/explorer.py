@@ -362,3 +362,128 @@ def measure_points(cfg: ModelConfig, points: Sequence[DesignPoint], *,
             best = min(best, time.perf_counter() - t0)
         walls[p.key] = best
     return walls
+
+
+# ---------------------------------------------------------------------------
+# Speculative exploration: price (draft, verify, K) triples analytically
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SpeculativePoint:
+    """One priced (draft, verify, K) speculative triple."""
+
+    draft: Optional[object]              # KernelSchedule | None (n-gram)
+    verify: object                       # KernelSchedule
+    k: int
+    estimate: object                     # core.hls.SpeculativeEstimate
+
+    @property
+    def key(self) -> str:
+        d = "ngram" if self.draft is None else self.draft.key()
+        return f"spec(k={self.k}, draft={d}, verify={self.verify.key()})"
+
+    def report_row(self, clock_mhz: float = 200.0) -> dict:
+        return {"key": self.key, **self.estimate.report_row(clock_mhz)}
+
+
+def _estimate_for(cfg: ModelConfig, schedule, fp):
+    """Single-step estimate of one schedule on this config's decode path:
+    the RNN step for recurrent families, the dense-stack LM step
+    otherwise — the same split the serving engines execute."""
+    from repro.core.hls.resources import (estimate_decode_step,
+                                          estimate_lm_decode)
+    if cfg.rnn is not None:
+        return estimate_decode_step(schedule, cfg.rnn, fp)
+    return estimate_lm_decode(schedule, cfg, fp)
+
+
+def _spec_feasible(est, target: Optional[DesignTarget]) -> bool:
+    """Target feasibility for a speculative estimate: resource caps apply
+    to the SUM of both resident datapaths, the latency budget to the
+    expected per-token latency of the round, the throughput floor to the
+    expected tokens/s."""
+    if target is None:
+        return True
+    c = target.clock_mhz
+    if target.max_dsp is not None and est.dsp > target.max_dsp:
+        return False
+    if target.max_bram_18k is not None and est.bram_18k > target.max_bram_18k:
+        return False
+    if (target.max_latency_us is not None
+            and est.latency_us_per_token(c) > target.max_latency_us):
+        return False
+    if (target.min_throughput_eps is not None
+            and est.tokens_per_s(c) < target.min_throughput_eps):
+        return False
+    return True
+
+
+def explore_speculative(cfg: ModelConfig,
+                        target: Optional[DesignTarget] = None,
+                        spec: Optional[SpaceSpec] = None, *,
+                        ks: Sequence[int] = (1, 2, 4, 8),
+                        accept_rate: float = 0.75,
+                        include_ngram: bool = True
+                        ) -> Tuple[SpeculativePoint, ...]:
+    """Price every legal (draft, verify, K) triple and rank by expected
+    tokens/cycle (ties toward fewer DSPs, then key — deterministic).
+
+    ``accept_rate`` is the ASSUMED per-draft acceptance probability; the
+    bench harness records the measured rate next to it, the same
+    predicted-vs-measured discipline as every other estimator here.
+    Target constraints prune on the summed-resource / per-token-latency
+    axes (``_spec_feasible``)."""
+    from repro.autotune.space import enumerate_speculative_space
+    from repro.core.hls.resources import estimate_speculative
+
+    triples = enumerate_speculative_space(cfg, spec, ks=tuple(ks),
+                                          include_ngram=include_ngram)
+    fp, _clock, _part = _pricing_axes(target)
+    cache: Dict[str, object] = {}
+
+    def est_of(schedule):
+        key = schedule.key()
+        if key not in cache:
+            cache[key] = _estimate_for(cfg, schedule, fp)
+        return cache[key]
+
+    points = []
+    for draft, verify, k in triples:
+        est = estimate_speculative(
+            None if draft is None else est_of(draft), est_of(verify), k,
+            accept_rate)
+        if _spec_feasible(est, target):
+            points.append(SpeculativePoint(draft=draft, verify=verify, k=k,
+                                           estimate=est))
+    points.sort(key=lambda p: (-p.estimate.tokens_per_cycle,
+                               p.estimate.dsp, p.key))
+    return tuple(points)
+
+
+def select_speculative(cfg: ModelConfig,
+                       target: Optional[DesignTarget] = None,
+                       spec: Optional[SpaceSpec] = None, *,
+                       ks: Sequence[int] = (1, 2, 4, 8),
+                       accept_rate: float = 0.75,
+                       include_ngram: bool = True,
+                       measure_fn=None,
+                       measure_top_k: int = 3) -> SpeculativePoint:
+    """Pick the speculative triple to serve: the analytically best point,
+    optionally re-ranked by measurement — ``measure_fn(point) ->
+    tokens/s`` runs the top-k predicted candidates through the real
+    engine and the HIGHEST measured rate wins (ties toward fewer DSPs).
+    Raises ValueError when the target prunes the space to nothing."""
+    points = explore_speculative(cfg, target, spec, ks=ks,
+                                 accept_rate=accept_rate,
+                                 include_ngram=include_ngram)
+    if not points:
+        raise ValueError(
+            "no speculative (draft, verify, K) triple is feasible: the "
+            "target pruned every point — relax the resource/latency "
+            "budget, widen the SpaceSpec, or allow the n-gram draft")
+    if measure_fn is None or measure_top_k <= 0:
+        return points[0]
+    top = list(points[:measure_top_k])
+    walls = {p.key: float(measure_fn(p)) for p in top}
+    return max(top, key=lambda p: (walls[p.key], -p.estimate.dsp))

@@ -180,3 +180,94 @@ def enumerate_decode_space(cfg: ModelConfig,
     """The decode-legal slice of the schedule space (deduped, sorted) —
     what ``autotune.select_decode`` and the decode estimators price."""
     return tuple(s for s in enumerate_space(cfg, spec) if decode_legal(s))
+
+
+# ---------------------------------------------------------------------------
+# Speculative slice: legal (draft, verify, K) triples over the decode space
+# ---------------------------------------------------------------------------
+
+
+def lm_decode_schedules(cfg: ModelConfig,
+                        spec: Optional[SpaceSpec] = None
+                        ) -> Tuple[KernelSchedule, ...]:
+    """The decode-legal schedule slice for a DENSE-stack LM config — the
+    reuse factors are divisors of the gcd of the scheduled step's fused
+    matmul output widths (q|k|v, attn out, MLP in, MLP down), so every
+    enumerated R is what ``effective_reuse`` resolves on EVERY matmul in
+    the chain: the point priced is the point executed, chain-wide.
+    """
+    import math
+
+    spec = spec or SpaceSpec()
+    d, f = cfg.d_model, cfg.d_ff
+    hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    glu = cfg.mlp_type in ("swiglu", "geglu")
+    widths = [(hq + 2 * hk) * hd, d, 2 * f if glu else f, d]
+    g = 0
+    for w in widths:
+        g = math.gcd(g, w)
+    rfs = spec.reuse_factors if spec.reuse_factors is not None \
+        else divisors(g)
+    seen = {}
+    for backend in spec.backends:
+        for bb in spec.block_batches:
+            for r in rfs:
+                if g % r != 0:
+                    continue
+                s = KernelSchedule(reuse_factor=r, mode="static",
+                                   block_batch=bb, backend=backend)
+                if not _tpu_aligned(s, g):
+                    continue
+                seen.setdefault(s.key(), s)
+                if len(seen) >= spec.max_points:
+                    break
+    return tuple(seen[k] for k in sorted(seen))
+
+
+def speculative_draft_legal(draft: Optional[KernelSchedule],
+                            verify: KernelSchedule) -> bool:
+    """True when ``draft`` may propose tokens for ``verify`` to check.
+
+    ``None`` (the n-gram CacheTable) is always legal — free drafts cost
+    nothing to be wrong.  A model draft must itself be decode-legal
+    (it runs the same single-step kernels) and STRICTLY cheaper than the
+    verify schedule — reuse_factor strictly higher, the cheap side of the
+    paper's R asymmetry.  Equal-or-denser drafts would pay more per draft
+    than verification recovers; they are pruned, not penalized.
+    """
+    if draft is None:
+        return True
+    return (decode_legal(draft)
+            and draft.reuse_factor > verify.reuse_factor)
+
+
+def enumerate_speculative_space(cfg: ModelConfig,
+                                spec: Optional[SpaceSpec] = None, *,
+                                ks: Tuple[int, ...] = (1, 2, 4, 8),
+                                include_ngram: bool = True
+                                ) -> Tuple[Tuple[Optional[KernelSchedule],
+                                                 KernelSchedule, int], ...]:
+    """Every legal (draft, verify, K) triple: verify ranges over the
+    decode-legal slice (RNN families via ``enumerate_decode_space``,
+    dense stacks via ``lm_decode_schedules``), drafts over the same slice
+    restricted by ``speculative_draft_legal`` plus the free n-gram draft
+    (``None``) when ``include_ngram``.  Deterministic order: sorted by
+    (verify key, draft key or '', K)."""
+    if cfg.rnn is not None:
+        pool = enumerate_decode_space(cfg, spec)
+    else:
+        pool = lm_decode_schedules(cfg, spec)
+    triples = []
+    for verify in pool:
+        drafts: Tuple[Optional[KernelSchedule], ...] = tuple(
+            d for d in pool if speculative_draft_legal(d, verify))
+        if include_ngram:
+            drafts = (None,) + drafts
+        for draft in drafts:
+            for k in ks:
+                if k < 1:
+                    continue        # K=0 is "speculation off", not a point
+                triples.append((draft, verify, k))
+    triples.sort(key=lambda t: (t[1].key(),
+                                "" if t[0] is None else t[0].key(), t[2]))
+    return tuple(triples)

@@ -15,10 +15,13 @@ from repro.core.hls.design_point import (  # noqa: F401
 from repro.core.hls.resources import (  # noqa: F401
     FPGA_PARTS,
     ScheduleEstimate,
+    SpeculativeEstimate,
     admission_rate_eps,
     estimate_decode_step,
     estimate_lm_decode,
     estimate_schedule,
+    estimate_speculative,
+    expected_round_tokens,
     gate_count,
     resolved_axes,
 )

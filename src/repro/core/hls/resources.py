@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Optional
 
 from repro.core.quant.fixed_point import is_native_int, packed_weight_bytes
 from repro.kernels.schedule import KernelSchedule
@@ -359,3 +360,109 @@ def estimate_lm_decode(schedule: KernelSchedule, cfg, fp=None
         vmem_bytes=L * vmem_w + act * (bt * max(o for _, o in chain)
                                        + 2 * bt * d),
         weight_vmem_bytes=L * vmem_w)
+
+
+# ---------------------------------------------------------------------------
+# Speculative decode pricing (draft cheap on high R, verify dense on R1)
+# ---------------------------------------------------------------------------
+
+
+def expected_round_tokens(k: int, accept_rate: float) -> float:
+    """Expected tokens emitted per speculative round at draft depth ``k``
+    and per-draft acceptance probability ``accept_rate`` (independent
+    drafts): the truncated geometric sum ``(1 - a^(k+1)) / (1 - a)`` —
+    between 1 (reject-all) and ``k + 1`` (accept-all, the bonus token
+    included)."""
+    if k < 0:
+        raise ValueError(f"k must be >= 0, got {k}")
+    if not 0.0 <= accept_rate <= 1.0:
+        raise ValueError(f"accept_rate must be in [0, 1]: {accept_rate}")
+    if accept_rate == 1.0:
+        return float(k + 1)
+    return (1.0 - accept_rate ** (k + 1)) / (1.0 - accept_rate)
+
+
+@dataclass(frozen=True)
+class SpeculativeEstimate:
+    """What one speculative (draft, verify, K) triple costs per round.
+
+    ``draft=None`` prices the free n-gram ``CacheTable`` draft (zero
+    cycles, zero silicon); a schedule drafts on the model itself — K
+    sequential steps at the cheap schedule's latency.  The verify pass is
+    ONE batched K+1-position program on the dense schedule: its first
+    position costs the full pipeline latency, each further position one
+    more initiation interval (the paper's II-limited steady state).
+
+      cycles_per_round = K x draft.latency + verify.latency
+                         + K x max(verify.ii, 1)
+      tokens_per_cycle = expected_round_tokens(K, accept_rate) / cycles
+
+    ``speedup_vs_sequential`` compares against K=0 sequential decode on
+    the SAME verify schedule (one token per verify latency) — exactly 1.0
+    at K=0, by construction.  Resources are the sum of both resident
+    datapaths: speculation buys its tokens/s with the draft schedule's
+    (cheap) silicon, never with accuracy."""
+
+    draft: Optional[ScheduleEstimate]
+    verify: ScheduleEstimate
+    k: int
+    accept_rate: float
+    expected_tokens: float
+    cycles_per_round: float
+    tokens_per_cycle: float
+    dsp: int
+    bram_18k: int
+
+    def speedup_vs_sequential(self) -> float:
+        return self.tokens_per_cycle * float(self.verify.latency_cycles)
+
+    def tokens_per_s(self, clock_mhz: float = 200.0) -> float:
+        return self.tokens_per_cycle * clock_mhz * 1e6
+
+    def latency_us_per_token(self, clock_mhz: float = 200.0) -> float:
+        return (self.cycles_per_round / max(self.expected_tokens, 1e-12)
+                / clock_mhz)
+
+    def report_row(self, clock_mhz: float = 200.0) -> dict:
+        return {
+            "k": self.k,
+            "draft_key": (None if self.draft is None
+                          else self.draft.schedule.key()),
+            "verify_key": self.verify.schedule.key(),
+            "accept_rate": self.accept_rate,
+            "expected_tokens": self.expected_tokens,
+            "cycles_per_round": self.cycles_per_round,
+            "tokens_per_cycle": self.tokens_per_cycle,
+            "tokens_per_s": self.tokens_per_s(clock_mhz),
+            "speedup_vs_sequential": self.speedup_vs_sequential(),
+            "dsp": self.dsp,
+            "bram_18k": self.bram_18k,
+        }
+
+
+def estimate_speculative(draft_est: Optional[ScheduleEstimate],
+                         verify_est: ScheduleEstimate, k: int,
+                         accept_rate: float) -> SpeculativeEstimate:
+    """Price a (draft, verify, K) speculative triple analytically.
+
+    ``draft_est=None`` is the n-gram table draft (free); otherwise the
+    draft schedule pays K sequential single-step latencies per round.
+    The verify pass pays one dense latency plus K extra initiation
+    intervals for the batched positions.  At ``k=0`` the round IS the
+    sequential step (no drafts, no extra positions): tokens_per_cycle is
+    exactly ``1 / verify.latency_cycles`` and the speedup is exactly 1.
+    """
+    if k < 0:
+        raise ValueError(f"k must be >= 0, got {k}")
+    exp_tok = expected_round_tokens(k, accept_rate)
+    draft_cycles = 0.0 if draft_est is None \
+        else float(k * draft_est.latency_cycles)
+    cycles = (draft_cycles + float(verify_est.latency_cycles)
+              + float(k * max(verify_est.ii_cycles, 1)))
+    dsp = verify_est.dsp + (0 if draft_est is None else draft_est.dsp)
+    bram = verify_est.bram_18k + (0 if draft_est is None
+                                  else draft_est.bram_18k)
+    return SpeculativeEstimate(
+        draft=draft_est, verify=verify_est, k=k, accept_rate=accept_rate,
+        expected_tokens=exp_tok, cycles_per_round=cycles,
+        tokens_per_cycle=exp_tok / cycles, dsp=dsp, bram_18k=bram)

@@ -222,17 +222,29 @@ def pack_decode_params(cfg: ModelConfig, params: Dict,
     return resident(srcs, f"lm-decode/{schedule_key(schedule)}", pack)
 
 
-def _scheduled_dense_step(cfg: ModelConfig, params: Dict, packed: Dict,
-                          cache: Dict, x: jax.Array, pos: jax.Array,
-                          schedule: KernelSchedule
-                          ) -> Tuple[jax.Array, Dict]:
-    """The fused dense-decoder step under ``schedule``: same math as the
-    einsum branch of :func:`decode_step` (bit-identical — every fused /
-    tiled matmul keeps each output column's full-K reduction), executed as
-    scheduled ``decode_matmul`` calls over the resident packed weights."""
-    B = x.shape[0]
+def _dense_steps(cfg: ModelConfig, params: Dict, packed: Dict,
+                 cache: Dict, x: jax.Array, pos: jax.Array,
+                 schedule: Optional[KernelSchedule]
+                 ) -> Tuple[jax.Array, Dict]:
+    """The fused dense-decoder pass under ``schedule`` for a CHUNK of
+    ``S = x.shape[1]`` tokens per row: same math as the einsum branch of
+    :func:`decode_step` (bit-identical — every fused / tiled matmul keeps
+    each output column's full-K reduction), executed as scheduled
+    ``decode_matmul`` calls over the resident packed weights.
+
+    S = 1 is exactly the PR 5 single step.  For S > 1 (the speculative
+    verify pass) the chunk matmuls run once over ``[B*S, d]`` — matmul
+    rows are independent, so each row's result equals the sequential
+    step's — and the attention of position ``pos+i`` masks every cache
+    entry at index >= ``pos+i+1`` with NEG_INF before the softmax, so
+    entries written by LATER chunk positions (or stale entries from a
+    rejected draft) contribute exactly zero: the batched pass matches the
+    sequential chain token by token, caches included.
+    """
+    B, S = x.shape[0], x.shape[1]
     d, hq, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     glu = cfg.mlp_type in ("swiglu", "geglu")
+    positions = pos[:, None] + jnp.arange(S, dtype=pos.dtype)     # [B, S]
 
     def mm(a, w):
         return decode_matmul(a, w, schedule=schedule)
@@ -242,31 +254,39 @@ def _scheduled_dense_step(cfg: ModelConfig, params: Dict, packed: Dict,
     h = x
     for l, p_l in enumerate(packed["layers"]):
         hn = norm(cfg, h, p_l, "decoder/norm1")
-        z = mm(hn.reshape(B, d), p_l["__wqkv"])
-        q = z[:, :hq * hd].reshape(B, 1, hq, hd)
-        k = z[:, hq * hd:(hq + hk) * hd].reshape(B, 1, hk, hd)
-        v = z[:, (hq + hk) * hd:].reshape(B, 1, hk, hd)
-        q = apply_rope(q, pos[:, None], cfg.rope_theta)
-        k = apply_rope(k, pos[:, None], cfg.rope_theta)
-        ck = _update_cache(ck_all[l], k.astype(ck_all.dtype), pos)
-        cv = _update_cache(cv_all[l], v.astype(cv_all.dtype), pos)
+        z = mm(hn.reshape(B * S, d), p_l["__wqkv"])
+        q = z[:, :hq * hd].reshape(B, S, hq, hd)
+        k = z[:, hq * hd:(hq + hk) * hd].reshape(B, S, hk, hd)
+        v = z[:, (hq + hk) * hd:].reshape(B, S, hk, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        ck, cv = ck_all[l], cv_all[l]
+        for i in range(S):
+            ck = _update_cache(ck, k[:, i:i + 1].astype(ck_all.dtype),
+                               pos + i if i else pos)
+            cv = _update_cache(cv, v[:, i:i + 1].astype(cv_all.dtype),
+                               pos + i if i else pos)
         ck = constrain(ck, "batch", "kv_seq", "kv_heads_r", "head_dim")
         cv = constrain(cv, "batch", "kv_seq", "kv_heads_r", "head_dim")
-        o = decode_attention(q, ck.astype(h.dtype), cv.astype(h.dtype),
-                             pos + 1, window=cfg.attn_window)
-        h = h + mm(o.astype(h.dtype).reshape(B, hq * hd),
-                   p_l["__wo"]).reshape(B, 1, d)
+        outs = [decode_attention(q[:, i:i + 1], ck.astype(h.dtype),
+                                 cv.astype(h.dtype), pos + i + 1,
+                                 window=cfg.attn_window)
+                for i in range(S)]
+        o = outs[0] if S == 1 else jnp.concatenate(outs, axis=1)
+        h = h + mm(o.astype(h.dtype).reshape(B * S, hq * hd),
+                   p_l["__wo"]).reshape(B, S, d)
         h2 = norm(cfg, h, p_l, "decoder/norm2")
         if glu:
             act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
-            zgu = mm(h2.reshape(B, d), p_l["__wgu"])
+            zgu = mm(h2.reshape(B * S, d), p_l["__wgu"])
             f = zgu.shape[-1] // 2
             mid = act(zgu[:, :f]) * zgu[:, f:]
         else:
             act = ACTIVATIONS["relu2" if cfg.mlp_type == "relu2" else "gelu"]
-            mid = act(mm(h2.reshape(B, d), p_l["__wup"]))
-        mid = constrain(mid[:, None, :], "batch", "seq_nosp", "ffn")[:, 0]
-        h = h + mm(mid, p_l["__wdown"]).reshape(B, 1, d)
+            mid = act(mm(h2.reshape(B * S, d), p_l["__wup"]))
+        mid = constrain(mid.reshape(B, S, -1), "batch", "seq_nosp",
+                        "ffn").reshape(B * S, -1)
+        h = h + mm(mid, p_l["__wdown"]).reshape(B, S, d)
         cks.append(ck)
         cvs.append(cv)
     new_cache = dict(cache)
@@ -301,8 +321,7 @@ def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
     if schedule is not None and decode_schedulable(cfg):
         if packed is None:
             packed = pack_decode_params(cfg, params, schedule)
-        return _scheduled_dense_step(cfg, params, packed, cache, x, pos,
-                                     schedule)
+        return _dense_steps(cfg, params, packed, cache, x, pos, schedule)
     if cfg.enc_dec:
         # whisper decoder: sinusoidal position at each sequence's pos
         d = cfg.d_model
@@ -445,6 +464,76 @@ def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
     x = norm(cfg, x, params, "final_norm")
     logits = tf.logits_fn(cfg, params, x)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Multi-token verify + KV rollback (the speculative-decode seam)
+# ---------------------------------------------------------------------------
+
+
+def decode_steps(cfg: ModelConfig, params: Dict, cache: Dict,
+                 tokens: jax.Array, pos: jax.Array, *,
+                 schedule: Optional[KernelSchedule] = None,
+                 packed: Optional[Dict] = None
+                 ) -> Tuple[jax.Array, Dict]:
+    """Multi-token decode: process ``S = tokens.shape[1]`` consecutive
+    positions per row in ONE pass.  tokens: [b, S] int32; pos: [b] position
+    of each row's FIRST token.  Returns (logits [b, S, V], new cache) —
+    ``logits[:, i]`` is what :func:`decode_step` would have produced for
+    token i with the cache advanced through tokens ``< i``.
+
+    This is the speculative decoder's verify pass: the K draft tokens plus
+    the bonus position are checked in a single batched program instead of
+    K+1 sequential steps.  Dense-stack families run :func:`_dense_steps`
+    (chunk matmuls over [B*S, d]; per-position attention masks make the
+    pass bit-match the sequential chain — see its docstring).  Families
+    whose step is not matmul-shaped — and the ``schedule=None`` default,
+    whose sequential step is the einsum path rather than the fused matmul
+    chain — unroll the sequential step inside one trace, which preserves
+    exactness trivially (the fused plain-dot chain is NOT bit-identical to
+    the einsum chain once the cache carries earlier steps' rounding).
+    """
+    S = tokens.shape[1]
+    if schedule is not None and decode_schedulable(cfg):
+        cdt = jnp.dtype(cfg.compute_dtype)
+        x = embed(tokens, params["embed/table"], cdt) * math.sqrt(cfg.d_model)
+        if packed is None:
+            packed = pack_decode_params(cfg, params, schedule)
+        return _dense_steps(cfg, params, packed, cache, x, pos, schedule)
+    logits: List[jax.Array] = []
+    for i in range(S):
+        li, cache = decode_step(cfg, params, cache, tokens[:, i:i + 1],
+                                pos + i if i else pos, schedule=schedule)
+        logits.append(li)
+    return (logits[0] if S == 1 else jnp.concatenate(logits, axis=1)), cache
+
+
+def kv_trim(cache: Dict, keep: jax.Array) -> Dict:
+    """Roll the self-attention KV cache back to ``keep[b]`` valid entries
+    per row: positions ``>= keep[b]`` of ``cache/k`` / ``cache/v`` return
+    to their initial all-zeros state, so a cache that saw rejected
+    speculative writes becomes bit-equal to one that only ever advanced
+    through the accepted prefix.
+
+    Not needed for exactness — ``decode_attention`` masks every entry at
+    index >= cache_len with NEG_INF before the softmax, so stale entries
+    already contribute exactly zero, and the next verify window rewrites
+    them before they could become visible — this is the STRICT rollback
+    mode (``SpecConfig.trim``): it makes the resident cache itself an
+    auditable bit-copy of the sequential baseline's, which is what the
+    rollback-boundary tests compare.  Encoder caches (``cache/xk`` /
+    ``cache/xv``) and the non-dense families' ring/state caches are left
+    untouched: their entries do not depend on decode position.
+    """
+    new = dict(cache)
+    for name in ("cache/k", "cache/v"):
+        if name not in cache:
+            continue
+        c = cache[name]                      # [L, b, S, hk, hd]
+        sel = jnp.arange(c.shape[2])[None, :] < keep[:, None]       # [b, S]
+        new[name] = jnp.where(sel[None, :, :, None, None], c,
+                              jnp.zeros((), c.dtype))
+    return new
 
 
 def _local_attn_decode(cfg, x, p, pre, ck, cv, cpos, pos, window):

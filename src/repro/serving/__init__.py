@@ -22,6 +22,14 @@ from repro.serving.faults import (  # noqa: F401
     corrupt_cache_entries,
 )
 from repro.serving.lm_engine import LMServingEngine  # noqa: F401
+from repro.serving.speculative import (  # noqa: F401
+    CacheTable,
+    RowAdvance,
+    SpecConfig,
+    SpeculativeDecoder,
+    accept_chunk,
+    speculative_generate,
+)
 from repro.serving.streaming import (  # noqa: F401
     SHED_REASONS,
     STAGES,

@@ -25,6 +25,18 @@ bit-identically to the einsum path (conformance-enforced).
 ``serve_report`` pairs each key's measured tokens/s (decoded tokens over
 decode wall-clock) with ``estimate_lm_decode`` of the SAME schedule object
 — the decode path's measured-vs-analytical two-column table.
+
+Speculative decode (PR 9): a key may additionally carry a ``SpecConfig``
+(engine default or per request) — its decoder then drafts K tokens per
+round on the cheap side of the R asymmetry (n-gram ``CacheTable`` or a
+high-R model draft step) and verifies all K+1 positions in ONE batched
+``decode_steps`` pass on its own schedule, with exact greedy-match
+acceptance (``serving/speculative.py``).  Keys with speculation get a
+``-spec[...]`` suffix so they never share a trace or KV cache with plain
+traffic; steady-state tokens/s counts ACCEPTED tokens only — drafted-but-
+rejected work is visible in the per-key accept_rate / drafted / rejected
+columns instead, and ``verify_spec_accounting`` enforces
+``drafted == accepted + rejected`` exactly.
 """
 
 from __future__ import annotations
@@ -45,6 +57,8 @@ from repro.models.decode import (cache_specs, decode_schedulable, decode_step,
                                  pack_decode_params)
 from repro.serving.batcher import KeyStats, _now
 from repro.serving.compile_cache import CachedExecutor, CompileCache
+from repro.serving.speculative import (SpecConfig, SpeculativeDecoder,
+                                       accept_chunk)
 
 
 @dataclass
@@ -70,9 +84,15 @@ class _KeyedDecoder:
     def __init__(self, cfg: ModelConfig, key: str,
                  schedule: Optional[KernelSchedule], *, max_batch: int,
                  max_seq: int, cache_dtype: str, params: Optional[Dict] = None,
-                 compile_cache: Optional[CompileCache] = None):
+                 compile_cache: Optional[CompileCache] = None,
+                 spec: Optional[SpecConfig] = None):
         self.key = key
         self.schedule = schedule
+        self.spec_dec = (SpeculativeDecoder(
+            cfg, key, schedule, spec, max_batch=max_batch, max_seq=max_seq,
+            cache_dtype=cache_dtype, params=params,
+            compile_cache=compile_cache)
+            if spec is not None and spec.k > 0 else None)
         self.scheduled = schedule is not None and decode_schedulable(cfg)
         self.max_batch = max_batch
         self.max_seq = max_seq
@@ -109,7 +129,11 @@ class _KeyedDecoder:
         """Ensure this key's decode-step executable exists without ticking
         (nothing executes, the KV cache is untouched): lowers against the
         exact shapes ``_tick_decoder`` calls with — warm over a persistent
-        cache, compile-and-store when cold."""
+        cache, compile-and-store when cold.  Speculative keys warm their
+        verify (and draft) executables instead: those are the only
+        programs their ticks run."""
+        if self.spec_dec is not None:
+            return self.spec_dec.warm(params, self.cache)
         tok = jax.ShapeDtypeStruct((self.max_batch, 1), jnp.int32)
         pos = jax.ShapeDtypeStruct((self.max_batch,), jnp.int32)
         args = (params, self.cache, tok, pos)
@@ -133,13 +157,15 @@ class LMServingEngine:
                  max_batch: int = 4, max_seq: int = 256,
                  cache_dtype: str = "float32",
                  schedule: Optional[KernelSchedule] = None,
-                 cache_dir: Optional[str] = None):
+                 cache_dir: Optional[str] = None,
+                 spec: Optional[SpecConfig] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
         self.schedule = schedule            # default-request schedule
+        self.spec = spec                    # default-request speculation
         self.compile_cache = CompileCache(cache_dir)
         self._decoders: Dict[str, _KeyedDecoder] = {}
         self._next_req = 0
@@ -149,15 +175,29 @@ class LMServingEngine:
 
     # -- keyed decoders ------------------------------------------------------
 
-    def _key_for(self, schedule: Optional[KernelSchedule]) -> str:
-        schedule = schedule if schedule is not None else self.schedule
-        return (DEFAULT_SCHEDULE_KEY if schedule is None
-                else schedule_key(schedule))
+    def _resolve_spec(self, spec: Optional[SpecConfig]
+                      ) -> Optional[SpecConfig]:
+        spec = spec if spec is not None else self.spec
+        return None if spec is None or spec.k == 0 else spec
 
-    def _decoder_for(self, schedule: Optional[KernelSchedule]
-                     ) -> _KeyedDecoder:
+    def _key_for(self, schedule: Optional[KernelSchedule],
+                 spec: Optional[SpecConfig] = None) -> str:
+        schedule = schedule if schedule is not None else self.schedule
+        key = (DEFAULT_SCHEDULE_KEY if schedule is None
+               else schedule_key(schedule))
+        spec = self._resolve_spec(spec)
+        if spec is not None:
+            # dash-separated suffix: KernelSchedule.from_key still parses
+            # the schedule part; speculative keys never share a trace or
+            # KV cache with plain traffic on the same schedule
+            key = key + "-" + spec.key_token()
+        return key
+
+    def _decoder_for(self, schedule: Optional[KernelSchedule],
+                     spec: Optional[SpecConfig] = None) -> _KeyedDecoder:
         sched = schedule if schedule is not None else self.schedule
-        key = self._key_for(sched)
+        spc = self._resolve_spec(spec)
+        key = self._key_for(sched, spec)
         dec = self._decoders.get(key)
         if dec is None:
             dec = _KeyedDecoder(self.cfg, key, sched,
@@ -165,7 +205,8 @@ class LMServingEngine:
                                 max_seq=self.max_seq,
                                 cache_dtype=self.cache_dtype,
                                 params=self.params,
-                                compile_cache=self.compile_cache)
+                                compile_cache=self.compile_cache,
+                                spec=spc)
             self._decoders[key] = dec
         return dec
 
@@ -196,12 +237,13 @@ class LMServingEngine:
     # -- request management --------------------------------------------------
     def add_request(self, prompt: List[int], max_new: int = 16,
                     now: Optional[float] = None,
-                    schedule: Optional[KernelSchedule] = None
+                    schedule: Optional[KernelSchedule] = None,
+                    spec: Optional[SpecConfig] = None
                     ) -> Optional[int]:
         """Claim a slot on the request's schedule-key decoder; None when that
         key's pool is full (keys never borrow each other's slots — they
         could not share a decode batch anyway)."""
-        dec = self._decoder_for(schedule)
+        dec = self._decoder_for(schedule, spec)
         s = dec.free_slot()
         if s is None:
             return None                 # this key's queue is full
@@ -215,6 +257,7 @@ class LMServingEngine:
         # time.time() made request latencies NTP-step sensitive
         s.arrival_s = _now() if now is None else now
         s._prompt_len = len(prompt)
+        s._observed = 0                 # n-gram table watermark (spec keys)
         return s.req_id
 
     def _advance_prompt_or_sample(self, s: Slot, logits_row) -> int:
@@ -272,13 +315,72 @@ class LMServingEngine:
             dec.stats.batches += 1
         return finished
 
+    # -- one speculative round: draft K, verify K+1 in one pass --------------
+    def _tick_spec(self, dec: _KeyedDecoder,
+                   now: Optional[float]) -> Dict[int, List[int]]:
+        sd = dec.spec_dec
+        if sd.table is not None:
+            # feed newly observed tokens (prompt + accepted continuations)
+            # into the n-gram table before drafting this round
+            for s in dec.slots:
+                if s.active:
+                    sd.table.observe(s.tokens, start=getattr(s, "_observed", 0))
+                    s._observed = len(s.tokens)
+        rows: List[Optional[tuple]] = [None] * dec.max_batch
+        for i, s in enumerate(dec.slots):
+            if s.active:
+                rows[i] = (s.tokens, s._prompt_len, s.pos)
+        kv, chunk, greedy, wall, traced = sd.round(self.params, dec.cache,
+                                                   rows)
+        dec.cache = kv
+        dec.traces = sd.verify_traces   # serve_report / trace_count parity
+
+        finished: Dict[int, List[int]] = {}
+        emitted_total = 0
+        keep = np.zeros((dec.max_batch,), np.int32)
+        for i, s in enumerate(dec.slots):
+            if not s.active:
+                continue
+            adv = accept_chunk(
+                [int(t) for t in chunk[i]], [int(g) for g in greedy[i]],
+                tokens=s.tokens, plen=s._prompt_len, pos=s.pos,
+                max_new=s.max_new, max_seq=dec.max_seq)
+            s.tokens.extend(adv.emitted)
+            s.pos += adv.advanced
+            emitted_total += len(adv.emitted)
+            sd.drafted += adv.drafted
+            sd.accepted += adv.accepted
+            sd.rejected += adv.rejected
+            keep[i] = s.pos
+            if adv.done:
+                finished[s.req_id] = list(s.tokens)
+                s.active = False
+                keep[i] = 0             # trim frees the whole row
+                t = _now() if now is None else now
+                dec.stats.record_one(t - s.arrival_s)
+        if sd.spec.trim:
+            # optional rollback hygiene — outside the timed window: the
+            # exactness argument does not need it (see speculative.py)
+            dec.cache = sd.trim(dec.cache, keep)
+        # steady-state tokens/s: ACCEPTED tokens only, never drafted-but-
+        # rejected ones; rounds that traced/compiled are excluded
+        if not traced:
+            dec.decode_s += wall
+            dec.tokens += emitted_total
+        if finished:
+            dec.stats.batches += 1
+        return finished
+
     def tick(self, now: Optional[float] = None) -> Dict[int, List[int]]:
         """One decode step on every key with active slots (keys never mix
         in a batch); returns all requests finished this tick."""
         finished: Dict[int, List[int]] = {}
         for dec in self._decoders.values():
             if dec.any_active:
-                finished.update(self._tick_decoder(dec, now))
+                if dec.spec_dec is not None:
+                    finished.update(self._tick_spec(dec, now))
+                else:
+                    finished.update(self._tick_decoder(dec, now))
         return finished
 
     def serve_report(self, clock_mhz: float = 200.0) -> Dict[str, Dict]:
@@ -303,13 +405,42 @@ class LMServingEngine:
                 analytical = estimate_lm_decode(
                     dec.schedule, self.cfg).report_row(clock_mhz)
                 analytical["scheduled_kernels"] = True
+            sd = dec.spec_dec
             report[key] = {"schedule": dec.schedule,
                            "fp": None,
                            "traces": dec.traces,
+                           "accept_rate": sd.accept_rate if sd else None,
+                           "draft_traces": sd.draft_traces if sd else 0,
+                           "spec": sd.report_row() if sd else None,
                            "measured": measured,
                            "analytical": analytical,
                            "compile": self.compile_cache.report_row(key)}
         return report
+
+    def verify_spec_accounting(self) -> Dict[str, Dict]:
+        """Exact-sum invariant for every speculative key (PR 8's
+        ``verify_accounting`` style): drafted == accepted + rejected, no
+        token drafted ever unaccounted.  Raises AssertionError naming the
+        broken key/counters; returns the per-key counter dict on success."""
+        out: Dict[str, Dict] = {}
+        for key, dec in self._decoders.items():
+            sd = dec.spec_dec
+            if sd is None:
+                continue
+            if sd.drafted != sd.accepted + sd.rejected:
+                raise AssertionError(
+                    f"speculative accounting broken for key {key}: "
+                    f"drafted ({sd.drafted}) != accepted ({sd.accepted}) "
+                    f"+ rejected ({sd.rejected})")
+            if min(sd.drafted, sd.accepted, sd.rejected) < 0:
+                raise AssertionError(
+                    f"speculative accounting broken for key {key}: "
+                    f"negative counter (drafted={sd.drafted}, "
+                    f"accepted={sd.accepted}, rejected={sd.rejected})")
+            out[key] = {"drafted": sd.drafted, "accepted": sd.accepted,
+                        "rejected": sd.rejected, "rounds": sd.rounds,
+                        "accept_rate": sd.accept_rate}
+        return out
 
     def run_to_completion(self, max_ticks: int = 512,
                           now: Optional[float] = None) -> Dict[int, List[int]]:

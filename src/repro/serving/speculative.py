@@ -1,0 +1,468 @@
+"""Speculative decode on the scheduled step: draft cheap, verify dense.
+
+The paper's central trade is reuse factor R against initiation interval —
+high-R schedules are slow per step but nearly free in resources.  That is
+exactly the asymmetry speculative decoding exploits: draft K tokens per
+round on a cheap resident schedule (a high-R LM decode step, or an n-gram
+``CacheTable`` whose drafts cost nothing at all), then verify all K+1
+positions in ONE batched pass on the dense R1 schedule
+(:func:`repro.models.decode.decode_steps`).  Acceptance is exact greedy
+match — a draft token survives only if it equals the argmax the verify
+pass produced at the preceding position — so the emitted token sequence is
+bit-identical to sequential greedy decode, always.  Speculation changes
+only how many sequential steps the wall-clock pays for, never the tokens.
+
+KV-cache correctness without rollback: each round's verify writes the full
+window ``[pos, pos+K]`` per row, and a row advances by at most K+1, so the
+next round's window always covers (and overwrites) any stale wrong-branch
+entries before a query can attend to them — positions below ``pos`` hold
+exactly the values sequential decode would have written.  ``kv_trim``
+(rollback to the first rejected position) is therefore OPTIONAL hygiene,
+exposed via ``SpecConfig(trim=True)`` and conformance-tested, not a
+correctness requirement.
+
+The ``CacheTable`` follows SNIPPETS.md §3 (the `pie` speculative-decoding
+app): a suffix-keyed n-gram table with LRU eviction over contexts and a
+small most-recently-promoted candidate row per context — accepted
+continuations are promoted to the front, so hot loops in the stream draft
+themselves for free.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.kernels.schedule import KernelSchedule, cache_meta
+from repro.models.decode import (decode_schedulable, decode_step,
+                                 decode_steps, kv_trim, pack_decode_params)
+from repro.serving.compile_cache import CachedExecutor, CompileCache
+
+
+# ---------------------------------------------------------------------------
+# configuration
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Per-key speculative-decode configuration.
+
+    ``k`` draft tokens per round (``k=0`` disables speculation — the key
+    decodes sequentially, bit-for-bit the plain engine path).  ``draft``
+    is the cheap resident schedule the model-draft steps run on; ``None``
+    selects the free n-gram ``CacheTable`` draft instead.  ``trim``
+    additionally rolls the KV cache back to the accepted frontier after
+    every round (see module docstring — optional hygiene, not required
+    for exactness)."""
+
+    k: int = 4
+    draft: Optional[KernelSchedule] = None
+    ngram_n: int = 3
+    capacity: int = 4096
+    lru_size: int = 4
+    trim: bool = False
+
+    def __post_init__(self):
+        if self.k < 0:
+            raise ValueError(f"k must be >= 0, got {self.k}")
+        if self.ngram_n < 1:
+            raise ValueError(f"ngram_n must be >= 1, got {self.ngram_n}")
+        if self.capacity < 1 or self.lru_size < 1:
+            raise ValueError("capacity and lru_size must be >= 1")
+
+    def key_token(self) -> str:
+        """Dash-free serving-key suffix: appended to the schedule key as
+        ``<schedule_key>-spec[...]``, it must survive a round-trip through
+        ``KernelSchedule.from_key`` (which ignores unknown dash-separated
+        tokens), so no dashes may appear inside."""
+        if self.k == 0:
+            return ""
+        if self.draft is None:
+            d = f"ngram{self.ngram_n}"
+        else:
+            d = "draft[" + self.draft.key().replace("-", "_") + "]"
+        t = "_trim" if self.trim else ""
+        return f"spec[k{self.k}_{d}{t}]"
+
+
+# ---------------------------------------------------------------------------
+# n-gram draft table (SNIPPETS.md §3: suffix-keyed, LRU-evicted, promoted
+# on accept)
+
+
+class CacheTable:
+    """Bounded n-gram → continuation table.
+
+    Keys are ``n``-token context tuples; each maps to a small list of
+    candidate next tokens, most-recently-promoted first (at most
+    ``lru_size`` per context).  The table itself holds at most
+    ``capacity`` contexts; inserting beyond that evicts the least
+    recently used context.  Lookups and inserts both count as context
+    use.  Invariants (property-tested): ``len(table) <= capacity``
+    always; a candidate row never holds duplicates; a just-inserted
+    (context, token) pair is an immediate hit; eviction order is exactly
+    LRU over contexts."""
+
+    def __init__(self, n: int = 3, capacity: int = 1024, lru_size: int = 4):
+        if n < 1 or capacity < 1 or lru_size < 1:
+            raise ValueError("n, capacity and lru_size must all be >= 1")
+        self.n = n
+        self.capacity = capacity
+        self.lru_size = lru_size
+        self._table: "OrderedDict[Tuple[int, ...], List[int]]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+    def candidates(self, context: Sequence[int]) -> List[int]:
+        return list(self._table.get(tuple(int(t) for t in context), ()))
+
+    def insert(self, context: Sequence[int], nxt: int) -> None:
+        ctx = tuple(int(t) for t in context)
+        if len(ctx) != self.n:
+            return                      # only n-length suffixes are keys
+        t = int(nxt)
+        row = self._table.get(ctx)
+        if row is None:
+            self._table[ctx] = [t]
+            if len(self._table) > self.capacity:
+                self._table.popitem(last=False)     # LRU context out
+                self.evictions += 1
+            return
+        self._table.move_to_end(ctx)
+        if t in row:                    # promote, never duplicate
+            row.remove(t)
+        row.insert(0, t)
+        while len(row) > self.lru_size:
+            row.pop()                   # least-recently-promoted candidate
+
+    def lookup(self, context: Sequence[int]) -> Optional[int]:
+        ctx = tuple(int(t) for t in context)
+        row = self._table.get(ctx)
+        if not row:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._table.move_to_end(ctx)    # a lookup is a use
+        return row[0]
+
+    def observe(self, tokens: Sequence[int], start: int = 0) -> None:
+        """Feed every (n-gram suffix → next token) pair of ``tokens``
+        whose target index is ``>= start`` (the caller's watermark, so a
+        growing stream is observed incrementally without rescans)."""
+        toks = [int(t) for t in tokens]
+        for j in range(max(int(start), self.n), len(toks)):
+            self.insert(toks[j - self.n:j], toks[j])
+
+    def draft(self, tokens: Sequence[int], k: int) -> List[int]:
+        """K speculative continuations of ``tokens``: chain MRU lookups on
+        the rolling n-token suffix; on a miss, repeat the last token (a
+        cheap bet that costs nothing when wrong — rejection just falls
+        back to the verify pass's own token)."""
+        toks = [int(t) for t in tokens]
+        ctx = toks[-self.n:]
+        last = toks[-1] if toks else 0
+        out: List[int] = []
+        for _ in range(int(k)):
+            cand = self.lookup(ctx) if len(ctx) == self.n else None
+            t = last if cand is None else int(cand)
+            out.append(t)
+            ctx = (ctx + [t])[-self.n:]
+            last = t
+        return out
+
+
+# ---------------------------------------------------------------------------
+# exact greedy-match acceptance
+
+
+@dataclass
+class RowAdvance:
+    """Outcome of one row's acceptance walk over a verified chunk."""
+
+    emitted: List[int]
+    advanced: int
+    drafted: int
+    accepted: int
+    rejected: int
+    done: bool
+
+
+def accept_chunk(inputs: Sequence[int], greedy: Sequence[int], *,
+                 tokens: Sequence[int], plen: int, pos: int,
+                 max_new: int, max_seq: int = 1 << 30) -> RowAdvance:
+    """Walk one row's verified chunk exactly as the sequential engine tick
+    would have: ``inputs[i]`` is the token fed at position ``pos+i``,
+    ``greedy[i]`` the verify pass's argmax there.  Teacher-force while
+    inside the prompt, emit greedy tokens after it, and stop at the first
+    position whose fed token does not match — everything after a mismatch
+    is a wrong-branch draft.  ``drafted`` counts every speculative input
+    in the chunk (``pos+i >= len(tokens)``); ``accepted`` those consumed
+    matching; ``rejected = drafted - accepted`` exactly, by construction.
+
+    The advance/done logic replicates the sequential tick bit-for-bit:
+    emit iff the next position leaves the prompt; done when ``max_new``
+    fresh tokens exist or the row hits ``max_seq - 1``."""
+    S = len(inputs)
+    toks = list(tokens)
+    n_tok = len(toks)
+    drafted = sum(1 for i in range(1, S) if pos + i >= n_tok)
+    emitted: List[int] = []
+    advanced = accepted = 0
+    n = n_tok
+    p = pos
+    done = False
+    for i in range(S):
+        nxt = int(toks[p + 1]) if p + 1 < plen else int(greedy[i])
+        if p + 1 >= plen:
+            emitted.append(nxt)
+            n += 1
+        p += 1
+        advanced += 1
+        done = (n - plen >= max_new) or (p >= max_seq - 1)
+        if done or i + 1 >= S:
+            break
+        if int(inputs[i + 1]) != nxt:
+            break                       # first rejection: stop the walk
+        if pos + i + 1 >= n_tok:
+            accepted += 1               # a draft was consumed matching
+    return RowAdvance(emitted=emitted, advanced=advanced, drafted=drafted,
+                      accepted=accepted, rejected=drafted - accepted,
+                      done=done)
+
+
+def speculative_generate(step_fn: Callable[[List[int]], np.ndarray],
+                         prompt: Sequence[int], max_new: int, *,
+                         k: int = 4,
+                         draft_fn: Optional[Callable[[List[int], int],
+                                                     Sequence[int]]] = None,
+                         table: Optional[CacheTable] = None,
+                         max_seq: int = 1 << 30
+                         ) -> Tuple[List[int], Dict[str, int]]:
+    """Reference speculative driver over a stateless next-token oracle
+    (``step_fn(context) -> logits``), for conformance against the plain
+    sequential greedy loop — including fixed-point oracles (native int8)
+    where the engine's KV path does not apply.  Returns the generated
+    tokens (bit-identical to sequential greedy by the exact-match
+    invariant) plus drafted/accepted/rejected/rounds counters."""
+    if k > 0 and draft_fn is None and table is None:
+        table = CacheTable()
+    toks = [int(t) for t in prompt]
+    plen = len(toks)
+    stats = {"drafted": 0, "accepted": 0, "rejected": 0, "rounds": 0}
+    observed = 0
+    while len(toks) - plen < max_new and len(toks) < max_seq:
+        if table is not None:
+            table.observe(toks, start=observed)
+            observed = len(toks)
+        pos = len(toks) - 1
+        if k > 0:
+            drafts = (list(draft_fn(toks, k)) if draft_fn is not None
+                      else table.draft(toks, k))[:k]
+        else:
+            drafts = []
+        inputs = [toks[-1]] + [int(d) for d in drafts]
+        greedy: List[int] = []
+        ctx = list(toks)
+        for i, t in enumerate(inputs):
+            if i > 0:
+                ctx = ctx + [int(t)]
+            greedy.append(int(np.argmax(np.asarray(step_fn(ctx)))))
+        adv = accept_chunk(inputs, greedy, tokens=toks, plen=plen, pos=pos,
+                           max_new=max_new, max_seq=max_seq)
+        toks.extend(adv.emitted)
+        stats["drafted"] += adv.drafted
+        stats["accepted"] += adv.accepted
+        stats["rejected"] += adv.rejected
+        stats["rounds"] += 1
+        if adv.done:
+            break
+    return toks[plen:], stats
+
+
+# ---------------------------------------------------------------------------
+# the engine-side decoder: one jit trace each for draft and verify
+
+
+class SpeculativeDecoder:
+    """Executors and counters for one serving key's speculative rounds.
+
+    Owns the verify executor (ONE jit trace of ``decode_steps`` over the
+    fixed ``[max_batch, k+1]`` chunk shape) and, for model drafts, the
+    draft executor (ONE trace of ``decode_step`` on the cheap schedule).
+    The KV cache stays owned by the keyed decoder — ``round`` threads it
+    through draft steps and the verify pass and hands it back."""
+
+    def __init__(self, cfg: ModelConfig, key: str,
+                 schedule: Optional[KernelSchedule], spec: SpecConfig, *,
+                 max_batch: int, max_seq: int, cache_dtype: str,
+                 params: Optional[Dict] = None,
+                 compile_cache: Optional[CompileCache] = None):
+        if spec.k < 1:
+            raise ValueError("SpeculativeDecoder needs k >= 1 "
+                             "(k=0 means speculation is disabled)")
+        self.cfg = cfg
+        self.key = key
+        self.schedule = schedule
+        self.spec = spec
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.verify_traces = 0
+        self.draft_traces = 0
+        self.drafted = 0
+        self.accepted = 0
+        self.rejected = 0
+        self.rounds = 0
+        scheduled = decode_schedulable(cfg) and params is not None
+        self.packed = (pack_decode_params(cfg, params, schedule)
+                       if scheduled and schedule is not None else None)
+        self.table = (CacheTable(spec.ngram_n, spec.capacity, spec.lru_size)
+                      if spec.draft is None else None)
+        self.draft_packed = (pack_decode_params(cfg, params, spec.draft)
+                             if scheduled and spec.draft is not None else None)
+        cache = compile_cache if compile_cache is not None else CompileCache()
+
+        def verify(params, kv, tokens, pos, packed=None):
+            self.verify_traces += 1     # cold lower/compile only
+            return decode_steps(cfg, params, kv, tokens, pos,
+                                schedule=schedule, packed=packed)
+
+        meta = {"kind": "lm_decode_steps", "cfg": repr(cfg),
+                "max_batch": max_batch, "max_seq": max_seq,
+                "cache_dtype": cache_dtype, "chunk": spec.k + 1,
+                "spec": spec.key_token(), **cache_meta(schedule, None)}
+        self._verify = CachedExecutor(
+            jax.jit(verify, donate_argnums=(1,)), cache, key, meta,
+            name_hint=f"lmverify-{key}")
+
+        self._draft = None
+        if spec.draft is not None:
+            def draft_step(params, kv, tokens, pos, packed=None):
+                self.draft_traces += 1
+                return decode_step(cfg, params, kv, tokens, pos,
+                                   schedule=spec.draft, packed=packed)
+
+            dmeta = {"kind": "lm_draft_step", "cfg": repr(cfg),
+                     "max_batch": max_batch, "max_seq": max_seq,
+                     "cache_dtype": cache_dtype, "spec": spec.key_token(),
+                     **cache_meta(spec.draft, None)}
+            self._draft = CachedExecutor(
+                jax.jit(draft_step), cache, key, dmeta,
+                name_hint=f"lmdraft-{key}")
+
+        self._trim = (jax.jit(kv_trim, donate_argnums=(0,))
+                      if spec.trim else None)
+
+    # -- warmup --------------------------------------------------------------
+
+    def warm(self, params: Dict, kv: Dict) -> Dict[str, Dict]:
+        """Make this key's verify (and draft) executables exist without
+        executing anything — warm over a persistent cache, compile-and-
+        store when cold.  Shapes match exactly what ``round`` calls."""
+        pos = jax.ShapeDtypeStruct((self.max_batch,), jnp.int32)
+        vtok = jax.ShapeDtypeStruct((self.max_batch, self.spec.k + 1),
+                                    jnp.int32)
+        args = (params, kv, vtok, pos)
+        if self.packed is not None:
+            args = args + (self.packed,)
+        out = {"verify": self._verify.warm(*args)}
+        if self._draft is not None:
+            dtok = jax.ShapeDtypeStruct((self.max_batch, 1), jnp.int32)
+            dargs = (params, kv, dtok, pos)
+            if self.draft_packed is not None:
+                dargs = dargs + (self.draft_packed,)
+            out["draft"] = self._draft.warm(*dargs)
+        return out
+
+    # -- one speculative round ----------------------------------------------
+
+    def round(self, params: Dict, kv: Dict,
+              rows: Sequence[Optional[Tuple[Sequence[int], int, int]]]
+              ) -> Tuple[Dict, np.ndarray, np.ndarray, float, bool]:
+        """Draft + verify one chunk for every row.  ``rows[b]`` is
+        ``(tokens, prompt_len, pos)`` for an active slot, None otherwise.
+        Returns ``(kv, chunk [B,S], greedy [B,S], wall_s, traced)`` —
+        the caller runs :func:`accept_chunk` per row and applies the
+        advances; ``traced`` flags a round that paid a trace/compile
+        (excluded from steady-state tokens/s)."""
+        B, S = self.max_batch, self.spec.k + 1
+        chunk = np.zeros((B, S), np.int32)
+        posv = np.zeros((B,), np.int32)
+        known = np.full((B,), S, np.int32)      # inactive rows: no drafts
+        t0 = time.perf_counter()
+        traces0 = self.verify_traces + self.draft_traces
+        for b, row in enumerate(rows):
+            if row is None:
+                continue
+            toks, _plen, pos = row
+            posv[b] = pos
+            nk = min(S, len(toks) - pos)        # known (non-draft) prefix
+            chunk[b, :nk] = [int(t) for t in toks[pos:pos + nk]]
+            known[b] = nk
+        if self.table is not None:
+            for b, row in enumerate(rows):
+                if row is None or known[b] >= S:
+                    continue
+                toks, _plen, _pos = row
+                nk = int(known[b])
+                prefix = [int(t) for t in toks[:int(posv[b]) + nk]]
+                chunk[b, nk:] = self.table.draft(prefix, S - nk)
+        elif self._draft is not None and int(known.min()) < S:
+            for i in range(1, S):
+                step_pos = posv + (i - 1)
+                args = (params, kv, jnp.asarray(chunk[:, i - 1:i]),
+                        jnp.asarray(step_pos))
+                if self.draft_packed is not None:
+                    args = args + (self.draft_packed,)
+                dlog, kv = self._draft(*args)
+                need = known <= i               # rows drafting position i
+                if need.any():
+                    nxt = np.asarray(jnp.argmax(dlog[:, 0], axis=-1))
+                    chunk[:, i] = np.where(need, nxt.astype(np.int32),
+                                           chunk[:, i])
+        args = (params, kv, jnp.asarray(chunk), jnp.asarray(posv))
+        if self.packed is not None:
+            args = args + (self.packed,)
+        logits, kv = self._verify(*args)
+        greedy = np.asarray(jnp.argmax(logits, axis=-1))
+        wall = time.perf_counter() - t0
+        traced = (self.verify_traces + self.draft_traces) != traces0
+        self.rounds += 1
+        return kv, chunk, greedy, wall, traced
+
+    def trim(self, kv: Dict, keep: np.ndarray) -> Dict:
+        """Optional post-round rollback to the accepted frontier."""
+        if self._trim is None:
+            return kv
+        return self._trim(kv, jnp.asarray(keep.astype(np.int32)))
+
+    @property
+    def accept_rate(self) -> Optional[float]:
+        return (self.accepted / self.drafted) if self.drafted else None
+
+    def report_row(self) -> Dict[str, object]:
+        return {"k": self.spec.k,
+                "draft": (None if self.spec.draft is None
+                          else self.spec.draft.key()),
+                "ngram_n": self.spec.ngram_n if self.spec.draft is None
+                else None,
+                "trim": self.spec.trim,
+                "rounds": self.rounds,
+                "drafted": self.drafted,
+                "accepted": self.accepted,
+                "rejected": self.rejected,
+                "accept_rate": self.accept_rate,
+                "verify_traces": self.verify_traces,
+                "draft_traces": self.draft_traces,
+                "table_hits": self.table.hits if self.table else None,
+                "table_misses": self.table.misses if self.table else None}

@@ -1,0 +1,565 @@
+"""Speculative decode: exact-match preservation, CacheTable invariants,
+accounting, KV rollback, pricing laws, and the autotuned triple space.
+
+The load-bearing invariant everywhere: speculation changes WHICH positions
+a round pays for, never the tokens — every speculative path must be
+bit-identical, token by token, to the PR 5 sequential decode it rides on.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.autotune import (SpaceSpec, enumerate_speculative_space,
+                            lm_decode_schedules, select_speculative,
+                            speculative_draft_legal)
+from repro.autotune.space import decode_legal
+from repro.autotune.target import DesignTarget
+from repro.config import FixedPointConfig
+from repro.core.hls import (estimate_lm_decode, estimate_speculative,
+                            expected_round_tokens)
+from repro.core.quant.fixed_point import is_native_int, quantize_np
+from repro.kernels.decode_step import rnn_decode_step
+from repro.kernels.schedule import KernelSchedule
+from repro.models import build_model
+from repro.models.decode import (cache_specs, decode_step, decode_steps,
+                                 kv_trim)
+from repro.registry import get_config
+from repro.serving import LMServingEngine
+from repro.serving.speculative import (CacheTable, SpecConfig, accept_chunk,
+                                       speculative_generate)
+from repro.testing import tiny_config
+
+
+# ---------------------------------------------------------------------------
+# shared model fixtures
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = tiny_config(get_config("stablelm-3b"))
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _zero_cache(cfg, batch, seq):
+    specs = cache_specs(cfg, batch, seq, "float32")
+    return {k: jnp.zeros(s.shape, jnp.dtype(s.dtype))
+            for k, s in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# CacheTable (SNIPPETS.md §3 pie pattern): unit + property invariants
+# ---------------------------------------------------------------------------
+
+
+def test_cache_table_hit_after_insert_and_promotion():
+    t = CacheTable(n=3, capacity=8, lru_size=2)
+    t.insert([1, 2, 3], 7)
+    assert t.lookup([1, 2, 3]) == 7
+    t.insert([1, 2, 3], 9)             # newer candidate promoted to front
+    assert t.lookup([1, 2, 3]) == 9
+    t.insert([1, 2, 3], 7)             # promote back, no duplicate
+    assert t.candidates([1, 2, 3]) == [7, 9]
+    t.insert([1, 2, 3], 5)             # row bounded by lru_size=2
+    assert t.candidates([1, 2, 3]) == [5, 7]
+    assert len(t.candidates([1, 2, 3])) <= 2
+
+
+def test_cache_table_lru_eviction_order_is_deterministic():
+    t = CacheTable(n=2, capacity=3, lru_size=2)
+    t.insert([1, 1], 1)
+    t.insert([2, 2], 2)
+    t.insert([3, 3], 3)
+    assert t.lookup([1, 1]) == 1       # touch (1,1): now (2,2) is LRU
+    t.insert([4, 4], 4)                # over capacity -> evict (2,2)
+    assert t.lookup([2, 2]) is None
+    assert t.lookup([1, 1]) == 1
+    assert t.evictions == 1
+    assert len(t) == 3
+
+
+def test_cache_table_observe_and_draft_follow_a_cycle():
+    t = CacheTable(n=3, capacity=64, lru_size=4)
+    stream = [1, 2, 3, 4, 5] * 4
+    t.observe(stream)
+    # drafts from the cycle's suffix reproduce the cycle
+    assert t.draft(stream, 5) == [1, 2, 3, 4, 5]
+    # incremental observe via watermark sees only new targets
+    hits0 = t.hits
+    t.observe(stream + [1, 2], start=len(stream))
+    assert t.draft(stream + [1, 2], 3) == [3, 4, 5]
+    assert t.hits > hits0
+
+
+def test_cache_table_rejects_bad_params_and_short_contexts():
+    with pytest.raises(ValueError):
+        CacheTable(n=0)
+    with pytest.raises(ValueError):
+        CacheTable(capacity=0)
+    t = CacheTable(n=3)
+    t.insert([1, 2], 9)                # wrong-length context: ignored
+    assert len(t) == 0
+    # drafting from a too-short stream falls back to repeat-last
+    assert t.draft([5], 3) == [5, 5, 5]
+
+
+@settings(max_examples=25)
+@given(capacity=st.integers(1, 6), lru=st.integers(1, 3),
+       seed=st.integers(0, 10_000), nops=st.integers(1, 40))
+def test_cache_table_properties(capacity, lru, seed, nops):
+    """size <= capacity always; no duplicate candidates; rows <= lru_size;
+    a just-inserted pair is an immediate hit."""
+    rnd = np.random.RandomState(seed)
+    t = CacheTable(n=2, capacity=capacity, lru_size=lru)
+    for _ in range(nops):
+        ctx = [int(x) for x in rnd.randint(0, 4, size=2)]
+        nxt = int(rnd.randint(0, 6))
+        t.insert(ctx, nxt)
+        assert len(t) <= capacity
+        assert t.lookup(ctx) == nxt    # hit after insert, MRU first
+        row = t.candidates(ctx)
+        assert len(row) == len(set(row)) <= lru
+
+
+# ---------------------------------------------------------------------------
+# accept_chunk: the sequential tick's advance logic, replayed over a chunk
+# ---------------------------------------------------------------------------
+
+
+def test_accept_chunk_accept_all_emits_bonus_token():
+    toks = [3, 1]                      # plen 2, generation phase
+    adv = accept_chunk([1, 5, 6], [5, 6, 7], tokens=toks, plen=2, pos=1,
+                       max_new=16)
+    assert adv.emitted == [5, 6, 7]    # K accepted drafts + the bonus
+    assert (adv.drafted, adv.accepted, adv.rejected) == (2, 2, 0)
+    assert adv.advanced == 3 and not adv.done
+
+
+def test_accept_chunk_reject_first_draft():
+    adv = accept_chunk([1, 9, 9], [5, 6, 7], tokens=[3, 1], plen=2, pos=1,
+                       max_new=16)
+    assert adv.emitted == [5]          # the verify pass's own token only
+    assert (adv.drafted, adv.accepted, adv.rejected) == (2, 0, 2)
+    assert adv.advanced == 1
+
+
+def test_accept_chunk_teacher_forces_prompt_then_emits():
+    # chunk covers prompt positions: walk teacher-forces through them and
+    # emits only after leaving the prompt — multi-token prompt consumption
+    toks = [4, 7, 2, 9]                # plen 4, pos 0
+    adv = accept_chunk([4, 7, 2, 9], [1, 1, 1, 8], tokens=toks, plen=4,
+                       pos=0, max_new=16)
+    assert adv.emitted == [8]          # only the post-prompt position
+    assert adv.advanced == 4
+    assert adv.drafted == 0 == adv.accepted == adv.rejected
+
+
+def test_accept_chunk_stops_at_max_new_and_max_seq():
+    adv = accept_chunk([1, 5, 6], [5, 6, 7], tokens=[3, 1], plen=2, pos=1,
+                       max_new=1)
+    assert adv.emitted == [5] and adv.done
+    adv = accept_chunk([1, 5, 6], [5, 6, 7], tokens=[3, 1], plen=2, pos=1,
+                       max_new=16, max_seq=3)
+    assert adv.done and adv.advanced == 1
+
+
+@settings(max_examples=30)
+@given(seed=st.integers(0, 10_000), k=st.integers(0, 5),
+       plen=st.integers(1, 4), max_new=st.integers(1, 6))
+def test_accept_chunk_exact_sum_property(seed, k, plen, max_new):
+    """drafted == accepted + rejected for arbitrary chunks, and emitted
+    tokens never exceed the chunk length."""
+    rnd = np.random.RandomState(seed)
+    toks = [int(x) for x in rnd.randint(0, 8, size=plen)]
+    pos = int(rnd.randint(0, plen))
+    n_known = len(toks) - pos
+    S = k + 1
+    inputs = [toks[pos + i] if i < n_known else int(rnd.randint(0, 8))
+              for i in range(S)]
+    greedy = [int(x) for x in rnd.randint(0, 8, size=S)]
+    adv = accept_chunk(inputs, greedy, tokens=toks, plen=plen, pos=pos,
+                       max_new=max_new)
+    assert adv.drafted == adv.accepted + adv.rejected
+    assert adv.drafted >= 0 and adv.accepted >= 0 and adv.rejected >= 0
+    assert len(adv.emitted) <= S
+    assert adv.advanced >= 1           # position 0 always advances
+
+
+# ---------------------------------------------------------------------------
+# decode_steps / kv_trim: the multi-token verify primitives bit-match the
+# sequential step
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sched", [
+    None,
+    KernelSchedule(reuse_factor=2, block_batch=8, backend="pallas_interpret"),
+    KernelSchedule(reuse_factor=4, block_batch=8, backend="xla"),
+], ids=["default", "R2-pallas", "R4-xla"])
+def test_decode_steps_bit_matches_sequential_chain(lm, sched):
+    cfg, params = lm
+    B, S = 2, 5
+    zero = _zero_cache(cfg, B, 16)
+    rng = np.random.RandomState(0)
+    toks = rng.randint(0, cfg.vocab_size, size=(B, S)).astype(np.int32)
+    pos0 = jnp.asarray([0, 3], jnp.int32)
+
+    cache = dict(zero)
+    outs = []
+    for i in range(S):
+        li, cache = decode_step(cfg, params, cache,
+                                jnp.asarray(toks[:, i:i + 1]),
+                                pos0 + i, schedule=sched)
+        outs.append(np.asarray(li))
+    seq = np.concatenate(outs, 1)
+    bl, bc = decode_steps(cfg, params, dict(zero), jnp.asarray(toks), pos0,
+                          schedule=sched)
+    assert (np.asarray(bl) == seq).all()
+    for k in cache:
+        assert (np.asarray(bc[k]) == np.asarray(cache[k])).all(), k
+
+
+def test_kv_trim_rolls_back_to_sequential_prefix(lm):
+    cfg, params = lm
+    B = 2
+    zero = _zero_cache(cfg, B, 16)
+    rng = np.random.RandomState(1)
+    toks = rng.randint(0, cfg.vocab_size, size=(B, 6)).astype(np.int32)
+    pos0 = jnp.asarray([0, 2], jnp.int32)
+
+    cache = dict(zero)
+    for i in range(3):
+        _, cache = decode_step(cfg, params, cache,
+                               jnp.asarray(toks[:, i:i + 1]), pos0 + i)
+    ref = {k: np.asarray(v) for k, v in cache.items()}
+    dirty = dict(cache)
+    for i in range(3, 6):              # wrong-branch speculative writes
+        _, dirty = decode_step(cfg, params, dirty,
+                               jnp.asarray(toks[:, i:i + 1]), pos0 + i)
+    trimmed = kv_trim(dirty, pos0 + 3)
+    for k in ref:
+        assert (np.asarray(trimmed[k]) == ref[k]).all(), k
+    # decoding onward from the trimmed cache == from the clean prefix
+    l1, _ = decode_step(cfg, params, dict(trimmed),
+                        jnp.asarray(toks[:, 3:4]), pos0 + 3)
+    l2, _ = decode_step(cfg, params, {k: jnp.asarray(v)
+                                      for k, v in ref.items()},
+                        jnp.asarray(toks[:, 3:4]), pos0 + 3)
+    assert (np.asarray(l1) == np.asarray(l2)).all()
+
+
+# ---------------------------------------------------------------------------
+# engine-level exact match: speculative == PR 5 sequential, token by token
+# ---------------------------------------------------------------------------
+
+
+def _serve(cfg, params, prompts, max_new, schedule=None, spec=None,
+           max_seq=64):
+    eng = LMServingEngine(cfg, params, max_batch=len(prompts) + 1,
+                          max_seq=max_seq, schedule=schedule, spec=spec)
+    ids = [eng.add_request(list(p), max_new=max_new) for p in prompts]
+    out = eng.run_to_completion()
+    return [out[i] for i in ids], eng
+
+
+R1P = KernelSchedule(reuse_factor=1, block_batch=8, backend="pallas_interpret")
+R4P = KernelSchedule(reuse_factor=4, block_batch=8, backend="pallas_interpret")
+R8X = KernelSchedule(reuse_factor=8, block_batch=8, backend="xla")
+R1X = KernelSchedule(reuse_factor=1, block_batch=8, backend="xla")
+
+
+@pytest.mark.parametrize("sched,spec", [
+    (None, SpecConfig(k=3)),
+    (R1P, SpecConfig(k=2)),
+    (R4P, SpecConfig(k=4, trim=True)),
+    (R1X, SpecConfig(k=2, draft=R8X)),
+    (None, SpecConfig(k=3, draft=R8X)),
+], ids=["ngram-default-k3", "ngram-R1p-k2", "ngram-R4p-k4-trim",
+        "draftR8-R1x-k2", "draftR8-default-k3"])
+def test_engine_speculative_bit_identical_to_sequential(lm, sched, spec):
+    cfg, params = lm
+    rng = np.random.RandomState(2)
+    prompts = [list(rng.randint(0, cfg.vocab_size, size=4)) for _ in range(3)]
+    ref, _ = _serve(cfg, params, prompts, 10, schedule=sched)
+    got, eng = _serve(cfg, params, prompts, 10, schedule=sched, spec=spec)
+    assert got == ref                  # token-by-token bit identity
+    acc = eng.verify_spec_accounting()
+    (key,) = acc
+    assert acc[key]["drafted"] == acc[key]["accepted"] + acc[key]["rejected"]
+    dec = eng._decoders[key]
+    assert dec.spec_dec.verify_traces == 1      # ONE verify trace per key
+    assert dec.spec_dec.draft_traces <= 1       # ONE draft trace (if any)
+
+
+def test_engine_k0_disables_speculation_cleanly(lm):
+    cfg, params = lm
+    eng = LMServingEngine(cfg, params, max_batch=2, max_seq=32,
+                          spec=SpecConfig(k=0))
+    assert eng.keys() == ["default"]   # same key as a plain engine
+    rid = eng.add_request([3, 1, 4], max_new=4)
+    out = eng.run_to_completion()
+    plain, _ = _serve(cfg, params, [[3, 1, 4]], 4)
+    assert list(out[rid]) == plain[0]
+    assert eng.verify_spec_accounting() == {}   # no speculative keys
+    rep = eng.serve_report()["default"]
+    assert rep["accept_rate"] is None and rep["spec"] is None
+    # a per-request k=0 override on a spec-default engine opts OUT
+    eng2 = LMServingEngine(cfg, params, max_batch=2, max_seq=32,
+                           spec=SpecConfig(k=2))
+    eng2.add_request([3, 1, 4], max_new=4, spec=SpecConfig(k=0))
+    assert "default" in eng2.keys()
+
+
+def test_engine_spec_key_isolated_from_plain_traffic(lm):
+    cfg, params = lm
+    eng = LMServingEngine(cfg, params, max_batch=2, max_seq=32)
+    r1 = eng.add_request([5, 2], max_new=3)
+    r2 = eng.add_request([5, 2], max_new=3, spec=SpecConfig(k=2))
+    out = eng.run_to_completion()
+    assert list(out[r1]) == list(out[r2])       # exact match across keys
+    keys = eng.keys()
+    assert "default" in keys and "default-spec[k2_ngram3]" in keys
+    # schedule part of the suffixed key still round-trips through from_key
+    spec_key = [k for k in keys if "spec" in k][0]
+    assert spec_key.startswith("default")
+
+
+def test_engine_spec_slot_reuse_and_queue_full(lm):
+    cfg, params = lm
+    eng = LMServingEngine(cfg, params, max_batch=2, max_seq=32,
+                          spec=SpecConfig(k=2))
+    a = eng.add_request([1, 2], max_new=2)
+    b = eng.add_request([3, 4], max_new=2)
+    assert eng.add_request([5, 6], max_new=2) is None   # pool full
+    out = eng.run_to_completion()
+    assert set(out) == {a, b}
+    c = eng.add_request([5, 6], max_new=2)              # slot freed
+    assert c is not None
+    out2 = eng.run_to_completion()
+    ref, _ = _serve(cfg, params, [[5, 6]], 2)
+    assert list(out2[c]) == ref[0]
+
+
+def test_engine_spec_serve_report_and_accounting_columns(lm):
+    cfg, params = lm
+    rng = np.random.RandomState(3)
+    prompts = [list(rng.randint(0, cfg.vocab_size, size=3))
+               for _ in range(2)]
+    _, eng = _serve(cfg, params, prompts, 6, spec=SpecConfig(k=3))
+    (key,) = eng.keys()
+    rep = eng.serve_report()[key]
+    sd = rep["spec"]
+    assert rep["draft_traces"] == 0             # n-gram drafts never trace
+    assert sd["k"] == 3 and sd["draft"] is None and sd["ngram_n"] == 3
+    assert sd["drafted"] == sd["accepted"] + sd["rejected"]
+    assert sd["rounds"] > 0 and sd["verify_traces"] == 1
+    assert rep["accept_rate"] == sd["accept_rate"]
+    # tokens/s counts ACCEPTED tokens only: the measured token count is
+    # what the requests actually received, not what was drafted
+    emitted = 2 * 6                             # 2 requests x max_new
+    assert rep["measured"]["tokens"] <= emitted
+    acc = eng.verify_spec_accounting()[key]
+    assert acc["drafted"] == sd["drafted"]
+    # tamper -> the exact-sum check must raise, naming the key
+    eng._decoders[key].spec_dec.rejected += 1
+    with pytest.raises(AssertionError, match="accounting broken"):
+        eng.verify_spec_accounting()
+
+
+# ---------------------------------------------------------------------------
+# generic driver: exactness over stateless oracles, fp incl. native int8
+# ---------------------------------------------------------------------------
+
+
+def _rnn_oracle(fp, schedule, vocab=12, hidden=8, seed=0):
+    """A toy stateless LM over ``rnn_decode_step``: one-hot embed, run the
+    (optionally native-int) scheduled recurrent step over the context,
+    project h onto the vocab.  The fp/native path is exactly the kernels'
+    — what the engine cannot reach for dense LMs, the driver covers."""
+    rng = np.random.RandomState(seed)
+    W = quantize_np(rng.randn(vocab, 4 * hidden).astype(np.float32) * .4, fp) \
+        if fp else rng.randn(vocab, 4 * hidden).astype(np.float32) * .4
+    U = quantize_np(rng.randn(hidden, 4 * hidden).astype(np.float32) * .4, fp) \
+        if fp else rng.randn(hidden, 4 * hidden).astype(np.float32) * .4
+    b = np.zeros((4 * hidden,), np.float32)
+    E = rng.randn(hidden, vocab).astype(np.float32)
+    Wj, Uj, bj, Ej = map(jnp.asarray, (W, U, b, E))
+
+    def step_fn(ctx):
+        h = jnp.zeros((1, hidden), jnp.float32)
+        c = jnp.zeros((1, hidden), jnp.float32)
+        for t in ctx:
+            x = jnp.zeros((1, vocab), jnp.float32).at[0, int(t)].set(1.0)
+            h, (h, c) = rnn_decode_step("lstm", x, (h, c), Wj, Uj, bj,
+                                        schedule=schedule, fp=fp)
+        return np.asarray(h @ Ej)[0]
+
+    return step_fn
+
+
+def _sequential_greedy(step_fn, prompt, max_new):
+    toks = list(prompt)
+    for _ in range(max_new):
+        toks.append(int(np.argmax(np.asarray(step_fn(toks)))))
+    return toks[len(prompt):]
+
+
+@pytest.mark.parametrize("fp,sched", [
+    (None, None),
+    (FixedPointConfig(16, 6), None),
+    (FixedPointConfig(8, 3),
+     KernelSchedule(reuse_factor=2, block_batch=8,
+                    backend="pallas_interpret")),
+], ids=["float", "emulated-fp16.6", "native-int8"])
+@pytest.mark.parametrize("k", [2, 4])
+def test_speculative_generate_exact_across_fp(fp, sched, k):
+    if fp is not None and sched is not None:
+        assert is_native_int(fp)       # the native kernel body runs
+    step_fn = _rnn_oracle(fp, sched)
+    prompt = [3, 1, 3, 1]
+    ref = _sequential_greedy(step_fn, prompt, 8)
+    got, stats = speculative_generate(step_fn, prompt, 8, k=k)
+    assert got == ref                  # bit-identical under every fp
+    assert stats["drafted"] == stats["accepted"] + stats["rejected"]
+    assert stats["rounds"] >= 1
+
+
+def test_speculative_generate_accept_all_and_reject_all():
+    step_fn = _rnn_oracle(None, None)
+    prompt = [2, 5, 2]
+    ref = _sequential_greedy(step_fn, prompt, 6)
+
+    def oracle_draft(toks, k):         # accept-all: draft the true greedy
+        out, cur = [], list(toks)
+        for _ in range(k):
+            nxt = int(np.argmax(np.asarray(step_fn(cur))))
+            out.append(nxt)
+            cur.append(nxt)
+        return out
+
+    # max_new = 8 is two FULL K=3 rounds (4 emits each): no draft lands
+    # past the max_new cap, so perfect drafts mean zero rejections
+    ref8 = _sequential_greedy(step_fn, prompt, 8)
+    got, stats = speculative_generate(step_fn, prompt, 8, k=3,
+                                      draft_fn=oracle_draft)
+    assert got == ref8
+    assert stats["rejected"] == 0 and stats["accepted"] == 6
+
+    def wrong_draft(toks, k):          # reject-all: never the greedy token
+        out, cur = [], list(toks)
+        for _ in range(k):
+            nxt = (int(np.argmax(np.asarray(step_fn(cur)))) + 1) % 12
+            out.append(nxt)
+            cur.append(nxt)
+        return out
+
+    got, stats = speculative_generate(step_fn, prompt, 6, k=3,
+                                      draft_fn=wrong_draft)
+    assert got == ref                  # exactness survives total rejection
+    assert stats["accepted"] == 0 and stats["rejected"] == stats["drafted"]
+    # K=0 degenerates to plain sequential greedy, no drafts at all
+    got, stats = speculative_generate(step_fn, prompt, 6, k=0)
+    assert got == ref and stats["drafted"] == 0
+
+
+# ---------------------------------------------------------------------------
+# pricing laws + the (draft, verify, K) space
+# ---------------------------------------------------------------------------
+
+
+def test_expected_round_tokens_limits():
+    assert expected_round_tokens(4, 0.0) == 1.0
+    assert expected_round_tokens(4, 1.0) == 5.0
+    assert expected_round_tokens(0, 0.5) == 1.0
+    a = [expected_round_tokens(3, r) for r in (0.1, 0.5, 0.9)]
+    assert a == sorted(a)              # monotone in accept_rate
+    with pytest.raises(ValueError):
+        expected_round_tokens(-1, 0.5)
+    with pytest.raises(ValueError):
+        expected_round_tokens(2, 1.5)
+
+
+def test_estimate_speculative_laws(lm):
+    cfg, _ = lm
+    verify = estimate_lm_decode(R1P, cfg)
+    draft = estimate_lm_decode(
+        KernelSchedule(reuse_factor=4, block_batch=8,
+                       backend="pallas_interpret"), cfg)
+    # K=0 is exactly sequential decode on the verify schedule
+    e0 = estimate_speculative(None, verify, 0, 0.75)
+    assert e0.speedup_vs_sequential() == pytest.approx(1.0)
+    assert e0.tokens_per_cycle == pytest.approx(1 / verify.latency_cycles)
+    # free n-gram drafts dominate model drafts at equal accept rate
+    en = estimate_speculative(None, verify, 4, 0.75)
+    em = estimate_speculative(draft, verify, 4, 0.75)
+    assert en.tokens_per_cycle > em.tokens_per_cycle
+    assert en.dsp < em.dsp             # and cost no silicon
+    # speedup monotone in accept rate at fixed K
+    sp = [estimate_speculative(None, verify, 4, r).speedup_vs_sequential()
+          for r in (0.0, 0.4, 0.8)]
+    assert sp == sorted(sp)
+    row = em.report_row()
+    assert row["draft_key"] == draft.schedule.key()
+    assert row["dsp"] == verify.dsp + draft.dsp
+
+
+def test_speculative_space_legality(lm):
+    cfg, _ = lm
+    sp = SpaceSpec(backends=("pallas_interpret",))
+    pool = lm_decode_schedules(cfg, sp)
+    assert pool and all(decode_legal(s) for s in pool)
+    triples = enumerate_speculative_space(cfg, sp, ks=(1, 2))
+    assert triples
+    for draft, verify, k in triples:
+        assert k >= 1
+        assert decode_legal(verify)
+        assert speculative_draft_legal(draft, verify)
+        if draft is not None:
+            assert draft.reuse_factor > verify.reuse_factor
+    # determinism
+    assert triples == enumerate_speculative_space(cfg, sp, ks=(1, 2))
+    # draft legality rules directly
+    assert speculative_draft_legal(None, R1P)
+    assert not speculative_draft_legal(R1P, R1P)       # not strictly cheaper
+    assert not speculative_draft_legal(R1P, R4P)       # denser than verify
+
+
+def test_select_speculative_target_and_rerank(lm):
+    cfg, _ = lm
+    sp = SpaceSpec(backends=("pallas_interpret",))
+    best = select_speculative(cfg, None, sp, ks=(2, 4))
+    assert best.k == 4 and best.draft is None  # analytic: free drafts, max K
+    # resource cap prices BOTH datapaths: cap below draft+verify forbids
+    # model drafts but keeps the n-gram triple
+    verify_dsp = estimate_lm_decode(R1P, cfg).dsp
+    t = DesignTarget(max_dsp=verify_dsp, clock_mhz=200.0)
+    pick = select_speculative(cfg, t, sp, ks=(2,))
+    assert pick.draft is None
+    with pytest.raises(ValueError, match="pruned every point"):
+        select_speculative(cfg, DesignTarget(max_dsp=1), sp, ks=(2,))
+    # measured re-rank: the HIGHEST measured tokens/s wins
+    measured = {2: 100.0, 4: 300.0}
+    pick = select_speculative(cfg, None, sp, ks=(2, 4),
+                              measure_fn=lambda p: measured.get(p.k, 0.0),
+                              measure_top_k=3)
+    assert pick.k == 4
+
+
+def test_spec_config_validation_and_key_tokens():
+    with pytest.raises(ValueError):
+        SpecConfig(k=-1)
+    with pytest.raises(ValueError):
+        SpecConfig(ngram_n=0)
+    assert SpecConfig(k=0).key_token() == ""
+    assert SpecConfig(k=4).key_token() == "spec[k4_ngram3]"
+    tok = SpecConfig(k=2, draft=R8X, trim=True).key_token()
+    assert "-" not in tok              # dash-free: from_key still parses
+    # the full serving key round-trips its schedule part
+    full = R1P.key() + "-" + tok
+    assert KernelSchedule.from_key(full).key() == R1P.key()
