@@ -1,0 +1,211 @@
+"""Replicated-serving smoke: N=1 vs N=3 scaling + mid-stream replica kill.
+
+The router (``repro.serving.router``) promises three things a trigger farm
+lives by: (1) data-parallel scaling — N replicas behind the consistent-hash
+ring sustain ~N x one replica's simulated throughput on a mixed-schedule
+stream; (2) fault transparency — killing a replica mid-stream loses NOTHING
+(every request still reaches exactly one terminal state, answered by a
+surviving replica, outputs bit-identical to a single-replica engine); and
+(3) exact accounting (``submitted == answered + failed + shed + in_flight``
+per key, hedges reconciled, duplicates counted).
+
+This bench replays one deterministic mixed-schedule arrival trace
+(round-robin over ~6 schedule keys, overdriven at ~4 x a single replica's
+aggregate capacity so BOTH legs are capacity-limited) through three legs:
+
+  * ``n1``     — single replica: the throughput baseline AND the
+                 bit-identity oracle;
+  * ``n3``     — three healthy replicas: the scaling leg;
+  * ``chaos``  — three replicas, one crashed (dead forever) a third of the
+                 way in: the failover leg.
+
+``smoke()`` raises (-> scripts/check.sh exits non-zero) if:
+  * any request is lost or duplicated (not exactly one terminal state, or
+    an answered request with != 1 surfaced result);
+  * any chaos-leg answer diverges bit-wise from the n1 oracle;
+  * router accounting breaks in any leg;
+  * sim-throughput scaling n3/n1 falls below 1.6x.
+
+``record()`` read-modify-writes an EXISTING perf-record JSON under
+``doc["router"]`` (run.py --router-smoke runs AFTER --json in check.sh,
+whose write_json rebuilds the document from scratch — order load-bearing,
+as with warmup/streaming).
+"""
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from benchmarks.common import emit  # noqa: E402
+from repro.autotune import SpaceSpec, enumerate_space  # noqa: E402
+from repro.kernels.schedule import schedule_key  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.registry import get_config  # noqa: E402
+from repro.serving import ReplicaPool, Router, RouterPolicy  # noqa: E402
+from repro.serving.faults import crash_replica  # noqa: E402
+
+SPEC = SpaceSpec(reuse_factors=(1, 2, 4), iis=(0, 1), backends=("xla",))
+CLOCK_MHZ = 200.0
+N_EVENTS = 240
+N_KEYS = 6
+OVERDRIVE = 4.0          # arrival rate as a multiple of 1-replica capacity
+MIN_SCALING = 1.6
+KILL_AT = N_EVENTS // 3
+
+
+def _harness():
+    cfg = get_config("top-tagging-gru")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    # a mixed stream over ~N_KEYS distinct schedule keys: the consistent
+    # hash ring spreads KEYS (not single requests) across replicas, so
+    # scaling needs key diversity — exactly the production shape
+    seen, schedules = set(), []
+    for s in enumerate_space(cfg, SPEC):
+        k = schedule_key(s)
+        if k not in seen:
+            seen.add(k)
+            schedules.append(s)
+        if len(schedules) == N_KEYS:
+            break
+    r = cfg.rnn
+    xs = np.random.RandomState(0).randn(
+        N_EVENTS, r.seq_len, r.input_size).astype(np.float32)
+    return cfg, params, schedules, xs
+
+
+def _run_leg(cfg, params, schedules, xs, n_replicas: int,
+             kill_at: Optional[int] = None) -> Dict[str, object]:
+    pool = ReplicaPool.build(cfg, params, n_replicas)
+    router = Router(pool, policy=RouterPolicy(timeout_s=1.0,
+                                              consecutive_failures=2,
+                                              probe_interval_s=1e9),
+                    clock_mhz=CLOCK_MHZ)
+    # price one replica's aggregate capacity for THIS mix, then overdrive
+    occ = [router._price(schedule_key(*router.reference_engine.resolve(s)),
+                         *router.reference_engine.resolve(s))[1]
+           for s in schedules]
+    dt = float(np.mean(occ)) / OVERDRIVE
+    done, t = [], 0.0
+    for i, x in enumerate(xs):
+        if kill_at is not None and i == kill_at:
+            # dead board: every later call on it crashes, including probes
+            victim = router.place(done[0].key) if done else pool.reference
+            crash_replica(victim)
+        done.append(router.submit(x, schedule=schedules[i % len(schedules)],
+                                  now=t))
+        t += dt
+    acc = router.verify_router_accounting()      # raises if inexact
+    answered = [r for r in done if r.status == "answered"]
+    makespan = max(r.done_s for r in answered) - done[0].arrival_s
+    return {
+        "replicas": n_replicas,
+        "events": len(done),
+        "answered": len(answered),
+        "failed": sum(1 for r in done if r.status == "failed"),
+        "shed": sum(1 for r in done if r.status == "shed"),
+        "retries": sum(c["retries"] for c in acc.values()),
+        "duplicates": sum(c["duplicates"] for c in acc.values()),
+        "re_placements": sum(c["re_placements"] for c in acc.values()),
+        "makespan_s": makespan,
+        "sim_eps": len(answered) / makespan,
+        "healthy_after": router.healthy_count(),
+        "events_log": list(router.events),
+        "keys": len(acc),
+        "results": [r.result for r in done],
+        "statuses": [r.status for r in done],
+    }
+
+
+def record(json_path: Optional[str] = None) -> Dict[str, object]:
+    """Run the three legs; optionally persist under ``doc["router"]`` of
+    an EXISTING perf-record JSON (read-modify-rewrite, never rebuilt)."""
+    cfg, params, schedules, xs = _harness()
+    n1 = _run_leg(cfg, params, schedules, xs, 1)
+    n3 = _run_leg(cfg, params, schedules, xs, 3)
+    chaos = _run_leg(cfg, params, schedules, xs, 3, kill_at=KILL_AT)
+
+    scaling = n3["sim_eps"] / n1["sim_eps"]
+    identical = all(
+        st != "answered" or np.array_equal(res, ref)
+        for st, res, ref in zip(chaos["statuses"], chaos["results"],
+                                n1["results"]))
+    lost = sum(1 for s in chaos["statuses"] if s not in
+               ("answered", "failed", "shed"))
+    rec = {
+        "criterion": f"mixed {len(schedules)}-key stream overdriven at "
+                     f"{OVERDRIVE:g}x one replica's capacity: N=3 sustains "
+                     f">={MIN_SCALING}x N=1 sim-throughput; killing a "
+                     f"replica at event {KILL_AT} loses/duplicates nothing "
+                     f"and stays bit-identical to the N=1 oracle; exact "
+                     f"accounting in every leg",
+        "clock_mhz": CLOCK_MHZ,
+        "schedule_keys": [schedule_key(s) for s in schedules],
+        "legs": {name: {k: v for k, v in leg.items()
+                        if k not in ("results", "statuses")}
+                 for name, leg in (("n1", n1), ("n3", n3),
+                                   ("chaos", chaos))},
+        "scaling_n3_over_n1": scaling,
+        "min_scaling": MIN_SCALING,
+        "chaos_bit_identical": identical,
+        "chaos_lost": lost,
+        "passed": (scaling >= MIN_SCALING and identical and lost == 0
+                   and chaos["answered"] == N_EVENTS
+                   and n1["answered"] == N_EVENTS
+                   and n3["answered"] == N_EVENTS),
+    }
+    if json_path is not None and os.path.exists(json_path):
+        with open(json_path) as f:
+            doc = json.load(f)
+        doc["router"] = rec
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+    return rec
+
+
+def smoke(json_path: str = "BENCH_rnn_kernels.json") -> None:
+    """Replicated-serving fail-fast: raises unless every bar holds."""
+    rec = record(json_path=json_path)
+    for name, leg in rec["legs"].items():
+        emit(f"router/{name}/sim_eps", leg["sim_eps"],
+             f"answered={leg['answered']}/{leg['events']}"
+             f"|retries={leg['retries']}|dup={leg['duplicates']}"
+             f"|healthy_after={leg['healthy_after']}")
+        assert leg["answered"] == leg["events"], \
+            (f"{name}: {leg['events'] - leg['answered']} requests not "
+             f"answered (failed={leg['failed']}, shed={leg['shed']}) — "
+             f"the ladder lost work")
+    assert rec["chaos_lost"] == 0, \
+        f"chaos leg lost {rec['chaos_lost']} requests to a non-terminal state"
+    assert rec["chaos_bit_identical"], \
+        "chaos-leg answers diverge from the single-replica oracle"
+    chaos = rec["legs"]["chaos"]
+    assert chaos["healthy_after"] == 2 and chaos["re_placements"] >= 1, \
+        (f"mid-stream kill not absorbed: healthy={chaos['healthy_after']}, "
+         f"re_placements={chaos['re_placements']}")
+    assert rec["scaling_n3_over_n1"] >= rec["min_scaling"], \
+        (f"replica scaling too weak: N=3/N=1 = "
+         f"{rec['scaling_n3_over_n1']:.2f}x < {rec['min_scaling']}x — "
+         f"placement is clumping keys or occupancy is serialized")
+    emit("router/scaling", rec["scaling_n3_over_n1"],
+         f"min={rec['min_scaling']}|bit_identical="
+         f"{rec['chaos_bit_identical']}|passed={rec['passed']}")
+    emit("router/json", 0.0,
+         f"recorded={os.path.exists(json_path)}|path={json_path}"
+         f"|passed={rec['passed']}")
+
+
+def run(full: bool = False) -> None:
+    del full
+    smoke()
+
+
+if __name__ == "__main__":
+    smoke()

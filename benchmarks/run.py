@@ -94,6 +94,13 @@ def main() -> None:
                          "shed and/or downgrade, admitted p99 within "
                          "deadline, exact accounting, full drain; per-stage "
                          "percentiles ride the perf JSON under 'streaming'")
+    ap.add_argument("--router-smoke", action="store_true",
+                    help="replicated-serving fail-fast: mixed-schedule "
+                         "stream at N=1 vs N=3 replicas with a mid-stream "
+                         "replica kill; fails on lost/duplicated requests, "
+                         "divergence from the single-replica oracle, broken "
+                         "accounting, or sim-throughput scaling < 1.6x; "
+                         "rides the perf JSON under 'router'")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (e.g. roofline,kernels)")
     args, _ = ap.parse_known_args()
@@ -129,6 +136,11 @@ def main() -> None:
     if args.spec_smoke:
         from benchmarks import bench_spec
         bench_spec.smoke(args.json or "BENCH_rnn_kernels.json")
+        sys.exit(0)
+
+    if args.router_smoke:
+        from benchmarks import bench_router
+        bench_router.smoke(args.json or "BENCH_rnn_kernels.json")
         sys.exit(0)
 
     if args.json is not None:

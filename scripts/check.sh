@@ -34,7 +34,13 @@
 #      decode on the verify schedule, drafted == accepted + rejected exact;
 #      measured-vs-assumed accept rate rides the perf record under
 #      "speculative" (also after --json)
-#  10. tier-1: pytest -x -q   — the full suite, first failure stops
+#  10. benchmarks/run.py --router-smoke — replicated-serving fail-fast:
+#      mixed-schedule stream at N=1 vs N=3 replicas with a mid-stream
+#      replica kill; fails on lost/duplicated requests, divergence from
+#      the single-replica oracle, broken router accounting, or
+#      sim-throughput scaling < 1.6x; scaling + per-leg stats ride the
+#      perf record under "router" (also after --json)
+#  11. tier-1: pytest -x -q   — the full suite, first failure stops
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -65,6 +71,9 @@ python benchmarks/run.py --stream-smoke
 
 echo "== speculative smoke =="
 python benchmarks/run.py --spec-smoke
+
+echo "== router smoke =="
+python benchmarks/run.py --router-smoke
 
 echo "== tier-1 tests =="
 python -m pytest -x -q

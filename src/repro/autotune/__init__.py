@@ -20,6 +20,7 @@ from repro.autotune.explorer import (  # noqa: F401
     select,
     select_decode,
     select_speculative,
+    suggest_replicas,
     violation,
 )
 from repro.autotune.space import (  # noqa: F401

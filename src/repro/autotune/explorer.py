@@ -21,6 +21,8 @@ the achievable curve.
 
 from __future__ import annotations
 
+import dataclasses
+import math
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -51,8 +53,11 @@ def violation(point: DesignPoint, target: DesignTarget) -> float:
     if target.max_latency_us is not None:
         v += max(0.0, point.latency_us(c) / target.max_latency_us - 1.0)
     if target.min_throughput_eps is not None:
+        # the throughput floor is read against the target's data-parallel
+        # replica count: K replicas of one design sustain K x its events/s
         v += max(0.0,
-                 target.min_throughput_eps / point.throughput_eps(c) - 1.0)
+                 target.min_throughput_eps
+                 / (point.throughput_eps(c) * target.replicas) - 1.0)
     if target.max_dsp is not None:
         v += max(0.0, point.dsp / target.max_dsp - 1.0)
     if target.max_bram_18k is not None:
@@ -66,15 +71,48 @@ def is_feasible(point: DesignPoint, target: DesignTarget) -> bool:
     return violation(point, target) == 0.0
 
 
+def suggest_replicas(points: Sequence[DesignPoint], target: DesignTarget
+                     ) -> Optional[Tuple[int, DesignPoint]]:
+    """Smallest data-parallel replica count that would clear the target's
+    throughput floor, and the point to replicate.
+
+    Only an aggregate-throughput shortfall is fixable by replication:
+    among points feasible on every NON-throughput constraint, take the
+    highest-throughput one and size the pool as
+    ``ceil(min_throughput_eps / point_eps)``.  None when no throughput
+    floor is set, when no point clears the other constraints (replication
+    cannot fix a latency or resource bust), or when the suggestion would
+    not exceed the replicas the target already has."""
+    if target.min_throughput_eps is None or not points:
+        return None
+    relaxed = dataclasses.replace(target, min_throughput_eps=None)
+    ok = [p for p in points if is_feasible(p, relaxed)]
+    if not ok:
+        return None
+    c = target.clock_mhz
+    best = max(ok, key=lambda p: (p.throughput_eps(c), -p.dsp, p.key))
+    k = max(1, math.ceil(target.min_throughput_eps / best.throughput_eps(c)
+                         - 1e-9))
+    if k <= target.replicas:
+        return None
+    return k, best
+
+
 class InfeasibleTargetError(ValueError):
-    """No enumerated schedule meets the target; carries the nearest point."""
+    """No enumerated schedule meets the target; carries the nearest point
+    and, when the shortfall is pure throughput, the smallest replica count
+    that would clear it (``suggested_replicas`` / ``suggested_point``)."""
 
     def __init__(self, target: DesignTarget, nearest: DesignPoint,
-                 n_points: int):
+                 n_points: int,
+                 replica_hint: Optional[Tuple[int, DesignPoint]] = None):
         self.target = target
         self.nearest = nearest
+        self.suggested_replicas = (replica_hint[0] if replica_hint
+                                   else None)
+        self.suggested_point = replica_hint[1] if replica_hint else None
         c = target.clock_mhz
-        super().__init__(
+        msg = (
             f"no schedule among {n_points} legal points meets target "
             f"{target.describe()}; nearest-to-feasible point is "
             f"{nearest.key} (latency {nearest.latency_us(c):.2f}us, "
@@ -82,6 +120,15 @@ class InfeasibleTargetError(ValueError):
             f"throughput {nearest.throughput_eps(c):.0f}ev/s, "
             f"violation {violation(nearest, target):.1%}) — relax the "
             f"budget at least that far or widen the space spec")
+        if replica_hint is not None:
+            k, pt = replica_hint
+            msg += (
+                f"; or scale out: {k} data-parallel replicas of {pt.key} "
+                f"({pt.throughput_eps(c):.0f}ev/s each, "
+                f"{k * pt.throughput_eps(c):.0f}ev/s aggregate) clear the "
+                f"throughput floor — set replicas={k} on the target and "
+                f"serve through a ReplicaPool/Router of that size")
+        super().__init__(msg)
 
 
 # ---------------------------------------------------------------------------
@@ -244,7 +291,9 @@ def _check_selectable(ex: Exploration, target: DesignTarget) -> None:
     if not ex.feasible:
         nearest = min(ex.points, key=lambda p: (violation(p, target),
                                                 p.latency_cycles, p.key))
-        raise InfeasibleTargetError(target, nearest, len(ex.points))
+        raise InfeasibleTargetError(target, nearest, len(ex.points),
+                                    replica_hint=suggest_replicas(ex.points,
+                                                                  target))
 
 
 def select_decode(cfg: ModelConfig, target: DesignTarget,

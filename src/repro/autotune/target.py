@@ -36,6 +36,12 @@ class DesignTarget:
                         ap_fixed config (None = float datapath)
     part                when set, the table-calibrated design must fit this
                         FPGA part (``core.hls.FPGA_PARTS`` key)
+    replicas            data-parallel replica count the throughput floor is
+                        read against: K replicas of one design sustain K x
+                        its priced events/s (``serving.replica`` /
+                        ``serving.router`` is the layer that provides them),
+                        so ``min_throughput_eps`` resolves to the design
+                        whose throughput x replicas clears the floor
     clock_mhz           clock the latency/throughput constraints are read at
     objective           what to minimize among feasible points:
                         "latency"    latency_cycles, then DSP, then BRAM
@@ -49,6 +55,7 @@ class DesignTarget:
     max_bram_18k: Optional[int] = None
     fp: Optional[FixedPointConfig] = None
     part: Optional[str] = None
+    replicas: int = 1
     clock_mhz: float = 200.0
     objective: str = "latency"
 
@@ -58,6 +65,9 @@ class DesignTarget:
                 f"objective {self.objective!r} not in {OBJECTIVES}")
         if self.clock_mhz <= 0:
             raise ValueError(f"clock_mhz must be > 0: {self.clock_mhz}")
+        if not isinstance(self.replicas, int) or self.replicas < 1:
+            raise ValueError(f"replicas must be an int >= 1: "
+                             f"{self.replicas!r}")
         for name in ("max_latency_us", "min_throughput_eps", "max_dsp",
                      "max_bram_18k"):
             v = getattr(self, name)
@@ -71,7 +81,10 @@ class DesignTarget:
             parts.append(f"latency <= {self.max_latency_us:g}us"
                          f"@{self.clock_mhz:g}MHz")
         if self.min_throughput_eps is not None:
-            parts.append(f"throughput >= {self.min_throughput_eps:g}ev/s")
+            rep = f" over {self.replicas} replicas" if self.replicas > 1 \
+                else ""
+            parts.append(f"throughput >= {self.min_throughput_eps:g}ev/s"
+                         f"{rep}")
         if self.max_dsp is not None:
             parts.append(f"dsp <= {self.max_dsp}")
         if self.max_bram_18k is not None:

@@ -11,17 +11,35 @@ from repro.serving.compile_cache import (  # noqa: F401
     KeyCompileStats,
 )
 from repro.serving.engine import (  # noqa: F401
+    EngineClosedError,
     RNNServingEngine,
     format_serve_report,
 )
 from repro.serving.faults import (  # noqa: F401
     FaultInjector,
     InjectedFault,
+    ReplicaCrashed,
+    ReplicaFaultSet,
     VirtualClock,
     break_engine_key,
     corrupt_cache_entries,
+    crash_replica,
+    flapping,
+    slow_replica,
 )
 from repro.serving.lm_engine import LMServingEngine  # noqa: F401
+from repro.serving.replica import (  # noqa: F401
+    EngineReplica,
+    ReplicaPool,
+)
+from repro.serving.router import (  # noqa: F401
+    HashRing,
+    ReplicaTimeout,
+    RoutedRequest,
+    Router,
+    RouterPolicy,
+    format_router_report,
+)
 from repro.serving.speculative import (  # noqa: F401
     CacheTable,
     RowAdvance,

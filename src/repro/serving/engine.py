@@ -47,6 +47,18 @@ from repro.serving.compile_cache import CachedExecutor, CompileCache
 RAGGED_POLICIES = ("bucket", "mask")
 
 
+class EngineClosedError(RuntimeError):
+    """Submit/predict on a closed engine: the replica was retired (drained
+    and closed) and must never accept new work — the router re-places its
+    keys instead.  A clear error beats a silently stranded request."""
+
+    def __init__(self, what: str = "engine"):
+        super().__init__(
+            f"{what} is closed: it was drained and retired, so new requests "
+            f"must be routed to a live replica (close() flushed every "
+            f"queued request to a terminal state first)")
+
+
 @dataclass
 class RNNServingEngine:
     cfg: ModelConfig
@@ -79,6 +91,7 @@ class RNNServingEngine:
     _one_cache: Dict[str, Callable] = field(default_factory=dict, repr=False)
     _one_traces: Dict[str, int] = field(default_factory=dict, repr=False)
     _one_stats: Dict[str, KeyStats] = field(default_factory=dict, repr=False)
+    _closed: bool = field(default=False, repr=False)
 
     def __post_init__(self):
         if self.ragged not in RAGGED_POLICIES:
@@ -238,6 +251,7 @@ class RNNServingEngine:
                 target: Optional[DesignTarget] = None) -> np.ndarray:
         """[b, T, in] -> [b, n_outputs] under the request's schedule (or the
         schedule auto-picked for its ``target``)."""
+        self._check_open()
         if target is not None and schedule is None:
             pt = self.schedule_for_target(target)
             schedule, fp = pt.schedule, fp if fp is not None else pt.fp
@@ -251,6 +265,7 @@ class RNNServingEngine:
         groups by seq_len (bit-identical to per-length predict on every
         backend); ``mask`` pads to the max length and freezes each row's
         state past its true length (one batch, XLA-cell datapath)."""
+        self._check_open()
         key = self._ensure_key(*self.resolve(schedule, fp))
         pad, lengths, _ = _pad_stack(list(xs))
         if self.ragged == "mask":
@@ -350,6 +365,7 @@ class RNNServingEngine:
         recorded per key (compile calls excluded) and reported by
         ``serve_report`` as the ``fast_path`` column.
         """
+        self._check_open()
         if target is not None and schedule is None:
             pt = self.schedule_for_target(target)
             schedule, fp = pt.schedule, fp if fp is not None else pt.fp
@@ -369,6 +385,37 @@ class RNNServingEngine:
     def one_trace_count(self, key: str) -> int:
         return self._one_traces.get(key, 0)
 
+    # -- lifecycle -----------------------------------------------------------
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise EngineClosedError("RNNServingEngine")
+
+    def drain(self, now: Optional[float] = None) -> List[Request]:
+        """Flush EVERY per-key queue to completion (force, below-threshold
+        leftovers included) and return the flushed requests — every queued
+        request reaches a terminal state (answered, or failed with the
+        error attached); none is stranded.  The engine stays open: drain is
+        the quiesce step, :meth:`close` the retire step."""
+        return self.flush(now=now, force=True)
+
+    def close(self, now: Optional[float] = None) -> List[Request]:
+        """Drain, then refuse all new work: ``submit`` / ``predict`` /
+        ``predict_one`` / ``serve`` raise :class:`EngineClosedError` from
+        now on.  Idempotent — a second close drains nothing and returns
+        ``[]``.  This is the replica-retirement hook the router relies on:
+        after ``close()`` returns, no request is in flight on this engine
+        and none can sneak in."""
+        if self._closed:
+            return []
+        flushed = self.drain(now=now)
+        self._closed = True
+        return flushed
+
     # -- schedule-keyed serving ---------------------------------------------
 
     def submit(self, x: np.ndarray,
@@ -383,6 +430,7 @@ class RNNServingEngine:
         same-target requests lands on one auto-picked queue — per-queue
         mode selection without any caller-side schedule plumbing.
         """
+        self._check_open()
         if target is not None and schedule is None:
             pt = self.schedule_for_target(target)
             schedule, fp = pt.schedule, fp if fp is not None else pt.fp

@@ -18,7 +18,16 @@ provides the controlled faults the chaos test suite drives through
     cache artifacts on disk: the quarantine path's trigger;
   * :class:`VirtualClock` — a drivable clock for deterministic replay,
     with :meth:`VirtualClock.step_back` as the misbehaving-clock fault
-    (the pipeline's monotonic clamp must absorb it).
+    (the pipeline's monotonic clamp must absorb it);
+  * **replica-grade faults** for the replicated-serving router
+    (:mod:`repro.serving.router`): :func:`crash_replica` (every call on
+    that replica raises — the dead-board fault), :func:`slow_replica`
+    (injected per-call stall, the straggler fault the timeout/hedge
+    machinery must beat) and :func:`flapping` (alternating healthy /
+    unhealthy calls — the worst case for health scoring, which must not
+    thrash the ring on every blip).  All three arm a
+    :class:`ReplicaFaultSet` with the same ``after``/``times`` counters
+    and ``fired`` audit log as the stage faults.
 
 Faults are one-shot by default (``times=1``) and consumed in arm order, so
 a chaos scenario reads as a script: arm, run, assert the degradation.
@@ -105,6 +114,138 @@ class FaultInjector:
     def armed(self) -> int:
         """Arms that have not fully fired yet."""
         return sum(1 for a in self._arms if a.remaining > 0)
+
+
+# ---------------------------------------------------------------------------
+# Replica-level faults (the router's chaos surface)
+# ---------------------------------------------------------------------------
+
+
+class ReplicaCrashed(RuntimeError):
+    """The exception a crashed (or flapping-down) replica raises on every
+    call — predict AND heartbeat, so health probes see the crash too."""
+
+
+@dataclass
+class _ReplicaArm:
+    kind: str                   # "crash" | "stall" | "flap"
+    seconds: float = 0.0        # stall only
+    after: int = 0              # skip this many calls before arming
+    remaining: Optional[int] = None   # fired-call budget; None = forever
+    period: int = 1             # flap only: calls per healthy/unhealthy phase
+    calls: int = 0              # flap phase counter (post-``after`` calls)
+
+    @property
+    def live(self) -> bool:
+        return self.remaining is None or self.remaining > 0
+
+
+@dataclass
+class ReplicaFaultSet:
+    """Armable per-replica faults, consumed on every replica call.
+
+    The router talks to a replica only through calls (predict, heartbeat);
+    a replica fault is therefore a per-call transformation: raise
+    (:class:`ReplicaCrashed`) or stall (seconds added to the call's
+    simulated service time).  Arms carry the same ``after``/``times``
+    counters as :class:`FaultInjector` and every firing lands in the
+    ``fired`` audit log as ``"<kind>:<replica_id>"``.
+    """
+
+    replica_id: str = "?"
+    _arms: List[_ReplicaArm] = field(default_factory=list)
+    fired: List[str] = field(default_factory=list)
+
+    def on_call(self) -> float:
+        """Consume one call: returns the injected stall seconds and/or
+        raises :class:`ReplicaCrashed`.  Stalls accumulate across arms;
+        the first crash-grade arm to fire raises (after charging any
+        stall already accumulated is pointless — the caller sees the
+        exception, not the duration)."""
+        stall = 0.0
+        for arm in self._arms:
+            if not arm.live:
+                continue
+            if arm.after > 0:
+                arm.after -= 1
+                continue
+            if arm.kind == "stall":
+                if arm.remaining is not None:
+                    arm.remaining -= 1
+                stall += arm.seconds
+                self.fired.append(f"stall:{self.replica_id}")
+            elif arm.kind == "crash":
+                if arm.remaining is not None:
+                    arm.remaining -= 1
+                self.fired.append(f"crash:{self.replica_id}")
+                raise ReplicaCrashed(
+                    f"replica {self.replica_id!r} crashed (injected)")
+            elif arm.kind == "flap":
+                phase = arm.calls
+                arm.calls += 1
+                # phases of ``period`` calls: healthy first, then down, ...
+                if (phase // arm.period) % 2 == 1:
+                    if arm.remaining is not None:
+                        arm.remaining -= 1
+                    self.fired.append(f"flap:{self.replica_id}")
+                    raise ReplicaCrashed(
+                        f"replica {self.replica_id!r} is flapping "
+                        f"(down phase, injected)")
+        return stall
+
+    def armed(self) -> int:
+        return sum(1 for a in self._arms if a.live)
+
+    def clear(self) -> None:
+        """Heal the replica: drop every arm (the repair-crew hook the
+        re-admission tests use)."""
+        self._arms.clear()
+
+
+def _replica_faults(replica) -> ReplicaFaultSet:
+    fs = getattr(replica, "faults", None)
+    if not isinstance(fs, ReplicaFaultSet):
+        raise TypeError(
+            f"{replica!r} has no ReplicaFaultSet — replica faults arm an "
+            f"EngineReplica (repro.serving.replica), not a bare engine")
+    return fs
+
+
+def crash_replica(replica, *, after: int = 0,
+                  times: Optional[int] = None) -> _ReplicaArm:
+    """Arm a crash: every call (predict and heartbeat) raises
+    :class:`ReplicaCrashed`.  ``times=None`` crashes forever (the
+    dead-board fault); a finite ``times`` models a transient outage that
+    the router's probe loop should re-admit."""
+    arm = _ReplicaArm("crash", after=after, remaining=times)
+    _replica_faults(replica)._arms.append(arm)
+    return arm
+
+
+def slow_replica(replica, seconds: float, *, after: int = 0,
+                 times: Optional[int] = None) -> _ReplicaArm:
+    """Arm a straggler: every call is charged ``seconds`` of simulated
+    stall.  A stall beyond the router's per-request timeout turns the
+    attempt into a timeout (retried elsewhere); a stall beyond the hedge
+    threshold lets the hedged duplicate win."""
+    if seconds < 0:
+        raise ValueError(f"stall seconds must be >= 0: {seconds}")
+    arm = _ReplicaArm("stall", seconds=seconds, after=after, remaining=times)
+    _replica_faults(replica)._arms.append(arm)
+    return arm
+
+
+def flapping(replica, *, period: int = 1, after: int = 0,
+             times: Optional[int] = None) -> _ReplicaArm:
+    """Arm alternating healthy/unhealthy phases of ``period`` calls each
+    (healthy phase first).  ``times`` bounds the number of FAILED calls,
+    so ``times=k`` means exactly k crashes interleaved with successes —
+    the pattern that punishes naive last-call health scoring."""
+    if period < 1:
+        raise ValueError(f"flap period must be >= 1: {period}")
+    arm = _ReplicaArm("flap", period=period, after=after, remaining=times)
+    _replica_faults(replica)._arms.append(arm)
+    return arm
 
 
 # ---------------------------------------------------------------------------

@@ -57,6 +57,7 @@ from repro.models.decode import (cache_specs, decode_schedulable, decode_step,
                                  pack_decode_params)
 from repro.serving.batcher import KeyStats, _now
 from repro.serving.compile_cache import CachedExecutor, CompileCache
+from repro.serving.engine import EngineClosedError
 from repro.serving.speculative import (SpecConfig, SpeculativeDecoder,
                                        accept_chunk)
 
@@ -169,6 +170,7 @@ class LMServingEngine:
         self.compile_cache = CompileCache(cache_dir)
         self._decoders: Dict[str, _KeyedDecoder] = {}
         self._next_req = 0
+        self._closed = False
         # eagerly build the default decoder: same allocation behavior as the
         # pre-keyed engine for schedule-less traffic
         self._decoder_for(self.schedule)
@@ -243,6 +245,8 @@ class LMServingEngine:
         """Claim a slot on the request's schedule-key decoder; None when that
         key's pool is full (keys never borrow each other's slots — they
         could not share a decode batch anyway)."""
+        if self._closed:
+            raise EngineClosedError("LMServingEngine")
         dec = self._decoder_for(schedule, spec)
         s = dec.free_slot()
         if s is None:
@@ -450,3 +454,27 @@ class LMServingEngine:
             if not any(d.any_active for d in self._decoders.values()):
                 break
         return out
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def drain(self, max_ticks: int = 512,
+              now: Optional[float] = None) -> Dict[int, List[int]]:
+        """Decode every active slot on every keyed decoder to completion
+        and return the finished sequences — no slot left active, no
+        request stranded mid-decode.  The engine stays open."""
+        return self.run_to_completion(max_ticks=max_ticks, now=now)
+
+    def close(self, max_ticks: int = 512,
+              now: Optional[float] = None) -> Dict[int, List[int]]:
+        """Drain, then refuse new requests: ``add_request`` raises
+        :class:`EngineClosedError` from now on.  Idempotent — the
+        replica-retirement hook, mirroring the RNN engine."""
+        if self._closed:
+            return {}
+        finished = self.drain(max_ticks=max_ticks, now=now)
+        self._closed = True
+        return finished

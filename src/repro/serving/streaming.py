@@ -190,8 +190,10 @@ class StreamingPipeline:
     deterministic replay and fall back to the pipeline clock.
     """
 
-    def __init__(self, engine, ladder: Optional[Sequence[DesignPoint]] = None,
+    def __init__(self, engine=None,
+                 ladder: Optional[Sequence[DesignPoint]] = None,
                  *,
+                 router=None,
                  deadline_us: float,
                  clock_mhz: float = 200.0,
                  utilization: float = 1.0,
@@ -222,6 +224,20 @@ class StreamingPipeline:
         if max_queue < 1:
             raise ValueError(f"max_queue must be >= 1: {max_queue}")
 
+        # replicated serving: a Router replaces the single engine for the
+        # infer stage; admission and the occupancy model scale with the
+        # pool's HEALTHY replica count (re-rated live as replicas retire /
+        # re-admit), while schedule resolution and prewarm go through the
+        # pool's reference engine
+        self.router = router
+        if router is not None:
+            if engine is not None:
+                raise ValueError(
+                    "pass either engine= or router=, not both: the router's "
+                    "pool supplies the engines")
+            engine = router.reference_engine
+        elif engine is None:
+            raise ValueError("StreamingPipeline needs an engine or a router")
         self.engine = engine
         if ladder is None:
             sched, fp = engine.resolve()
@@ -258,7 +274,9 @@ class StreamingPipeline:
         self._clock = clock if clock is not None else time.perf_counter
 
         self.rung = 0
-        self._bucket = TokenBucket(self._rung_rate(0), burst=burst)
+        self._capacity_seen = self.capacity()
+        self._bucket = TokenBucket(self._rung_rate(0) * self._capacity_seen,
+                                   burst=burst)
         self._queue: List[StreamRequest] = []
         self._server_free_s = float("-inf")
         self._last_now = float("-inf")
@@ -270,6 +288,7 @@ class StreamingPipeline:
         self.counts: Dict[str, KeyCounts] = {}
         self.downgrades = 0
         self.recoveries = 0
+        self.rerates = 0              # admission re-rates on capacity change
         self.clock_steps = 0          # backwards clock steps absorbed
         self._stage_sim: Dict[str, KeyStats] = {s: KeyStats() for s in STAGES}
         self._stage_wall: Dict[str, KeyStats] = {s: KeyStats()
@@ -278,12 +297,16 @@ class StreamingPipeline:
         self._stage_over: Dict[str, int] = {s: 0 for s in STAGES}
 
         # every rung's executable exists before traffic: a downgrade under
-        # overload must never pay a compile
-        for pt in self.ladder:
-            engine._ensure_key(pt.schedule, pt.fp)
-        if prewarm:
-            engine.prewarm(schedules=[pt.schedule for pt in self.ladder],
-                           fps=[pt.fp for pt in self.ladder])
+        # overload must never pay a compile (with a router, on EVERY
+        # replica — failover must be zero-warmup too)
+        engines = ([rep.engine for rep in router.pool]
+                   if router is not None else [engine])
+        for eng in engines:
+            for pt in self.ladder:
+                eng._ensure_key(pt.schedule, pt.fp)
+            if prewarm:
+                eng.prewarm(schedules=[pt.schedule for pt in self.ladder],
+                            fps=[pt.fp for pt in self.ladder])
 
     # -- clocks & rates ------------------------------------------------------
 
@@ -308,6 +331,27 @@ class StreamingPipeline:
         return admission_rate_eps(self.ladder[rung].estimate, self.clock_mhz,
                                   utilization=self.utilization)
 
+    def capacity(self) -> int:
+        """Healthy replicas backing the infer stage (1 without a router;
+        floored at 1 — a fully dark pool still drains at single-replica
+        pace rather than dividing by zero, and sheds on failure instead)."""
+        if self.router is None:
+            return 1
+        return max(self.router.healthy_count(), 1)
+
+    def _rerate(self) -> None:
+        """Scale admission to the CURRENT healthy capacity: K healthy
+        replicas sustain K x the rung's priced throughput, and a retirement
+        mid-stream tightens admission instead of letting the queue grow
+        into deadline sheds.  Called from push/pump; counted when the
+        capacity actually changed."""
+        cap = self.capacity()
+        if cap == self._capacity_seen:
+            return
+        self._capacity_seen = cap
+        self.rerates += 1
+        self._bucket.set_rate(self._rung_rate(self.rung) * cap)
+
     @property
     def current_point(self) -> DesignPoint:
         return self.ladder[self.rung]
@@ -325,10 +369,14 @@ class StreamingPipeline:
 
     def _occupancy_s(self, rung: int) -> float:
         """Seconds of server the event occupies (II for a pipelined
-        design — later events overlap the latency tail)."""
+        design — later events overlap the latency tail).  With a router,
+        K healthy replicas drain K events per interval, so the
+        single-server free pointer becomes a K-server fluid model."""
         if self.service_model == "analytical":
-            return self.ladder[rung].estimate.ii_s(self.clock_mhz)
-        return self._ewma_s or 0.0
+            occ = self.ladder[rung].estimate.ii_s(self.clock_mhz)
+        else:
+            occ = self._ewma_s or 0.0
+        return occ / self.capacity()
 
     # -- accounting ----------------------------------------------------------
 
@@ -379,6 +427,7 @@ class StreamingPipeline:
         (``queued``, ``shed``, or ``failed``) — an admitted request is
         answered by a later :meth:`pump` / :meth:`drain`."""
         t = self._now(now)
+        self._rerate()
         r = StreamRequest(payload=payload, arrival_s=t,
                           deadline_s=t + self.deadline_s,
                           req_id=next(self._ids),
@@ -441,6 +490,7 @@ class StreamingPipeline:
         the requests completed this call (answered or failed) plus any
         late sheds."""
         t = self._now(now)
+        self._rerate()
         done: List[StreamRequest] = []
 
         # an infer-stage stall holds the server itself: it pushes the free
@@ -498,7 +548,25 @@ class StreamingPipeline:
         for q in dispatch:
             groups.setdefault(q.rung, []).append(q)
 
-        if self.exec_mode == "one":
+        if self.router is not None:
+            # replicated infer: each event runs the router's full ladder
+            # (timeout -> retry -> hedge -> failover); a routed request
+            # that still ends failed/shed surfaces as THIS request's
+            # failure, others unaffected
+            for rung, qs in groups.items():
+                pt = self.ladder[rung]
+                for q in qs:
+                    w0 = time.perf_counter()
+                    rr = self.router.submit(q.features, schedule=pt.schedule,
+                                            fp=pt.fp, now=q.stamps["queue"])
+                    if rr.status != "answered":
+                        err = rr.error if rr.error is not None else \
+                            RuntimeError(f"routed request shed: "
+                                         f"{rr.shed_reason}")
+                        self._fail(q, err, q.stamps["queue"])
+                        continue
+                    self._finish(q, rr.result, time.perf_counter() - w0)
+        elif self.exec_mode == "one":
             for rung, qs in groups.items():
                 pt = self.ladder[rung]
                 for q in qs:
@@ -578,7 +646,8 @@ class StreamingPipeline:
                 self.rung += 1
                 self.downgrades += 1
                 self._hi_streak = 0
-                self._bucket.set_rate(self._rung_rate(self.rung))
+                self._bucket.set_rate(self._rung_rate(self.rung)
+                                      * self.capacity())
         elif depth <= self.low_water:
             self._lo_streak += 1
             self._hi_streak = 0
@@ -586,7 +655,8 @@ class StreamingPipeline:
                 self.rung -= 1
                 self.recoveries += 1
                 self._lo_streak = 0
-                self._bucket.set_rate(self._rung_rate(self.rung))
+                self._bucket.set_rate(self._rung_rate(self.rung)
+                                      * self.capacity())
         else:
             self._hi_streak = 0
             self._lo_streak = 0
@@ -643,6 +713,8 @@ class StreamingPipeline:
             "rung": self.rung,
             "downgrades": self.downgrades,
             "recoveries": self.recoveries,
+            "rerates": self.rerates,
+            "capacity": self.capacity(),
             "clock_steps": self.clock_steps,
             "admission_rate_eps": self.admission_rate(),
             "in_flight": self.in_flight(),

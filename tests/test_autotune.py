@@ -11,6 +11,8 @@ installs): every point the explorer enumerates survives the
 by any legal point in the enumerated space.
 """
 
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -208,6 +210,67 @@ def test_infeasible_target_names_nearest_point():
     # nearest really is nearest: no legal point violates less
     for p in explore(CFG, target, SMALL_SPEC).points:
         assert violation(p, target) >= violation(err.nearest, target)
+
+
+def test_replicas_axis_scales_throughput_feasibility():
+    """K data-parallel replicas make a K x throughput floor feasible: the
+    constraint is read against aggregate events/s, everything else
+    (latency, resources) stays per-replica."""
+    best_eps = max(p.throughput_eps(200.0)
+                   for p in explore(CFG, DesignTarget(), SMALL_SPEC).points)
+    floor = best_eps * 2.5
+    single = DesignTarget(min_throughput_eps=floor, objective="throughput")
+    with pytest.raises(InfeasibleTargetError):
+        select(CFG, single, SMALL_SPEC)
+    tripled = dataclasses.replace(single, replicas=3)
+    pt = select(CFG, tripled, SMALL_SPEC)
+    assert pt.throughput_eps(200.0) * 3 >= floor
+    assert is_feasible(pt, tripled) and not is_feasible(pt, single)
+    assert "over 3 replicas" in tripled.describe()
+
+
+def test_infeasible_throughput_suggests_smallest_replica_count():
+    best_eps = max(p.throughput_eps(200.0)
+                   for p in explore(CFG, DesignTarget(), SMALL_SPEC).points)
+    target = DesignTarget(min_throughput_eps=best_eps * 2.5,
+                          objective="throughput")
+    with pytest.raises(InfeasibleTargetError) as ei:
+        select(CFG, target, SMALL_SPEC)
+    err = ei.value
+    assert err.suggested_replicas == 3                 # ceil(2.5)
+    assert err.suggested_point is not None
+    assert f"replicas={err.suggested_replicas}" in str(err)
+    assert err.suggested_point.key in str(err)
+    # the suggestion is REAL: a target with that many replicas selects
+    fixed = dataclasses.replace(target, replicas=err.suggested_replicas)
+    assert select(CFG, fixed, SMALL_SPEC) is not None
+    # and it is the SMALLEST such count
+    with pytest.raises(InfeasibleTargetError):
+        select(CFG, dataclasses.replace(
+            target, replicas=err.suggested_replicas - 1), SMALL_SPEC)
+
+
+def test_no_replica_suggestion_for_latency_or_resource_busts():
+    """Replication cannot fix a per-replica latency or resource bust —
+    the error must NOT suggest scaling out."""
+    with pytest.raises(InfeasibleTargetError) as ei:
+        select(CFG, DesignTarget(max_latency_us=1e-4), SMALL_SPEC)
+    assert ei.value.suggested_replicas is None
+    assert "replicas=" not in str(ei.value)
+    # throughput floor AND an impossible latency budget: still no
+    # suggestion (no point clears the non-throughput constraints)
+    with pytest.raises(InfeasibleTargetError) as ei:
+        select(CFG, DesignTarget(max_latency_us=1e-4,
+                                 min_throughput_eps=1e12), SMALL_SPEC)
+    assert ei.value.suggested_replicas is None
+
+
+def test_replicas_axis_validation():
+    with pytest.raises(ValueError, match="replicas"):
+        DesignTarget(replicas=0)
+    with pytest.raises(ValueError, match="replicas"):
+        DesignTarget(replicas=1.5)
+    assert DesignTarget(replicas=2).replicas == 2
 
 
 def test_select_measured_refinement_returns_topk_member():

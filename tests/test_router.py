@@ -1,0 +1,465 @@
+"""Chaos suite for the replicated serving layer (replica pool + router).
+
+Every scenario runs the REAL engines (bit-identity against a single-replica
+oracle is part of the contract) while timeouts/hedges/health live in the
+simulated clock domain — injected crashes/stalls/flaps are deterministic,
+so each test is an exactly reproducible chaos replay:
+
+  * crash mid-traffic -> retry on a different replica -> mark-unhealthy ->
+    keys re-place via the hash ring -> probe streak re-admits;
+  * straggler -> per-request timeout -> answer discarded, retried;
+  * hedging -> first answer wins, loser cancelled, duplicate counted;
+  * every request in EXACTLY one terminal state and
+    ``submitted == answered + failed + shed + in_flight`` exactly.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.kernels.schedule import KernelSchedule, schedule_key
+from repro.models import build_model
+from repro.registry import get_config
+from repro.serving import (EngineClosedError, EngineReplica, LMServingEngine,
+                           ReplicaPool, RNNServingEngine, Router,
+                           RouterPolicy, VirtualClock, format_router_report)
+from repro.serving.faults import (ReplicaCrashed, crash_replica, flapping,
+                                  slow_replica)
+from repro.serving.router import HashRing, ReplicaTimeout
+
+CFG = get_config("top-tagging-gru")
+
+
+@pytest.fixture(scope="module")
+def harness():
+    """Shared params + engines; each test wraps them in FRESH replicas
+    (fresh fault sets, fresh health state) so compiled traces are reused
+    but no chaos leaks between tests."""
+    params = build_model(CFG).init(jax.random.PRNGKey(0))
+    engines = [RNNServingEngine(CFG, params) for _ in range(4)]
+    oracle = RNNServingEngine(CFG, params)
+    r = CFG.rnn
+    xs = np.random.RandomState(0).randn(
+        24, r.seq_len, r.input_size).astype(np.float32)
+    return params, engines, oracle, xs
+
+
+def make_router(harness, n=3, **policy_kw):
+    params, engines, _, _ = harness
+    pool = ReplicaPool.build(CFG, params, n,
+                             make_engine=lambda i: engines[i])
+    return pool, Router(pool, policy=RouterPolicy(**policy_kw))
+
+
+def primary_of(router, schedule=None, fp=None):
+    sched, fpr = router.reference_engine.resolve(schedule, fp)
+    return router.place(schedule_key(sched, fpr))
+
+
+# ---------------------------------------------------------------------------
+# hash ring
+# ---------------------------------------------------------------------------
+
+
+def test_hash_ring_is_stable_and_orders_every_node():
+    a = HashRing(["r0", "r1", "r2"], vnodes=16)
+    b = HashRing(["r0", "r1", "r2"], vnodes=16)
+    for key in ("k0", "k1", "static-R1-bb128-xla"):
+        assert a.ordered(key) == b.ordered(key)        # process-stable
+        assert sorted(a.ordered(key)) == ["r0", "r1", "r2"]
+
+
+def test_hash_ring_removal_moves_only_the_dead_nodes_keys():
+    ring = HashRing([f"r{i}" for i in range(4)], vnodes=32)
+    keys = [f"sched-{i}" for i in range(64)]
+    before = {k: ring.ordered(k)[0] for k in keys}
+    # "remove" r1 the way the router does: skip it while walking
+    after = {k: next(r for r in ring.ordered(k) if r != "r1") for k in keys}
+    for k in keys:
+        if before[k] != "r1":
+            assert after[k] == before[k]               # untouched
+        else:
+            assert after[k] != "r1"                    # re-placed
+
+
+def test_hash_ring_validation():
+    with pytest.raises(ValueError, match="at least one"):
+        HashRing([])
+    with pytest.raises(ValueError, match="vnodes"):
+        HashRing(["r0"], vnodes=0)
+
+
+# ---------------------------------------------------------------------------
+# healthy path: bit identity + locality
+# ---------------------------------------------------------------------------
+
+
+def test_router_output_bit_identical_to_single_replica(harness):
+    _, _, oracle, xs = harness
+    pool, router = make_router(harness, n=3)
+    s2 = KernelSchedule(reuse_factor=2, mode="static", backend="xla")
+    for i, x in enumerate(xs[:6]):
+        rr = router.submit(x, now=i * 1e-4)
+        assert rr.status == "answered"
+        np.testing.assert_array_equal(rr.result, oracle.predict_one(x))
+        rr2 = router.submit(x, schedule=s2, now=i * 1e-4 + 5e-5)
+        assert rr2.status == "answered"
+        np.testing.assert_array_equal(rr2.result,
+                                      oracle.predict_one(x, schedule=s2))
+    router.verify_router_accounting()
+
+
+def test_same_key_lands_on_same_replica(harness):
+    _, _, _, xs = harness
+    pool, router = make_router(harness, n=3)
+    done = [router.submit(x, now=i * 1e-4) for i, x in enumerate(xs[:8])]
+    assert len({r.winner for r in done}) == 1          # placement locality
+
+
+# ---------------------------------------------------------------------------
+# the ladder: crash -> retry -> retire -> re-place -> probe -> re-admit
+# ---------------------------------------------------------------------------
+
+
+def test_crash_failover_answers_everything_and_re_places(harness):
+    _, _, oracle, xs = harness
+    pool, router = make_router(harness, n=3, consecutive_failures=2)
+    first = router.submit(xs[0], now=0.0)
+    assert first.status == "answered"
+    dead = pool.get(first.winner)
+    crash_replica(dead)                                # dead board, forever
+    done = [router.submit(x, now=0.01 + i * 1e-4)
+            for i, x in enumerate(xs[:10])]
+    assert all(r.status == "answered" for r in done)
+    for r, x in zip(done, xs[:10]):
+        np.testing.assert_array_equal(r.result, oracle.predict_one(x))
+    assert all(r.winner != dead.replica_id for r in done[2:])
+    c = router.counts[first.key]
+    assert c.retries >= 1 and c.re_placements >= 1
+    assert f"retire:{dead.replica_id}" in router.events
+    assert not router._health[dead.replica_id].healthy
+    router.verify_router_accounting()
+
+
+def test_retry_prefers_a_different_replica(harness):
+    _, _, _, xs = harness
+    pool, router = make_router(harness, n=3, timeout_s=0.01)
+    rr0 = router.submit(xs[0], now=0.0)
+    crash_replica(pool.get(rr0.winner), times=1)       # one transient crash
+    rr = router.submit(xs[1], now=1e-3)
+    assert rr.status == "answered"
+    assert [a.kind for a in rr.attempts] == ["primary", "retry"]
+    assert rr.attempts[0].replica_id != rr.attempts[1].replica_id
+    assert rr.attempts[0].outcome == "error"
+    assert isinstance(rr.attempts[0].error, ReplicaCrashed)
+
+
+def test_straggler_times_out_answer_discarded_then_retried(harness):
+    _, _, oracle, xs = harness
+    pool, router = make_router(harness, n=3, timeout_s=0.01)
+    rr0 = router.submit(xs[0], now=0.0)
+    slow_replica(pool.get(rr0.winner), 0.05, times=1)  # stall > timeout
+    rr = router.submit(xs[1], now=1e-3)
+    assert rr.status == "answered"
+    np.testing.assert_array_equal(rr.result, oracle.predict_one(xs[1]))
+    t0 = rr.attempts[0]
+    assert t0.outcome == "timeout" and t0.result is None
+    assert isinstance(t0.error, ReplicaTimeout)
+    assert rr.attempts[1].replica_id != t0.replica_id
+    assert router.counts[rr.key].timeouts == 1
+    # exactly ONE surfaced answer even though the straggler finished too
+    assert sum(1 for a in rr.attempts if a.outcome == "ok") == 1
+    router.verify_router_accounting()
+
+
+def test_all_replicas_down_fails_then_sheds(harness):
+    _, _, _, xs = harness
+    pool, router = make_router(harness, n=2, consecutive_failures=1,
+                               max_retries=1, probe_interval_s=1e9)
+    for rep in pool:
+        crash_replica(rep)
+    early = router.submit(xs[0], now=0.0)              # attempts ran, failed
+    assert early.status == "failed"
+    assert isinstance(early.error, ReplicaCrashed)
+    late = router.submit(xs[1], now=1e-3)              # nothing left to try
+    assert late.status == "shed"
+    assert late.shed_reason == "no_healthy_replica"
+    assert late.attempts == []
+    assert router.healthy_count() == 0
+    router.verify_router_accounting()
+
+
+def test_probe_streak_re_admits_and_keys_flow_back(harness):
+    _, _, _, xs = harness
+    pool, router = make_router(harness, n=3, consecutive_failures=1,
+                               probe_successes=2)
+    rr0 = router.submit(xs[0], now=0.0)
+    dead = pool.get(rr0.winner)
+    crash_replica(dead, times=3)
+    router.submit(xs[1], now=1e-3)                     # crash -> retire
+    assert not router._health[dead.replica_id].healthy
+    assert router.probe(now=0.1) == {dead.replica_id: False}  # still down
+    dead.faults.clear()                                # board replaced
+    router.probe(now=0.2)
+    assert not router._health[dead.replica_id].healthy  # 1 OK < streak of 2
+    router.probe(now=0.3)
+    assert router._health[dead.replica_id].healthy      # re-admitted
+    assert f"readmit:{dead.replica_id}" in router.events
+    rr = router.submit(xs[2], now=0.4)
+    assert rr.winner == dead.replica_id                 # keys flowed back
+    assert router._health[dead.replica_id].readmitted == 1
+    router.verify_router_accounting()
+
+
+def test_flapping_replica_is_survived_and_audited(harness):
+    _, _, oracle, xs = harness
+    pool, router = make_router(harness, n=3, consecutive_failures=2,
+                               probe_interval_s=1e9)
+    rr0 = router.submit(xs[0], now=0.0)
+    flapper = pool.get(rr0.winner)
+    flapping(flapper, period=2)                        # 2 up, 2 down, ...
+    done = [router.submit(x, now=1e-3 + i * 1e-4)
+            for i, x in enumerate(xs[:16])]
+    assert all(r.status == "answered" for r in done)
+    for r, x in zip(done, xs[:16]):
+        np.testing.assert_array_equal(r.result, oracle.predict_one(x))
+    assert any(f.startswith("flap:") for f in flapper.faults.fired)
+    router.verify_router_accounting()
+
+
+# ---------------------------------------------------------------------------
+# hedging
+# ---------------------------------------------------------------------------
+
+
+def test_hedge_fires_on_slow_primary_and_first_answer_wins(harness):
+    _, _, oracle, xs = harness
+    pool, router = make_router(harness, n=3, timeout_s=0.1,
+                               hedge_after_s=1e-3)
+    rr0 = router.submit(xs[0], now=0.0)                # locate the primary
+    slow_replica(pool.get(rr0.winner), 5e-3)           # slow, not timed out
+    rr = router.submit(xs[1], now=1e-2)
+    assert rr.status == "answered" and rr.hedged
+    kinds = [a.kind for a in rr.attempts]
+    assert kinds == ["primary", "hedge"]
+    assert rr.winner == rr.attempts[1].replica_id      # hedge won
+    assert rr.attempts[0].outcome == "cancelled"       # loser cancelled
+    assert rr.attempts[0].result is None               # duplicate discarded
+    np.testing.assert_array_equal(rr.result, oracle.predict_one(xs[1]))
+    c = router.counts[rr.key]
+    assert c.hedges == 1 and c.hedge_wins == 1 and c.duplicates == 1
+    assert c.hedges == c.hedge_wins + c.hedge_cancelled
+    router.verify_router_accounting()
+
+
+def test_hedge_loser_is_cancelled_when_primary_wins(harness):
+    _, _, _, xs = harness
+    # hedge_after_s=0 fires a hedge on EVERY request; with equal service
+    # the hedge starts later, so the primary always wins
+    pool, router = make_router(harness, n=2, timeout_s=0.1,
+                               hedge_after_s=0.0)
+    rr = router.submit(xs[0], now=0.0)
+    assert rr.status == "answered" and rr.hedged
+    assert rr.winner == rr.attempts[0].replica_id
+    assert rr.attempts[1].outcome == "cancelled"
+    c = router.counts[rr.key]
+    assert c.hedges == 1 and c.hedge_wins == 0 and c.hedge_cancelled == 1
+    assert c.duplicates == 1
+    assert sum(1 for a in rr.attempts if a.outcome == "ok") == 1
+    router.verify_router_accounting()
+
+
+def test_no_hedge_on_single_healthy_replica(harness):
+    _, _, _, xs = harness
+    pool, router = make_router(harness, n=1, hedge_after_s=0.0)
+    rr = router.submit(xs[0], now=0.0)
+    assert rr.status == "answered" and not rr.hedged
+    assert router.counts[rr.key].hedges == 0
+    router.verify_router_accounting()
+
+
+# ---------------------------------------------------------------------------
+# accounting: the exact-sum invariant and its tamper alarms
+# ---------------------------------------------------------------------------
+
+
+def test_deferred_submits_count_in_flight_until_flush(harness):
+    _, _, _, xs = harness
+    pool, router = make_router(harness, n=3)
+    rs = [router.submit(x, now=i * 1e-4, defer=True)
+          for i, x in enumerate(xs[:5])]
+    assert all(r.status == "pending" for r in rs)
+    acc = router.verify_router_accounting()            # exact WITH in_flight
+    (key,) = acc.keys()
+    assert acc[key]["in_flight"] == 5 and acc[key]["answered"] == 0
+    done = router.flush(now=1.0)
+    assert [r.req_id for r in done] == [r.req_id for r in rs]   # FIFO
+    assert all(r.status == "answered" for r in rs)
+    acc = router.verify_router_accounting()
+    assert acc[key]["in_flight"] == 0 and acc[key]["answered"] == 5
+
+
+def test_accounting_tamper_raises(harness):
+    _, _, _, xs = harness
+    pool, router = make_router(harness, n=2)
+    rr = router.submit(xs[0], now=0.0)
+    router.verify_router_accounting()
+    router.counts[rr.key].answered += 1                # lie
+    with pytest.raises(AssertionError, match="accounting|disagreement"):
+        router.verify_router_accounting()
+    router.counts[rr.key].answered -= 1
+    rr.attempts[0].outcome = "cancelled"               # lost answer
+    with pytest.raises(AssertionError, match="surfaced"):
+        router.verify_router_accounting()
+
+
+def test_router_report_aggregates_replicas_and_keys(harness):
+    _, _, _, xs = harness
+    pool, router = make_router(harness, n=3, consecutive_failures=1)
+    rr0 = router.submit(xs[0], now=0.0)
+    crash_replica(pool.get(rr0.winner), times=2)
+    for i, x in enumerate(xs[:6]):
+        router.submit(x, now=1e-3 + i * 1e-4)
+    rep = router.router_report()
+    assert set(rep["replicas"]) == {"r0", "r1", "r2"}
+    assert rep["pool"]["n"] == 3 and rep["pool"]["healthy"] == 2
+    row = rep["keys"][rr0.key]
+    assert row["submitted"] == 7 and row["placement"] is not None
+    assert any(e.startswith("retire:") for e in rep["pool"]["events"])
+    for rid, rrow in rep["replicas"].items():
+        assert {"calls", "errors", "healthy", "error_rate",
+                "engine_served"} <= set(rrow)
+    text = format_router_report(router)
+    assert "healthy" in text and rr0.key in text
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: drain/close on engines, replicas, router
+# ---------------------------------------------------------------------------
+
+
+def test_router_close_is_terminal_and_idempotent(harness):
+    params, _, _, xs = harness
+    # fresh engines: close() retires them for good, so the shared module
+    # engines must not be used here
+    pool = ReplicaPool.build(CFG, params, 2)
+    router = Router(pool)
+    router.submit(xs[0], now=0.0, defer=True)
+    done = router.close(now=1.0)
+    assert len(done) == 1 and done[0].status == "answered"
+    assert router.closed and all(rep.closed for rep in pool)
+    assert router.close() == []                        # idempotent
+    with pytest.raises(EngineClosedError, match="closed"):
+        router.submit(xs[1], now=2.0)
+    router.verify_router_accounting()                  # still exact
+
+
+def test_engine_drain_close_refuses_new_work(harness):
+    params, _, _, xs = harness
+    eng = RNNServingEngine(CFG, params)
+    eng.submit(xs[0], now=0.0)
+    flushed = eng.close(now=1.0)
+    assert len(flushed) == 1 and flushed[0].error is None
+    assert eng.closed
+    assert eng.close() == []                           # idempotent
+    for call in (lambda: eng.submit(xs[0], now=2.0),
+                 lambda: eng.predict(xs[:1]),
+                 lambda: eng.predict_one(xs[0])):
+        with pytest.raises(EngineClosedError, match="drained and retired"):
+            call()
+
+
+def test_lm_engine_drain_close_refuses_new_work():
+    from repro.testing import tiny_config
+    lm_cfg = tiny_config(get_config("stablelm-3b"))
+    m = build_model(lm_cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = LMServingEngine(lm_cfg, params, max_batch=2)
+    eng.add_request([3, 5, 7], max_new=3)
+    finished = eng.close()
+    assert eng.closed and 0 in finished                # drained to terminal
+    assert eng.close() == {}                           # idempotent
+    with pytest.raises(EngineClosedError):
+        eng.add_request([2, 4])
+
+
+def test_replica_fault_arming_validates_surface(harness):
+    params, _, _, _ = harness
+    eng = RNNServingEngine(CFG, params)
+    with pytest.raises(TypeError, match="ReplicaFaultSet"):
+        crash_replica(eng)                             # bare engine: no
+    rep = EngineReplica("rX", eng)
+    with pytest.raises(ValueError, match=">= 0"):
+        slow_replica(rep, -1.0)
+    with pytest.raises(ValueError, match=">= 1"):
+        flapping(rep, period=0)
+    arm = crash_replica(rep, after=1, times=1)
+    assert rep.heartbeat() == 0.0                      # 'after' skips one
+    with pytest.raises(ReplicaCrashed):
+        rep.heartbeat()
+    assert rep.heartbeat() == 0.0                      # budget exhausted
+    assert not arm.live and rep.faults.armed() == 0
+    assert rep.faults.fired == ["crash:rX"]
+
+
+def test_replica_pool_validation(harness):
+    params, engines, _, _ = harness
+    with pytest.raises(ValueError, match="at least one"):
+        ReplicaPool([])
+    with pytest.raises(ValueError, match="duplicate"):
+        ReplicaPool([EngineReplica("a", engines[0]),
+                     EngineReplica("a", engines[1])])
+    with pytest.raises(ValueError, match=">= 1"):
+        ReplicaPool.build(CFG, params, 0)
+
+
+def test_router_policy_validation():
+    for bad in (dict(timeout_s=0.0), dict(max_retries=-1),
+                dict(jitter=1.0), dict(consecutive_failures=0),
+                dict(probe_successes=0), dict(max_error_rate=0.0)):
+        with pytest.raises(ValueError):
+            RouterPolicy(**bad)
+
+
+# ---------------------------------------------------------------------------
+# streaming integration: capacity-aware admission + mid-stream crash
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_over_router_rerates_on_crash(harness):
+    from repro.serving import StreamingPipeline
+    params, engines, _, xs = harness
+    pool = ReplicaPool.build(CFG, params, 3,
+                             make_engine=lambda i: engines[i])
+    router = Router(pool, policy=RouterPolicy(consecutive_failures=2))
+    clk = VirtualClock()
+    pipe = StreamingPipeline(router=router, deadline_us=500.0, clock=clk,
+                             prewarm=False)
+    assert pipe.capacity() == 3
+    base_rate = pipe._rung_rate(0)
+    assert pipe.admission_rate() == pytest.approx(3 * base_rate)
+    key = pipe.current_point.key
+    for i in range(16):
+        clk.advance(1e-4)
+        pipe.push(xs[i % len(xs)])
+        pipe.pump()
+        if i == 7:
+            crash_replica(pool.get(router._placements[key]))
+    pipe.drain()
+    assert pipe.capacity() == 2 and pipe.rerates == 1
+    assert pipe.admission_rate() == pytest.approx(2 * base_rate)
+    counts = pipe.verify_accounting()[key]
+    assert counts["answered"] == 16                    # nothing lost
+    router.verify_router_accounting()
+
+
+def test_streaming_rejects_engine_and_router_together(harness):
+    from repro.serving import StreamingPipeline
+    params, engines, _, _ = harness
+    pool = ReplicaPool.build(CFG, params, 2,
+                             make_engine=lambda i: engines[i])
+    router = Router(pool)
+    with pytest.raises(ValueError, match="not both"):
+        StreamingPipeline(engines[0], router=router, deadline_us=100.0)
+    with pytest.raises(ValueError, match="engine or a router"):
+        StreamingPipeline(deadline_us=100.0)

@@ -1,0 +1,177 @@
+"""Property tests for the router's exactly-once and accounting laws.
+
+Runs under real hypothesis when installed, else under the deterministic
+``tests/_hypothesis_stub.py`` fallback (conftest installs it).  Over
+randomized pool sizes, fault plans (crash/stall/flap with randomized
+arming counters), retry/hedge policies and defer/immediate interleavings:
+
+  * every submitted request ends in EXACTLY ONE terminal state
+    (``answered | failed | shed``) once the router is flushed;
+  * no duplicate answers: an answered request has exactly ONE surviving
+    ``ok`` attempt (hedged/straggler duplicates cancelled and counted);
+  * the per-key counters agree EXACTLY with a recount over the request
+    objects themselves — ``submitted == answered + failed + shed +
+    in_flight`` with ``in_flight == 0`` after flush, and hedges reconcile
+    (``hedges == hedge_wins + hedge_cancelled``);
+  * every answered result is bit-identical to the single-replica oracle.
+
+All service times are analytic over explicit ``now`` stamps, so every
+example is exactly reproducible.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import build_model
+from repro.registry import get_config
+from repro.serving import (EngineReplica, ReplicaPool, RNNServingEngine,
+                           Router, RouterPolicy)
+from repro.serving.faults import crash_replica, flapping, slow_replica
+
+CFG = get_config("top-tagging-gru")
+TERMINAL = ("answered", "failed", "shed")
+N_ENGINES = 3
+
+
+@pytest.fixture(scope="module")
+def harness():
+    """Shared compiled engines + oracle outputs; every example wraps the
+    engines in FRESH replicas (fresh fault sets / health / ring)."""
+    params = build_model(CFG).init(jax.random.PRNGKey(0))
+    engines = [RNNServingEngine(CFG, params) for _ in range(N_ENGINES)]
+    oracle = RNNServingEngine(CFG, params)
+    r = CFG.rnn
+    xs = np.random.RandomState(1).randn(
+        12, r.seq_len, r.input_size).astype(np.float32)
+    want = [oracle.predict_one(x) for x in xs]
+    return engines, xs, want
+
+
+def _build_router(engines, n_replicas, policy):
+    pool = ReplicaPool([EngineReplica(f"r{i}", engines[i])
+                        for i in range(n_replicas)])
+    return pool, Router(pool, policy=policy)
+
+
+def _arm(pool, rid, fault_kind, after, times):
+    rep = pool.get(rid)
+    if fault_kind == "crash":
+        crash_replica(rep, after=after, times=times)
+    elif fault_kind == "stall":
+        slow_replica(rep, 0.05, after=after, times=times)  # > any timeout
+    elif fault_kind == "flap":
+        flapping(rep, period=max(times, 1), after=after)
+    # "none": healthy replica
+
+
+def _check_laws(router, want, sent):
+    """The shared postcondition: exactly-once + exact accounting +
+    bit-identity, cross-checked against a manual recount."""
+    assert all(r.status in TERMINAL for r in router._requests)
+    for r in router._requests:
+        oks = [a for a in r.attempts if a.outcome == "ok"]
+        if r.status == "answered":
+            assert len(oks) == 1 and r.winner == oks[0].replica_id
+            np.testing.assert_array_equal(r.result, want[sent[r.req_id]])
+        else:
+            assert not oks and r.result is None
+    acc = router.verify_router_accounting()            # raises on any lie
+    recount = {}
+    for r in router._requests:
+        d = recount.setdefault(r.key, dict.fromkeys(TERMINAL, 0))
+        d[r.status] += 1
+    for key, row in acc.items():
+        assert row["in_flight"] == 0
+        assert row["submitted"] == sum(recount[key].values())
+        for s in TERMINAL:
+            assert row[s] == recount[key][s]
+        assert row["hedges"] == row["hedge_wins"] + row["hedge_cancelled"]
+        assert row["duplicates"] <= row["hedges"] + row["timeouts"]
+
+
+@settings(max_examples=20)
+@given(n_replicas=st.integers(min_value=1, max_value=3),
+       n_requests=st.integers(min_value=1, max_value=10),
+       fault_kind=st.sampled_from(["none", "crash", "stall", "flap"]),
+       fault_rid=st.integers(min_value=0, max_value=2),
+       after=st.integers(min_value=0, max_value=3),
+       times=st.integers(min_value=1, max_value=4),
+       max_retries=st.integers(min_value=0, max_value=3),
+       consecutive=st.integers(min_value=1, max_value=3),
+       hedge=st.booleans(),
+       defer_mask=st.integers(min_value=0, max_value=1023))
+def test_exactly_one_terminal_state_under_chaos(
+        harness, n_replicas, n_requests, fault_kind, fault_rid, after,
+        times, max_retries, consecutive, hedge, defer_mask):
+    engines, xs, want = harness
+    policy = RouterPolicy(timeout_s=0.01, max_retries=max_retries,
+                          consecutive_failures=consecutive,
+                          hedge_after_s=(0.0 if hedge else None),
+                          probe_interval_s=1e9)
+    pool, router = _build_router(engines, n_replicas, policy)
+    _arm(pool, f"r{fault_rid % n_replicas}", fault_kind, after, times)
+    sent = {}
+    for i in range(n_requests):
+        rr = router.submit(xs[i % len(xs)], now=i * 1e-3,
+                           defer=bool(defer_mask >> i & 1))
+        sent[rr.req_id] = i % len(xs)
+    router.flush(now=n_requests * 1e-3)
+    _check_laws(router, want, sent)
+
+
+@settings(max_examples=12)
+@given(n_replicas=st.integers(min_value=2, max_value=3),
+       n_requests=st.integers(min_value=2, max_value=8),
+       stall_rid=st.integers(min_value=0, max_value=2),
+       stall_times=st.integers(min_value=1, max_value=6),
+       hedge_every=st.booleans())
+def test_hedging_never_duplicates_answers(harness, n_replicas, n_requests,
+                                          stall_rid, stall_times,
+                                          hedge_every):
+    engines, xs, want = harness
+    # hedge threshold below the injected stall: a stalled primary always
+    # fires a hedge; hedge_every additionally hedges the FAST path too
+    policy = RouterPolicy(timeout_s=0.1,
+                          hedge_after_s=(0.0 if hedge_every else 1e-3),
+                          probe_interval_s=1e9)
+    pool, router = _build_router(engines, n_replicas, policy)
+    slow_replica(pool.get(f"r{stall_rid % n_replicas}"), 5e-3,
+                 times=stall_times)
+    sent = {}
+    for i in range(n_requests):
+        rr = router.submit(xs[i % len(xs)], now=i * 1e-3)
+        sent[rr.req_id] = i % len(xs)
+        assert rr.status == "answered"                 # stall < timeout
+    _check_laws(router, want, sent)
+    total = sum(c.duplicates for c in router.counts.values())
+    hedges = sum(c.hedges for c in router.counts.values())
+    assert total <= hedges                             # dedup bounded
+
+
+@settings(max_examples=12)
+@given(n_requests=st.integers(min_value=1, max_value=8),
+       kill_at=st.integers(min_value=0, max_value=7),
+       n_replicas=st.integers(min_value=2, max_value=3))
+def test_crash_between_defer_and_flush_loses_nothing(harness, n_requests,
+                                                     kill_at, n_replicas):
+    """The chaos window the tentpole exists for: requests sitting
+    in_flight when their placed replica dies must still reach exactly one
+    terminal state at flush, answered by a surviving replica."""
+    engines, xs, want = harness
+    policy = RouterPolicy(consecutive_failures=1, probe_interval_s=1e9)
+    pool, router = _build_router(engines, n_replicas, policy)
+    sent = {}
+    for i in range(n_requests):
+        rr = router.submit(xs[i % len(xs)], now=i * 1e-3, defer=True)
+        sent[rr.req_id] = i % len(xs)
+    assert router.in_flight() == n_requests
+    router.verify_router_accounting()                  # exact while pending
+    victim = router.place(router._requests[0].key)
+    if kill_at % 2 == 0:                               # kill placed replica
+        crash_replica(victim)
+    router.flush(now=1.0)
+    assert router.in_flight() == 0
+    assert all(r.status == "answered" for r in router._requests)
+    _check_laws(router, want, sent)
